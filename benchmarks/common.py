@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: timing + the name,us_per_call,derived contract."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List, Tuple
+
+Row = Tuple[str, float, Any]  # (name, us_per_call, derived)
+
+
+@dataclass
+class BenchResult:
+    rows: List[Row]
+    notes: List[str]
+
+
+def timed(fn: Callable[[], Any]) -> Tuple[float, Any]:
+    t0 = time.time()
+    out = fn()
+    return (time.time() - t0) * 1e6, out
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

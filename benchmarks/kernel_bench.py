@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this CPU container interpret-mode timings are NOT indicative of TPU
+performance — the derived column therefore reports allclose deltas and the
+arithmetic-intensity of each kernel call (the quantity that matters for the
+VMEM-tiling argument), not speedups.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gla import gla_pallas
+from repro.kernels.ref import attention_ref, gla_ref
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+from .common import Row
+
+
+def run() -> List[Row]:
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+
+    B, S, H, KV, D = 1, 256, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    t0 = time.time()
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_kv=64, interpret=True)
+    us = (time.time() - t0) * 1e6
+    err = float(jnp.abs(out - attention_ref(q, k, v)).max())
+    flops = 4 * B * H * S * S * D / 2
+    bytes_ = (q.size + k.size + v.size + out.size) * 4
+    rows.append(("flash_attn_256_maxerr", us, f"{err:.2e}"))
+    rows.append(("flash_attn_arith_intensity", us,
+                 f"{flops / bytes_:.1f} flop/B"))
+
+    x = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    t0 = time.time()
+    rn = rmsnorm_pallas(x, s, interpret=True)
+    us = (time.time() - t0) * 1e6
+    from repro.kernels.ref import rmsnorm_ref
+
+    rows.append(("rmsnorm_maxerr", us,
+                 f"{float(jnp.abs(rn - rmsnorm_ref(x, s)).max()):.2e}"))
+
+    gq = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    gk = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    gv = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    gg = jnp.asarray(-np.abs(rng.normal(size=(1, 128, 2)) * 0.3), jnp.float32)
+    t0 = time.time()
+    y, st = gla_pallas(gq, gk, gv, gg, chunk=32, interpret=True)
+    us = (time.time() - t0) * 1e6
+    yr, sr = gla_ref(gq, gk, gv, gg)
+    rows.append(("gla_chunk_maxerr", us,
+                 f"{float(jnp.abs(y - yr).max()):.2e}"))
+    return rows

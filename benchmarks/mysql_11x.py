@@ -1,0 +1,37 @@
+"""§5.1 reproduction: "Improving System Performance: 11 Times Better".
+
+ACTS (LHS + RRS) tunes the MySQL surrogate's 10 knobs under the uniform-read
+workload within a 200-test resource limit.  The paper reports 9,815 ops/s at
+the default setting and 118,184 ops/s tuned (12.04x; ">11 times").  The
+surrogate is calibrated to those endpoints; the benchmark verifies that the
+*search* actually reaches >11x from the measured default within budget.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import MySQLSurrogate, Tuner
+
+from .common import Row
+
+BUDGET = 200
+
+
+def run() -> List[Row]:
+    sut = MySQLSurrogate("uniform_read")
+    t0 = time.time()
+    rep = Tuner(sut.space(), sut, budget=BUDGET, seed=1).run()
+    wall_us = (time.time() - t0) * 1e6
+    rows: List[Row] = [
+        ("mysql_default_ops", wall_us / rep.n_tests,
+         f"{rep.default_metric.value:.0f}"),
+        ("mysql_tuned_ops", wall_us / rep.n_tests,
+         f"{rep.best_metric.value:.0f}"),
+        ("mysql_improvement", wall_us / rep.n_tests,
+         f"{rep.improvement:.2f}x"),
+        ("mysql_tests_to_beat_default", wall_us / rep.n_tests,
+         next((t.test_index for t in rep.history
+               if -t.value > rep.default_metric.value * 1.05), -1)),
+    ]
+    return rows

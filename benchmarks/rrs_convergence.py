@@ -1,0 +1,69 @@
+"""§4.3: RRS vs baseline optimizers — convergence quality at equal budget.
+
+Benchmarks on the RRS paper's style of test functions (sphere = easy convex,
+Rastrigin = many local minima) and on the bumpy Tomcat surrogate, comparing
+RRS / random / smart-hill-climbing / LHS-only at the same resource limit.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import FloatParam, ParameterSpace, TomcatSurrogate, Tuner, \
+    get_optimizer
+from repro.core.tuner import CallableSUT, PerfMetric
+
+from .common import Row
+
+OPTS = ("rrs", "random", "shc", "lhs_only")
+SEEDS = (0, 1, 2, 3)
+BUDGET = 300
+
+
+def _bench_fn(name, fn, space) -> List[Row]:
+    rows = []
+    for opt in OPTS:
+        vals = []
+        t0 = time.time()
+        for seed in SEEDS:
+            res = get_optimizer(opt).optimize(
+                space, fn, BUDGET, np.random.default_rng(seed))
+            vals.append(res.best_value)
+        us = (time.time() - t0) * 1e6 / (BUDGET * len(SEEDS))
+        rows.append((f"{name}_{opt}_best", us, f"{np.mean(vals):.3f}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    sphere_space = ParameterSpace(
+        [FloatParam(f"x{i}", -5, 5, default=4.0) for i in range(8)])
+    rows += _bench_fn("sphere8d", lambda c: sum(v * v for v in c.values()),
+                      sphere_space)
+    rast_space = ParameterSpace(
+        [FloatParam(f"x{i}", -5.12, 5.12, default=4.5) for i in range(6)])
+
+    def rastrigin(c):
+        xs = list(c.values())
+        return 10 * len(xs) + sum(
+            x * x - 10 * math.cos(2 * math.pi * x) for x in xs)
+
+    rows += _bench_fn("rastrigin6d", rastrigin, rast_space)
+
+    # bumpy real-ish surface: Tomcat (maximize => tuner handles the sign)
+    tc = TomcatSurrogate(fully_utilized=False)
+    t0 = time.time()
+    n = 0
+    for opt in OPTS:
+        vals = []
+        for seed in SEEDS[:2]:
+            rep = Tuner(tc.space(), tc, budget=150, optimizer=opt,
+                        seed=seed).run()
+            vals.append(rep.best_metric.value)
+            n += rep.n_tests
+        rows.append((f"tomcat_{opt}_best_txns", 0.0, f"{np.mean(vals):.1f}"))
+    us = (time.time() - t0) * 1e6 / max(n, 1)
+    return [(name, us if u == 0.0 else u, d) for name, u, d in rows]

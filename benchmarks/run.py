@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+  fig1_surfaces    §2.2 Fig.1  diverging performance surfaces
+  mysql_11x        §5.1        11x throughput over default
+  table1_tomcat    §5.2/Tab.1  saturated-server multi-metric gains
+  budget_curve     §5.3/§3     improvement vs resource limit
+  fair_bench       §5.4        tuned-vs-default ranking flip
+  bottleneck       §5.5        subsystem bottleneck identification
+  rrs_convergence  §4.3        RRS vs baseline optimizers
+  lhs_coverage     §4.3        LHS coverage scalability
+  tune_real        §4          measured ACTS on the live JAX runtime
+  kernel_bench     kernels     Pallas kernels vs jnp oracles
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One:     ``PYTHONPATH=src python -m benchmarks.run --only mysql_11x``
+"""
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_surfaces",
+    "mysql_11x",
+    "table1_tomcat",
+    "budget_curve",
+    "fair_bench",
+    "bottleneck",
+    "rrs_convergence",
+    "lhs_coverage",
+    "tune_real",
+    "kernel_bench",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", choices=MODULES)
+    args = ap.parse_args(argv)
+    mods = args.only or MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run()
+            for n, us, d in rows:
+                print(f"{n},{us:.1f},{d}")
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Fault tolerance demo: crash mid-training, resume from the atomic
+checkpoint, and verify the resumed run reaches the same state as an
+uninterrupted one (deterministic data pipeline + checkpointed optimizer).
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.optim import OptimizerConfig
+from repro.train import RunKnobs, SimulatedFailure, TrainLoopConfig, train
+
+CFG = ModelConfig(
+    name="elastic-demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", vocab_pad_multiple=64,
+)
+
+CKPT = "results/elastic_ckpt"
+
+
+def loop(**kw):
+    base = dict(steps=20, seq_len=32, global_batch=4, log_every=5,
+                opt=OptimizerConfig(learning_rate=3e-3, warmup_steps=2,
+                                    total_steps=40),
+                knobs=RunKnobs(rules_preset="dp", remat="none",
+                               microbatches=1, loss_chunk=0))
+    base.update(kw)
+    return TrainLoopConfig(**base)
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    print("=== reference: uninterrupted 20-step run ===")
+    ref = train(CFG, loop())
+
+    print("\n=== run 2: crash injected at step 12 (ckpt every 5) ===")
+    try:
+        train(CFG, loop(ckpt_dir=CKPT, ckpt_every=5, fail_at_step=12))
+    except SimulatedFailure as e:
+        print(f"!! node failure: {e}")
+
+    print("\n=== run 3: restart — auto-resumes from step 10 ===")
+    resumed = train(CFG, loop(ckpt_dir=CKPT, ckpt_every=5))
+
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(np.max(np.abs(np.asarray(a, np.float32) -
+                                         np.asarray(b, np.float32)))),
+        ref["params"], resumed["params"])
+    worst = max(jax.tree_util.tree_leaves(diffs))
+    print(f"\nmax |param diff| vs uninterrupted run: {worst:.2e}")
+    assert worst < 1e-4, "resumed training diverged!"
+    print("fault-tolerant resume verified ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""ACTS applied to THIS framework with real measured wall-clock: tune the
+train-step execution knobs (remat / microbatching / loss chunking / buffer
+donation) of a small LM on this host.  Every test re-jits and times actual
+training steps — the paper's full apply→restart→measure loop, nothing
+simulated.
+
+  PYTHONPATH=src python examples/tune_runtime.py [--budget 10]
+"""
+import argparse
+
+from repro.configs import get_config, reduced
+from repro.core.sut_jax import JaxMeasuredSUT
+from repro.core.tuner import Tuner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--arch", default="gemma-7b")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    sut = JaxMeasuredSUT(cfg, seq_len=128, global_batch=8, steps=4, warmup=2)
+    rep = Tuner(sut.space(), sut, budget=args.budget, seed=0,
+                verbose=True).run()
+    print(f"\nSUT: {sut.name}")
+    print(f"default knobs: {rep.default_metric.value:8.0f} tokens/s  "
+          f"{rep.default_config}")
+    print(f"tuned knobs:   {rep.best_metric.value:8.0f} tokens/s  "
+          f"({rep.improvement:.2f}x)  {rep.best_config}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: ACTS (Zhu et al., APSys'17) as a production multi-pod JAX framework.
+
+Subpackages: core (the ACTS tuner/LHS/RRS), models, configs, dist, kernels,
+optim, data, checkpoint, train, serve, launch, utils.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic saves, retention, elastic restore."""
+from .manager import CheckpointInfo, CheckpointManager
+
+__all__ = ["CheckpointInfo", "CheckpointManager"]

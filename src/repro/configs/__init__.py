@@ -1,0 +1,280 @@
+"""Architecture configs and input shapes.
+
+One module per assigned architecture defines its exact published
+configuration; this package holds the shared ``ModelConfig`` schema, the
+four per-arch input shapes, the registry (``--arch <id>``), and the
+``reduced()`` transform used by CPU smoke tests.
+
+Block kinds usable in ``superblock`` (the repeating layer pattern):
+
+  attn      global self-attention + dense MLP
+  swa       sliding-window self-attention + dense MLP
+  cross     cross-attention to frontend/encoder memory + dense MLP
+  moe       global self-attention + MoE FFN (top-k routed)
+  moe_swa   sliding-window self-attention + MoE FFN
+  dec       self-attention + cross-attention + MLP (enc-dec decoder layer)
+  mamba2    Mamba2 (SSD) mixer block
+  mlstm     xLSTM matrix-memory block
+  slstm     xLSTM scalar-memory (recurrent) block
+  shared    invocation of the weight-shared attention+MLP block (Zamba2)
+
+``n_layers`` must equal ``len(superblock) × n_superblocks``; the stack is
+executed as ``lax.scan`` over stacked superblock parameters.
+"""
+from __future__ import annotations
+
+import importlib
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "MoESpec",
+    "EncoderSpec",
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "ARCH_IDS",
+    "get_config",
+    "list_configs",
+    "reduced",
+    "shape_applicable",
+    "register",
+]
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    experts_per_token: int
+    d_ff: int
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class EncoderSpec:
+    n_layers: int
+    superblock: Tuple[str, ...] = ("attn",)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+    superblock: Tuple[str, ...] = ("attn",)
+    activation: str = "swiglu"  # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0  # sliding-window size for swa blocks
+    moe: Optional[MoESpec] = None
+    # SSM (mamba2) / xLSTM
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    gla_impl: str = "jnp"  # jnp | pallas (TPU kernel; interpret on CPU)
+    # enc-dec
+    encoder: Optional[EncoderSpec] = None
+    # modality frontend stub (precomputed embeddings supplied as inputs)
+    frontend: Optional[str] = None  # "vision" | "audio"
+    frontend_tokens: int = 0
+    frontend_dim: int = 0
+    # numerics
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+    # attention implementation: dense | blocked | local | auto
+    attn_impl: str = "auto"
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    # pad query-head count up to a multiple (0 = off): padded heads are
+    # zero-initialized so they contribute exactly nothing, in exchange for
+    # a shardable head count (e.g. qwen's 40 -> 48 on a 16-way model axis)
+    pad_heads_to_multiple: int = 0
+    # long_500k applicability override (None = derive from block kinds)
+    long_context: Optional[bool] = None
+    notes: str = ""
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_heads(self) -> int:
+        m = self.pad_heads_to_multiple
+        if not m:
+            return self.n_heads
+        h = ((self.n_heads + m - 1) // m) * m
+        # GQA grouping must stay integral
+        while h % self.n_kv_heads:
+            h += m
+        return h
+
+    @property
+    def n_superblocks(self) -> int:
+        if self.n_layers % len(self.superblock):
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"superblock of {len(self.superblock)}"
+            )
+        return self.n_layers // len(self.superblock)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when the arch can serve 500k-token contexts (linear/windowed
+        recurrence dominates; ``long_context`` overrides the heuristic)."""
+        if self.long_context is not None:
+            return self.long_context
+        quad = {"attn", "moe", "cross", "dec", "shared"}
+        kinds = set(self.superblock)
+        if self.encoder:
+            kinds |= set(self.encoder.superblock)
+        return not (kinds & quad)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for sanity checks."""
+        from repro.models.transformer import count_params  # lazy, avoids cycle
+
+        return count_params(self)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS: List[str] = [
+    "xlstm-350m",
+    "gemma-7b",
+    "qwen2.5-32b",
+    "starcoder2-15b",
+    "gemma3-12b",
+    "llama-3.2-vision-90b",
+    "seamless-m4t-medium",
+    "mixtral-8x22b",
+    "grok-1-314b",
+    "zamba2-1.2b",
+]
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def _load_all() -> None:
+    if len(_REGISTRY) >= len(ARCH_IDS):
+        return
+    mods = [
+        "xlstm_350m",
+        "gemma_7b",
+        "qwen2_5_32b",
+        "starcoder2_15b",
+        "gemma3_12b",
+        "llama32_vision_90b",
+        "seamless_m4t_medium",
+        "mixtral_8x22b",
+        "grok1_314b",
+        "zamba2_1_2b",
+    ]
+    for m in mods:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> List[str]:
+    _load_all()
+    return [a for a in ARCH_IDS if a in _REGISTRY]
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} has full-attention blocks (see DESIGN.md)"
+        )
+    return True, ""
+
+
+def reduced(cfg: ModelConfig, seed_width: int = 64) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests: same superblock pattern
+    and block kinds, 2 superblocks, small widths, tiny vocab."""
+    n_sb = min(2, cfg.n_superblocks)
+    d_model = seed_width
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    updates = dict(
+        name=cfg.name + "-smoke",
+        n_layers=len(cfg.superblock) * n_sb,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16,
+        d_ff=seed_width * 2 if cfg.d_ff else 0,
+        vocab_size=512,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_heads=min(cfg.ssm_heads, 4) if cfg.ssm_heads else 0,
+        ssm_chunk=16,
+        frontend_tokens=min(cfg.frontend_tokens, 8) if cfg.frontend_tokens else 0,
+        frontend_dim=32 if cfg.frontend_dim else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        vocab_pad_multiple=64,
+        attn_block_q=16,
+        attn_block_kv=32,
+    )
+    if cfg.moe:
+        n_exp = min(cfg.moe.n_experts, 4)
+        k = min(cfg.moe.experts_per_token, 2)
+        updates["moe"] = MoESpec(
+            n_experts=n_exp,
+            experts_per_token=k,
+            d_ff=seed_width * 2,
+            # drop-free capacity so prefill/decode consistency is exact
+            # (token dropping is batch-dependent by design; tested separately)
+            capacity_factor=float(n_exp) / k,
+        )
+    if cfg.encoder:
+        updates["encoder"] = EncoderSpec(
+            n_layers=len(cfg.encoder.superblock) * min(2, cfg.encoder.n_layers),
+            superblock=cfg.encoder.superblock,
+        )
+    return replace(cfg, **updates)

@@ -1,0 +1,28 @@
+"""Gemma3-12B [hf:google/gemma-3-1b-pt scaling; unverified].
+
+48 layers, d_model=3840, 16 heads / 8 KV heads, GeGLU d_ff=15360, vocab
+262144.  5:1 local:global attention pattern (superblock = 5×swa + 1×attn,
+window 1024), 128k context target.
+"""
+from repro.configs import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="gemma3-12b",
+        family="dense",
+        n_layers=48,
+        d_model=3840,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=15360,
+        vocab_size=262144,
+        superblock=("swa", "swa", "swa", "swa", "swa", "attn"),
+        window=1024,
+        activation="geglu",
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        notes="long_500k skipped: the 1-in-6 global layers are full "
+              "attention (unbounded KV), so the arch is not sub-quadratic.",
+    )
+)

@@ -1,0 +1,26 @@
+"""Grok-1 (314B) [hf:xai-org/grok-1; unverified].
+
+64 layers, d_model=6144, 48 heads / 8 KV heads, MoE: 8 experts top-2 with
+expert d_ff=32768, vocab 131072, full attention.
+"""
+from repro.configs import ModelConfig, MoESpec, register
+
+register(
+    ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=32768,
+        vocab_size=131072,
+        superblock=("moe",),
+        activation="geglu",  # gated MoE FFN (w_in, w_gate, w_out) => 314B total
+        rope_theta=10_000.0,
+        moe=MoESpec(n_experts=8, experts_per_token=2, d_ff=32768,
+                    capacity_factor=1.25),
+        tie_embeddings=False,
+        notes="long_500k skipped (full attention).",
+    )
+)

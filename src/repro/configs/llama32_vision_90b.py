@@ -1,0 +1,30 @@
+"""Llama-3.2-Vision-90B [hf:meta-llama/Llama-3.2-11B-Vision scaling; unverified].
+
+100 decoder layers, d_model=8192, 64 heads / 8 KV heads, SwiGLU d_ff=28672,
+vocab 128256.  Cross-attention image layers every 5th layer (20 total);
+the vision tower is a STUB — ``input_specs()`` supplies precomputed patch
+embeddings (1601 patches × 1280, ViT-H/14-scale), per the modality rule.
+"""
+from repro.configs import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        superblock=("attn", "attn", "attn", "attn", "cross"),
+        activation="swiglu",
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+        frontend="vision",
+        frontend_tokens=1601,
+        frontend_dim=1280,
+        notes="cross layers use tanh-gated residuals (zero-init). "
+              "long_500k skipped (full attention).",
+    )
+)

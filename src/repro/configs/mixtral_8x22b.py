@@ -1,0 +1,29 @@
+"""Mixtral-8x22B [arXiv:2401.04088; hf].
+
+56 layers, d_model=6144, 48 heads / 8 KV heads, MoE: 8 experts top-2 with
+expert d_ff=16384, vocab 32768, sliding-window attention (window 4096, per
+the assignment spec).  SWA bounds the KV cache => long_500k RUNS.
+"""
+from repro.configs import ModelConfig, MoESpec, register
+
+register(
+    ModelConfig(
+        name="mixtral-8x22b",
+        family="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=32768,
+        superblock=("moe_swa",),
+        window=4096,
+        activation="swiglu",
+        rope_theta=1_000_000.0,
+        moe=MoESpec(n_experts=8, experts_per_token=2, d_ff=16384,
+                    capacity_factor=1.25),
+        tie_embeddings=False,
+        notes="SWA is sub-quadratic (ring-buffer KV cache of 4096) so "
+              "long_500k runs.",
+    )
+)

@@ -1,0 +1,27 @@
+"""Qwen2.5-32B [hf:Qwen/Qwen2.5-0.5B family scaling; hf].
+
+64 layers, d_model=5120, 40 heads / 8 KV heads (GQA), SwiGLU d_ff=27648,
+vocab 152064, QKV bias (the Qwen signature), untied embeddings.
+"""
+from repro.configs import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=27648,
+        vocab_size=152064,
+        superblock=("attn",),
+        activation="swiglu",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        notes="40 heads don't divide the 16-way model axis: attention "
+              "falls back to replicated head sharding under default rules "
+              "(hillclimb target).  long_500k skipped (full attention).",
+    )
+)

@@ -1,0 +1,31 @@
+"""SeamlessM4T-medium [arXiv:2308.11596; hf].
+
+Encoder-decoder, d_model=1024, 16 heads (MHA), d_ff=4096, vocab 256206
+(padded to 256256 for sharding).  12 encoder + 12 decoder layers; the
+speech frontend is a STUB — ``input_specs()`` supplies precomputed frame
+embeddings (960 frames × 1024).  Decode shapes lower the *decoder* step
+with self-attention KV cache + cross-attention to the encoder memory.
+"""
+from repro.configs import EncoderSpec, ModelConfig, register
+
+register(
+    ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        superblock=("dec",),
+        activation="gelu",
+        encoder=EncoderSpec(n_layers=12, superblock=("attn",)),
+        frontend="audio",
+        frontend_tokens=960,
+        frontend_dim=1024,
+        tie_embeddings=True,
+        notes="long_500k skipped (full attention). decoder layers = "
+              "self-attn + cross-attn + MLP.",
+    )
+)

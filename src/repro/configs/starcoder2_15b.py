@@ -1,0 +1,24 @@
+"""StarCoder2-15B [arXiv:2402.19173; hf].
+
+40 layers, d_model=6144, 48 heads / 4 KV heads (GQA), d_ff=24576, vocab
+49152, RoPE, GELU MLP (starcoder2 uses non-gated GELU-style FFN).
+"""
+from repro.configs import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="starcoder2-15b",
+        family="dense",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        superblock=("attn",),
+        activation="gelu",
+        rope_theta=100_000.0,
+        tie_embeddings=False,
+        notes="long_500k skipped (full attention)",
+    )
+)

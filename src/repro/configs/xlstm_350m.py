@@ -1,0 +1,27 @@
+"""xLSTM-350M [arXiv:2405.04517; unverified].
+
+24 layers, d_model=1024, 4 heads, d_ff=0 (the xLSTM blocks carry their own
+2x up/down projections), vocab 50304 (GPT-NeoX tokenizer).  Alternating
+mLSTM/sLSTM superblock; linear-time recurrence => long_500k RUNS.
+"""
+from repro.configs import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="xlstm-350m",
+        family="ssm",
+        n_layers=24,
+        d_model=1024,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        superblock=("mlstm", "slstm"),
+        ssm_expand=2,
+        ssm_conv=4,
+        ssm_chunk=256,
+        tie_embeddings=True,
+        notes="sLSTM is sequential by construction (hidden-state feedback); "
+              "mLSTM runs on the chunked-GLA core.",
+    )
+)

@@ -1,0 +1,57 @@
+"""ACTS — Automatic Configuration Tuning with Scalability guarantees.
+
+The paper's primary contribution (Zhu et al., APSys'17) as a composable
+library: typed parameter spaces over a unit hypercube, scalable sampling
+(LHS), scalable search (RRS + baselines), and the flexible tuner ⇄ system
+manipulator ⇄ workload generator architecture.  The JAX distributed runtime
+in this repo is itself a first-class SUT (``repro.core.sut_jax``).
+"""
+from .base import BudgetExhausted, Trial, TuningResult
+from .bottleneck import BottleneckReport, identify_bottleneck
+from .optimizers import (
+    OPTIMIZERS,
+    CoordinateSearchOptimizer,
+    LHSOnlyOptimizer,
+    RandomSearchOptimizer,
+    SmartHillClimbingOptimizer,
+    get_optimizer,
+)
+from .params import (
+    BoolParam,
+    EnumParam,
+    FloatParam,
+    IntParam,
+    Parameter,
+    ParameterSpace,
+)
+from .rrs import RRSOptimizer
+from .sampling import (
+    centered_l2_discrepancy,
+    get_sampler,
+    lhs,
+    lhs_unit,
+    maximin_lhs,
+    min_pairwise_distance,
+    random_sampling,
+    random_unit,
+    stratification_counts,
+)
+from .surrogates import (
+    ComposedSUT,
+    FrontendSurrogate,
+    MySQLSurrogate,
+    SparkSurrogate,
+    Surrogate,
+    TomcatSurrogate,
+)
+from .tuner import (
+    CallableSUT,
+    PerfMetric,
+    SystemManipulator,
+    TunableSystem,
+    Tuner,
+    TuningReport,
+    WorkloadGenerator,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,50 @@
+"""Shared types for ACTS optimizers and the tuner."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .params import Config
+
+__all__ = ["Trial", "TuningResult", "Objective", "BudgetExhausted"]
+
+
+class BudgetExhausted(Exception):
+    """Raised by a budgeted objective when the resource limit is used up."""
+
+
+@dataclass
+class Trial:
+    config: Config
+    value: float  # minimized objective value
+    test_index: int  # which test (1-based) produced this sample
+    phase: str = ""  # e.g. "default", "explore", "exploit"
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class TuningResult:
+    best_config: Config
+    best_value: float
+    history: List[Trial]
+    n_tests: int
+
+    @property
+    def best_trial(self) -> Optional[Trial]:
+        best = None
+        for t in self.history:
+            if best is None or t.value < best.value:
+                best = t
+        return best
+
+    def best_so_far(self) -> List[float]:
+        """Monotone best-value trace, one entry per test (for convergence plots)."""
+        out: List[float] = []
+        cur = float("inf")
+        for t in sorted(self.history, key=lambda t: t.test_index):
+            cur = min(cur, t.value)
+            out.append(cur)
+        return out
+
+
+Objective = Callable[[Config], float]

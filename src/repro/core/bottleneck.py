@@ -1,0 +1,80 @@
+"""Bottleneck identification via tuning (paper §5.5).
+
+Procedure:
+  1. Tune every member system to its best performance in isolation.
+  2. Tune the composed deployment (joint knob space) to its best.
+  3. If the composed best stays near some member's *untuned* level while that
+     member tunes well in isolation, the ceiling lives elsewhere — the member
+     whose tuned-alone throughput is the lowest is the bottleneck; if the
+     composition underperforms every tuned member, the *interaction* is.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .surrogates import ComposedSUT, Surrogate
+from .tuner import Tuner, TuningReport
+
+__all__ = ["BottleneckReport", "identify_bottleneck"]
+
+
+@dataclass
+class BottleneckReport:
+    member_reports: Dict[str, TuningReport]
+    composed_report: TuningReport
+    bottleneck: str  # member name, or "<interaction>"
+    rationale: str
+
+    def summary(self) -> str:
+        lines = ["bottleneck identification (§5.5):"]
+        for name, rep in self.member_reports.items():
+            lines.append(
+                f"  {name:<10} alone: default={rep.default_metric.value:10.1f} "
+                f"tuned={rep.best_metric.value:10.1f} "
+                f"(+{(rep.improvement - 1) * 100:5.1f}%)"
+            )
+        rep = self.composed_report
+        lines.append(
+            f"  {'composed':<10}      : default={rep.default_metric.value:10.1f} "
+            f"tuned={rep.best_metric.value:10.1f} "
+            f"(+{(rep.improvement - 1) * 100:5.1f}%)"
+        )
+        lines.append(f"  => bottleneck: {self.bottleneck} ({self.rationale})")
+        return "\n".join(lines)
+
+
+def identify_bottleneck(
+    members: Dict[str, Surrogate],
+    budget_per_system: int = 60,
+    seed: int = 0,
+    interaction_margin: float = 0.10,
+) -> BottleneckReport:
+    member_reports: Dict[str, TuningReport] = {}
+    for name, sut in members.items():
+        tuner = Tuner(sut.space(), sut, budget=budget_per_system, seed=seed)
+        member_reports[name] = tuner.run()
+
+    composed = ComposedSUT(members)
+    tuner = Tuner(composed.space(), composed, budget=budget_per_system, seed=seed)
+    composed_report = tuner.run()
+
+    tuned_alone = {n: r.best_metric.value for n, r in member_reports.items()}
+    weakest = min(tuned_alone, key=tuned_alone.get)
+    composed_best = composed_report.best_metric.value
+
+    if composed_best < (1.0 - interaction_margin) * tuned_alone[weakest]:
+        bottleneck = "<interaction>"
+        rationale = (
+            f"composed best {composed_best:.0f} is >{interaction_margin:.0%} below "
+            f"every member's tuned-alone best (min {tuned_alone[weakest]:.0f}) — "
+            "member systems are interacting (§5.5, last case)"
+        )
+    else:
+        bottleneck = weakest
+        rationale = (
+            f"{weakest} has the lowest tuned-alone throughput "
+            f"({tuned_alone[weakest]:.0f}); the composed deployment tracks it "
+            f"({composed_best:.0f}) no matter how the others are tuned"
+        )
+    return BottleneckReport(member_reports, composed_report, bottleneck, rationale)

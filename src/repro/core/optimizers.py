@@ -1,0 +1,236 @@
+"""Search-based optimizers for ACTS, plus the registry.
+
+RRS (``repro.core.rrs``) is the algorithm the paper adopts.  The baselines
+here are the methods the paper positions against:
+
+* ``random``      — pure random sampling (the no-structure floor),
+* ``lhs_only``    — a single LHS design, take the best (sampling w/o search),
+* ``shc``         — Smart Hill-Climbing (Xi et al., WWW'04 [44]): LHS init,
+                    then weighted-Gaussian sampling around the incumbent with
+                    shrinking variance; restarts on stagnation,
+* ``coordinate``  — cyclic one-knob-at-a-time line search (the "tuning guide"
+                    strategy humans follow, §5.3).
+
+All optimizers minimize, operate on the unit hypercube, and respect a strict
+test budget — the resource limit of the ACTS problem definition (§3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Type
+
+import numpy as np
+
+from .base import BudgetExhausted, Objective, Trial, TuningResult
+from .params import Config, ParameterSpace
+from .rrs import RRSOptimizer
+from .sampling import lhs_unit
+
+__all__ = [
+    "RandomSearchOptimizer",
+    "LHSOnlyOptimizer",
+    "SmartHillClimbingOptimizer",
+    "CoordinateSearchOptimizer",
+    "get_optimizer",
+    "OPTIMIZERS",
+]
+
+
+class _BudgetedRun:
+    """Shared bookkeeping: budget enforcement + history + best tracking."""
+
+    def __init__(self, space: ParameterSpace, objective: Objective, budget: int):
+        self.space = space
+        self.objective = objective
+        self.budget = budget
+        self.history: List[Trial] = []
+        self.n_tests = 0
+        self.best_u: Optional[np.ndarray] = None
+        self.best_val = math.inf
+
+    def evaluate(self, u: np.ndarray, phase: str) -> float:
+        if self.n_tests >= self.budget:
+            raise BudgetExhausted
+        cfg = self.space.from_unit_vector(u)
+        val = float(self.objective(cfg))
+        self.n_tests += 1
+        self.history.append(Trial(cfg, val, self.n_tests, phase))
+        if val < self.best_val:
+            self.best_val, self.best_u = val, u.copy()
+        return val
+
+    def result(self) -> TuningResult:
+        if self.best_u is None:
+            return TuningResult(
+                self.space.default_config(), math.inf, self.history, self.n_tests
+            )
+        return TuningResult(
+            self.space.from_unit_vector(self.best_u),
+            self.best_val,
+            self.history,
+            self.n_tests,
+        )
+
+
+class RandomSearchOptimizer:
+    def optimize(
+        self,
+        space: ParameterSpace,
+        objective: Objective,
+        budget: int,
+        rng: np.random.Generator,
+        init_unit_points: Optional[np.ndarray] = None,
+    ) -> TuningResult:
+        run = _BudgetedRun(space, objective, budget)
+        try:
+            if init_unit_points is not None:
+                for u in np.atleast_2d(init_unit_points):
+                    run.evaluate(np.asarray(u, float), "explore")
+            while True:
+                run.evaluate(rng.random(space.dim), "explore")
+        except BudgetExhausted:
+            pass
+        return run.result()
+
+
+class LHSOnlyOptimizer:
+    """One Latin hypercube of size == budget; best sample wins."""
+
+    def optimize(
+        self,
+        space: ParameterSpace,
+        objective: Objective,
+        budget: int,
+        rng: np.random.Generator,
+        init_unit_points: Optional[np.ndarray] = None,
+    ) -> TuningResult:
+        run = _BudgetedRun(space, objective, budget)
+        try:
+            if init_unit_points is not None:
+                for u in np.atleast_2d(init_unit_points):
+                    run.evaluate(np.asarray(u, float), "explore")
+            remaining = budget - run.n_tests
+            for u in lhs_unit(remaining, space.dim, rng):
+                run.evaluate(u, "explore")
+        except BudgetExhausted:
+            pass
+        return run.result()
+
+
+class SmartHillClimbingOptimizer:
+    """Smart Hill-Climbing (Xi et al. 2004), simplified:
+
+    LHS initial design → Gaussian proposals around the incumbent with
+    per-round variance shrink; random restart after ``patience`` stale rounds.
+    """
+
+    def __init__(self, init_frac: float = 0.25, shrink: float = 0.7,
+                 patience: int = 5, sigma0: float = 0.25):
+        self.init_frac = init_frac
+        self.shrink = shrink
+        self.patience = patience
+        self.sigma0 = sigma0
+
+    def optimize(
+        self,
+        space: ParameterSpace,
+        objective: Objective,
+        budget: int,
+        rng: np.random.Generator,
+        init_unit_points: Optional[np.ndarray] = None,
+    ) -> TuningResult:
+        run = _BudgetedRun(space, objective, budget)
+        dim = space.dim
+        try:
+            if init_unit_points is not None:
+                for u in np.atleast_2d(init_unit_points):
+                    run.evaluate(np.asarray(u, float), "explore")
+            n_init = max(2, int(budget * self.init_frac) - run.n_tests)
+            for u in lhs_unit(n_init, dim, rng):
+                run.evaluate(u, "explore")
+            sigma, stale = self.sigma0, 0
+            incumbent = run.best_u if run.best_u is not None else rng.random(dim)
+            incumbent_val = run.best_val
+            while True:
+                cand = np.clip(incumbent + rng.normal(0, sigma, dim), 0, 1 - 1e-12)
+                val = run.evaluate(cand, "exploit")
+                if val < incumbent_val:
+                    incumbent, incumbent_val = cand, val
+                    stale = 0
+                else:
+                    stale += 1
+                    if stale % 2 == 0:
+                        sigma = max(sigma * self.shrink, 1e-3)
+                    if stale >= self.patience:
+                        incumbent = rng.random(dim)  # restart
+                        incumbent_val = run.evaluate(incumbent, "explore")
+                        sigma, stale = self.sigma0, 0
+        except BudgetExhausted:
+            pass
+        return run.result()
+
+
+class CoordinateSearchOptimizer:
+    """Cyclic coordinate line search — the manual-tuning-guide strategy."""
+
+    def __init__(self, points_per_axis: int = 5, shrink: float = 0.5):
+        self.points_per_axis = points_per_axis
+        self.shrink = shrink
+
+    def optimize(
+        self,
+        space: ParameterSpace,
+        objective: Objective,
+        budget: int,
+        rng: np.random.Generator,
+        init_unit_points: Optional[np.ndarray] = None,
+    ) -> TuningResult:
+        run = _BudgetedRun(space, objective, budget)
+        dim = space.dim
+        try:
+            if init_unit_points is not None:
+                for u in np.atleast_2d(init_unit_points):
+                    run.evaluate(np.asarray(u, float), "explore")
+            x = space.to_unit_vector(space.default_config())
+            fx = run.evaluate(x, "explore")
+            span = 1.0
+            while True:
+                improved_any = False
+                for j in range(dim):
+                    lo = max(0.0, x[j] - span / 2)
+                    hi = min(1.0, x[j] + span / 2)
+                    for t in np.linspace(lo, hi, self.points_per_axis):
+                        cand = x.copy()
+                        cand[j] = min(t, 1 - 1e-12)
+                        if abs(cand[j] - x[j]) < 1e-12:
+                            continue
+                        val = run.evaluate(cand, "exploit")
+                        if val < fx:
+                            x, fx = cand, val
+                            improved_any = True
+                if not improved_any:
+                    span *= self.shrink
+                    if span < 1e-3:
+                        x = rng.random(dim)
+                        fx = run.evaluate(x, "explore")
+                        span = 1.0
+        except BudgetExhausted:
+            pass
+        return run.result()
+
+
+OPTIMIZERS: Dict[str, type] = {
+    "rrs": RRSOptimizer,
+    "random": RandomSearchOptimizer,
+    "lhs_only": LHSOnlyOptimizer,
+    "shc": SmartHillClimbingOptimizer,
+    "coordinate": CoordinateSearchOptimizer,
+}
+
+
+def get_optimizer(name: str, **kwargs):
+    try:
+        cls = OPTIMIZERS[name]
+    except KeyError:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
+    return cls(**kwargs)

@@ -1,0 +1,162 @@
+"""Recursive Random Search (Ye & Kalyanaraman, SIGMETRICS 2003 [46]).
+
+The optimization algorithm adopted by the ACTS paper (§4.3) because it meets
+the three scalability conditions:
+
+  (1) it returns an answer at *any* sample budget (pure sampling, no gradient
+      or model fit),
+  (2) a larger budget strictly widens/deepens the search (more exploration
+      batches, finer exploitation), and
+  (3) the re-exploration stage prevents permanent capture by local optima.
+
+Structure (faithful to the original):
+
+  EXPLORE   Draw ``n = ln(1-p)/ln(1-r)`` samples; with confidence ``p`` the
+            best of them lies in the top ``r``-fraction of the space.  The
+            running ``r``-quantile of all exploration values is the promise
+            threshold ``y_r``.  Any sample beating ``y_r`` seeds exploitation.
+  EXPLOIT   Recursive local search in an axis-aligned box of measure ``rho``
+            (initially ``r``) centred on the promising point: ``l =
+            ln(1-q)/ln(1-v)`` samples per round; improvement ⇒ re-centre;
+            no improvement in a round ⇒ shrink the box by ``c``; stop when
+            the box measure falls below ``st`` and resume exploration.
+
+ACTS couples RRS with LHS (§4.3 "LHS + RRS"): the exploration batches here are
+drawn with LHS rather than i.i.d. uniform, inheriting LHS's stratified
+coverage; set ``explore_sampler="random"`` for the original formulation.
+
+Everything operates on the unit hypercube via ``ParameterSpace``; boolean and
+enum knobs quantize on the way out, so mixed spaces (§4.1) work unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import numpy as np
+
+from .base import BudgetExhausted, Objective, Trial, TuningResult
+from .params import Config, ParameterSpace
+from .sampling import get_sampler
+
+__all__ = ["RRSOptimizer"]
+
+
+class RRSOptimizer:
+    def __init__(
+        self,
+        p: float = 0.99,
+        r: float = 0.1,
+        q: float = 0.99,
+        v: float = 0.8,
+        c: float = 0.5,
+        st: float = 1e-3,
+        explore_sampler: str = "lhs",
+    ):
+        if not (0 < r < 1 and 0 < p < 1 and 0 < q < 1 and 0 < v < 1):
+            raise ValueError("p, r, q, v must be in (0, 1)")
+        if not (0 < c < 1):
+            raise ValueError("shrink factor c must be in (0, 1)")
+        self.p, self.r, self.q, self.v, self.c, self.st = p, r, q, v, c, st
+        self.explore_sampler = explore_sampler
+        # Sample counts per the confidence arguments in the original paper.
+        self.n_explore = max(1, math.ceil(math.log(1 - p) / math.log(1 - r)))
+        self.n_exploit = max(1, math.ceil(math.log(1 - q) / math.log(1 - v)))
+
+    # ------------------------------------------------------------------
+    def optimize(
+        self,
+        space: ParameterSpace,
+        objective: Objective,
+        budget: int,
+        rng: np.random.Generator,
+        init_unit_points: Optional[np.ndarray] = None,
+    ) -> TuningResult:
+        """Minimize ``objective`` over ``space`` within ``budget`` tests."""
+        dim = space.dim
+        sampler = get_sampler(self.explore_sampler)
+
+        history: List[Trial] = []
+        explore_values: List[float] = []
+        n_tests = 0
+        best_u: Optional[np.ndarray] = None
+        best_val = math.inf
+
+        def evaluate(u: np.ndarray, phase: str) -> float:
+            nonlocal n_tests, best_u, best_val
+            if n_tests >= budget:
+                raise BudgetExhausted
+            cfg = space.from_unit_vector(u)
+            val = float(objective(cfg))
+            n_tests += 1
+            history.append(Trial(cfg, val, n_tests, phase))
+            if val < best_val:
+                best_val, best_u = val, u.copy()
+            return val
+
+        def threshold() -> float:
+            """Running r-quantile of exploration values (promise threshold)."""
+            if not explore_values:
+                return math.inf
+            return float(np.quantile(np.array(explore_values), self.r))
+
+        try:
+            # Optional warm start (e.g. the tuner's initial LHS round).
+            if init_unit_points is not None:
+                for u in np.atleast_2d(init_unit_points):
+                    val = evaluate(np.asarray(u, dtype=float), "explore")
+                    explore_values.append(val)
+
+            while True:
+                # ---------------- exploration ----------------
+                batch = sampler(self.n_explore, dim, rng)
+                promising: Optional[np.ndarray] = None
+                promising_val = math.inf
+                for u in batch:
+                    val = evaluate(u, "explore")
+                    explore_values.append(val)
+                    if val < promising_val:
+                        promising, promising_val = u.copy(), val
+                # Only exploit points that beat the running r-quantile
+                # threshold (the "promising" test of the original paper).
+                if promising is None or promising_val > threshold():
+                    continue
+
+                # ---------------- exploitation ----------------
+                center, center_val = promising, promising_val
+                rho = self.r  # box measure as a fraction of the space
+                while rho >= self.st:
+                    improved = False
+                    for _ in range(self.n_exploit):
+                        cand = self._sample_box(center, rho, dim, rng)
+                        val = evaluate(cand, "exploit")
+                        if val < center_val:
+                            center, center_val = cand, val
+                            improved = True
+                            break  # re-align immediately on improvement
+                    if not improved:
+                        rho *= self.c  # shrink and keep drilling
+        except BudgetExhausted:
+            pass
+
+        if best_u is None:
+            # Budget was zero; fall back to the space default.
+            cfg = space.default_config()
+            return TuningResult(cfg, math.inf, history, n_tests)
+        return TuningResult(
+            space.from_unit_vector(best_u), best_val, history, n_tests
+        )
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _sample_box(
+        center: np.ndarray, rho: float, dim: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        """Uniform sample from a box of measure ``rho`` centred at ``center``,
+        clipped to the unit cube (the box slides inward at the boundary so its
+        measure is preserved)."""
+        side = rho ** (1.0 / dim)
+        lo = np.clip(center - side / 2, 0.0, 1.0 - side)
+        lo = np.maximum(lo, 0.0)
+        hi = np.minimum(lo + side, 1.0)
+        return lo + rng.random(dim) * (hi - lo)

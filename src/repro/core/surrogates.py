@@ -1,0 +1,439 @@
+"""Deterministic surrogate SUTs replicating the paper's empirical settings.
+
+The paper's evidence (§2.2 Fig. 1, §5.1-§5.5) comes from live MySQL, Tomcat
+and Spark deployments.  A CPU-only container cannot host those servers, so we
+rebuild each as a *surrogate performance model*: a deterministic analytic
+response surface over the real systems' knobs, shaped to match the published
+observations —
+
+* MySQL (Fig. 1a/1d):  ``query_cache_type`` dominates under a uniform-read
+  workload (the "two lines" projection) and stops dominating under
+  zipfian read-write; default ≈ 9,815 ops/s, tuned optimum ≈ 118,184 ops/s
+  (the 12×/"11 times better" result of §5.1).
+* Tomcat (Fig. 1b/1e):  an irregular bumpy surface whose optimum location
+  shifts when the co-deployed JVM's ``TargetSurvivorRatio`` changes; the
+  fully-utilized deployment of §5.2 caps gains at a few percent (Table 1).
+* Spark (Fig. 1c/1f):  smooth surface in standalone mode; a sharp ridge
+  appears at ``executor.cores == 4`` in cluster mode.
+* §5.5:  a front-end cache/load-balancer surrogate whose capacity ceiling
+  sits near the *untuned* DB throughput, so tuning the composed deployment
+  exposes the front end as the bottleneck.
+
+Surrogates carry a tiny deterministic "measurement jitter" (hash-seeded,
+±0.5%) so optimizers face realistic non-smoothness, while every test remains
+exactly reproducible — a requirement for the test suite.
+
+These surrogates are the paper's *benchmark workloads*; the real system under
+tune in this repo is the JAX distributed runtime (``repro.core.sut_jax``).
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from .params import (
+    BoolParam,
+    Config,
+    EnumParam,
+    FloatParam,
+    IntParam,
+    ParameterSpace,
+)
+from .tuner import PerfMetric
+
+__all__ = [
+    "Surrogate",
+    "MySQLSurrogate",
+    "TomcatSurrogate",
+    "SparkSurrogate",
+    "FrontendSurrogate",
+    "ComposedSUT",
+]
+
+
+def _jitter(config: Config, scale: float = 0.005) -> float:
+    """Deterministic pseudo-measurement-noise multiplier in [1-s, 1+s]."""
+    h = zlib.crc32(repr(sorted(config.items())).encode()) / 0xFFFFFFFF
+    return 1.0 + scale * (2.0 * h - 1.0)
+
+
+def _sat(x: float, x0: float, sharp: float = 1.0) -> float:
+    """Smooth saturating curve in [0, 1]: 0 at -inf, 1 at +inf, 0.5 at x0."""
+    return 1.0 / (1.0 + math.exp(-sharp * (x - x0)))
+
+
+class Surrogate:
+    """Base: a deterministic ``config -> PerfMetric`` SUT with a knob space."""
+
+    name = "surrogate"
+
+    def space(self) -> ParameterSpace:
+        raise NotImplementedError
+
+    def test(self, config: Config) -> PerfMetric:
+        raise NotImplementedError
+
+    # For Fig.1-style projections.
+    def surface(
+        self, knob_x: str, knob_y: str, n: int = 25
+    ) -> Tuple[list, list, np.ndarray]:
+        space = self.space()
+        base = space.default_config()
+        xs = space[knob_x].grid(n)
+        ys = space[knob_y].grid(n)
+        z = np.zeros((len(xs), len(ys)))
+        for i, xv in enumerate(xs):
+            for j, yv in enumerate(ys):
+                cfg = dict(base)
+                cfg[knob_x] = xv
+                cfg[knob_y] = yv
+                z[i, j] = self.test(cfg).value
+        return xs, ys, z
+
+
+# ---------------------------------------------------------------------------
+# MySQL (§2.2 Fig. 1a/1d, §5.1)
+# ---------------------------------------------------------------------------
+class MySQLSurrogate(Surrogate):
+    """MySQL 5.7 surrogate: 10 real knobs, workload-dependent response.
+
+    Calibrated so the default setting yields 9,815 ops/s and the global
+    optimum 118,184 ops/s (12.04×) under ``uniform_read`` — §5.1's numbers.
+    """
+
+    name = "mysql"
+    DEFAULT_TPUT = 9815.0
+    BEST_TPUT = 118184.0
+
+    def __init__(self, workload: str = "uniform_read"):
+        if workload not in ("uniform_read", "zipfian_rw"):
+            raise ValueError(f"unknown workload {workload!r}")
+        self.workload = workload
+        self.name = f"mysql[{workload}]"
+
+    def space(self) -> ParameterSpace:
+        mb = 1024 * 1024
+        return ParameterSpace(
+            [
+                EnumParam("query_cache_type", ("OFF", "ON", "DEMAND"), "OFF"),
+                IntParam("innodb_buffer_pool_size", 128 * mb, 32768 * mb,
+                         default=128 * mb, log=True),
+                IntParam("max_connections", 50, 4000, default=151),
+                IntParam("innodb_log_file_size", 4 * mb, 4096 * mb,
+                         default=48 * mb, log=True),
+                EnumParam("innodb_flush_log_at_trx_commit", (1, 0, 2), 1),
+                IntParam("thread_cache_size", 0, 512, default=9),
+                IntParam("table_open_cache", 64, 16384, default=2000, log=True),
+                IntParam("innodb_thread_concurrency", 0, 128, default=0),
+                BoolParam("sync_binlog", True),
+                IntParam("tmp_table_size", 1 * mb, 1024 * mb, default=16 * mb,
+                         log=True),
+            ]
+        )
+
+    # per-knob log-gain functions; g(default) == 0 by construction
+    def _gains(self, cfg: Config) -> Dict[str, float]:
+        mb = 1024 * 1024
+        g: Dict[str, float] = {}
+
+        bp = math.log2(cfg["innodb_buffer_pool_size"] / (128 * mb)) / 8.0  # 0..1
+        lf = math.log2(cfg["innodb_log_file_size"] / (4 * mb)) / 10.0  # 0..1
+        conn = cfg["max_connections"]
+        tc = cfg["thread_cache_size"]
+        toc = math.log2(cfg["table_open_cache"] / 64.0) / 8.0
+        itc = cfg["innodb_thread_concurrency"]
+        tmp = math.log2(cfg["tmp_table_size"] / mb) / 10.0
+
+        if self.workload == "uniform_read":
+            # Fig 1a: query cache dominates — two nearly-parallel "lines".
+            g["query_cache_type"] = {"OFF": 0.0, "ON": 1.20, "DEMAND": 0.85}[
+                cfg["query_cache_type"]
+            ]
+            g["innodb_buffer_pool_size"] = 0.55 * _sat(bp, 0.45, 6.0) * 2 - 0.55 * 2 * _sat(0.0, 0.45, 6.0)
+            g["max_connections"] = 0.10 * math.exp(-((conn - 1800) / 1200.0) ** 2) - 0.10 * math.exp(-((151 - 1800) / 1200.0) ** 2)
+            g["innodb_log_file_size"] = 0.04 * (lf - math.log2(12.0) / 10.0)
+            g["innodb_flush_log_at_trx_commit"] = 0.0  # read-only: irrelevant
+            g["thread_cache_size"] = 0.06 * (_sat(tc, 64, 0.05) - _sat(9, 64, 0.05))
+            g["table_open_cache"] = 0.05 * (toc - math.log2(2000 / 64.0) / 8.0)
+            g["innodb_thread_concurrency"] = 0.05 * math.exp(-((itc - 0) / 24.0) ** 2) - 0.05
+            g["sync_binlog"] = 0.0
+            g["tmp_table_size"] = 0.02 * (tmp - 4.0 / 10.0)
+        else:
+            # Fig 1d: cache invalidation kills the query cache's dominance.
+            g["query_cache_type"] = {"OFF": 0.0, "ON": -0.18, "DEMAND": 0.02}[
+                cfg["query_cache_type"]
+            ]
+            g["innodb_buffer_pool_size"] = 0.55 * (_sat(bp, 0.4, 5.0) - _sat(0.0, 0.4, 5.0))
+            g["max_connections"] = 0.12 * math.exp(-((conn - 900) / 700.0) ** 2) - 0.12 * math.exp(-((151 - 900) / 700.0) ** 2)
+            g["innodb_log_file_size"] = 0.35 * (_sat(lf, 0.5, 5.0) - _sat(math.log2(12.0) / 10.0, 0.5, 5.0))
+            g["innodb_flush_log_at_trx_commit"] = {1: 0.0, 0: 0.85, 2: 0.60}[
+                cfg["innodb_flush_log_at_trx_commit"]
+            ]
+            g["thread_cache_size"] = 0.08 * (_sat(tc, 64, 0.05) - _sat(9, 64, 0.05))
+            g["table_open_cache"] = 0.03 * (toc - math.log2(2000 / 64.0) / 8.0)
+            g["innodb_thread_concurrency"] = 0.10 * math.exp(-((itc - 32) / 24.0) ** 2) - 0.10 * math.exp(-((0 - 32) / 24.0) ** 2)
+            g["sync_binlog"] = 0.40 if not cfg["sync_binlog"] else 0.0
+            g["tmp_table_size"] = 0.05 * (tmp - 4.0 / 10.0)
+        return g
+
+    def _max_log_gain(self) -> float:
+        """Analytic max of sum of gains (each term maximized independently)."""
+        space = self.space()
+        best = 0.0
+        for p in space:
+            vals = p.grid(64) if p.cardinality is None or p.cardinality > 64 else p.grid(p.cardinality)
+            gmax = -math.inf
+            for v in vals:
+                cfg = space.default_config()
+                cfg[p.name] = v
+                gmax = max(gmax, self._gains(cfg)[p.name])
+            best += gmax
+        return best
+
+    def test(self, config: Config) -> PerfMetric:
+        self.space().validate(config)
+        g = sum(self._gains(config).values())
+        if self.workload == "uniform_read":
+            # Normalize so the global max hits BEST_TPUT exactly.
+            scale = math.log(self.BEST_TPUT / self.DEFAULT_TPUT) / self._max_log_gain_cached()
+        else:
+            scale = 1.0
+        tput = self.DEFAULT_TPUT * math.exp(g * scale) * _jitter(config)
+        return PerfMetric(value=tput, higher_is_better=True,
+                          metrics={"ops_per_sec": tput, "workload": self.workload})
+
+    _mlg: Optional[float] = None
+
+    def _max_log_gain_cached(self) -> float:
+        if type(self)._mlg is None:
+            type(self)._mlg = MySQLSurrogate("uniform_read")._max_log_gain()
+        return type(self)._mlg
+
+
+# ---------------------------------------------------------------------------
+# Tomcat (+ co-deployed JVM) (§2.2 Fig. 1b/1e, §5.2 Table 1)
+# ---------------------------------------------------------------------------
+class TomcatSurrogate(Surrogate):
+    """Tomcat on 8-core VM (4 cores pinned to network) — §5.2's deployment.
+
+    The network cores are saturated, so the headroom is small: default 978
+    txns/s, attainable optimum ≈ 1020 (+4%).  The surface is bumpy (thread
+    scheduling artifacts), and the bump *phase* depends on the co-deployed
+    JVM's ``TargetSurvivorRatio`` — tuning both together (the paper's §2.1
+    point) is what finds the real optimum.
+    """
+
+    name = "tomcat"
+    DEFAULT_TXNS = 978.0
+
+    def __init__(self, fully_utilized: bool = True):
+        self.fully_utilized = fully_utilized
+
+    def space(self) -> ParameterSpace:
+        mb = 1024 * 1024
+        return ParameterSpace(
+            [
+                IntParam("maxThreads", 25, 1000, default=200),
+                IntParam("acceptCount", 10, 1000, default=100),
+                IntParam("maxKeepAliveRequests", 1, 500, default=100),
+                IntParam("connectionTimeout_ms", 1000, 60000, default=20000),
+                BoolParam("tcpNoDelay", True),
+                EnumParam("compression", ("off", "on", "force"), "off"),
+                IntParam("jvm_heap_mb", 256, 8192, default=512, log=True),
+                IntParam("jvm_TargetSurvivorRatio", 1, 99, default=50),
+                EnumParam("jvm_gc", ("ParallelGC", "G1GC", "CMS"), "ParallelGC"),
+            ]
+        )
+
+    def _utilization_score(self, cfg: Config) -> float:
+        """0..1 'smoothness-free' capacity score."""
+        mt = cfg["maxThreads"]
+        heap = cfg["jvm_heap_mb"]
+        # concave peak in threads (context-switch cost beyond ~400)
+        s_threads = math.exp(-((mt - 420) / 320.0) ** 2)
+        s_heap = _sat(math.log2(heap / 256.0), 2.2, 1.6)
+        s_accept = _sat(cfg["acceptCount"], 150, 0.01)
+        s_keep = _sat(cfg["maxKeepAliveRequests"], 60, 0.02)
+        s_nodelay = 1.0 if cfg["tcpNoDelay"] else 0.93
+        s_comp = {"off": 1.0, "on": 0.97, "force": 0.90}[cfg["compression"]]
+        s_gc = {"ParallelGC": 0.97, "G1GC": 1.0, "CMS": 0.95}[cfg["jvm_gc"]]
+        return (
+            0.45 * s_threads + 0.25 * s_heap + 0.1 * s_accept + 0.1 * s_keep
+        ) * s_nodelay * s_comp * s_gc + 0.1
+
+    def _bumps(self, cfg: Config) -> float:
+        """Irregular bumpy modulation; phase set by the JVM survivor ratio."""
+        mt = cfg["maxThreads"]
+        ac = cfg["acceptCount"]
+        phase = cfg["jvm_TargetSurvivorRatio"] / 99.0 * 2 * math.pi
+        b = (
+            0.05 * math.sin(mt / 37.0 + phase)
+            + 0.04 * math.sin(mt / 11.0 + 2.3 * phase)
+            + 0.03 * math.sin(ac / 23.0 - phase)
+        )
+        return 1.0 + b
+
+    def test(self, config: Config) -> PerfMetric:
+        self.space().validate(config)
+        score = self._utilization_score(config) * self._bumps(config)
+        default = dict(self.space().default_config())
+        ref = self._utilization_score(default) * self._bumps(default)
+        rel = score / ref
+        if self.fully_utilized:
+            # §5.2: network cores saturated — compress headroom to ~±5%.
+            rel = 1.0 + 0.28 * (rel - 1.0) if rel > 1 else rel
+            rel = min(rel, 1.055)
+        txns = self.DEFAULT_TXNS * rel * _jitter(config)
+        hits = 3235.0 * (rel ** 2.8) * _jitter(config, 0.003)  # hits grow faster
+        failed = max(0.0, 165.0 / (rel ** 3.2)) * _jitter(config, 0.01)
+        errors = max(0.0, 37.0 / (rel ** 2.4)) * _jitter(config, 0.01)
+        passed = txns * 3600.0 * 0.904
+        return PerfMetric(
+            value=txns,
+            higher_is_better=True,
+            metrics={
+                "txns_per_sec": txns,
+                "hits_per_sec": hits,
+                "passed_txns": passed,
+                "failed_txns": failed,
+                "errors": errors,
+            },
+        )
+
+
+# ---------------------------------------------------------------------------
+# Spark (§2.2 Fig. 1c/1f)
+# ---------------------------------------------------------------------------
+class SparkSurrogate(Surrogate):
+    """Spark surrogate: smooth in standalone mode, ridge at cores=4 in cluster."""
+
+    name = "spark"
+    DEFAULT_TPUT = 100.0  # normalized job throughput
+
+    def __init__(self, deployment: str = "standalone"):
+        if deployment not in ("standalone", "cluster"):
+            raise ValueError(f"unknown deployment {deployment!r}")
+        self.deployment = deployment
+        self.name = f"spark[{deployment}]"
+
+    def space(self) -> ParameterSpace:
+        return ParameterSpace(
+            [
+                IntParam("executor_cores", 1, 8, default=1),
+                IntParam("executor_memory_mb", 512, 16384, default=1024, log=True),
+                IntParam("default_parallelism", 8, 512, default=16),
+                BoolParam("shuffle_compress", True),
+                EnumParam("serializer", ("java", "kryo"), "java"),
+                FloatParam("memory_fraction", 0.3, 0.9, default=0.6),
+            ]
+        )
+
+    def test(self, config: Config) -> PerfMetric:
+        self.space().validate(config)
+        c = config
+        mem = math.log2(c["executor_memory_mb"] / 512.0) / 5.0  # 0..1
+        par = math.log2(c["default_parallelism"] / 8.0) / 6.0  # 0..1
+        s = (
+            0.8 * _sat(c["executor_cores"], 3.0, 1.1)
+            + 0.7 * _sat(mem, 0.45, 6.0)
+            + 0.3 * math.exp(-((par - 0.55) / 0.35) ** 2)
+            + (0.12 if c["serializer"] == "kryo" else 0.0)
+            + (0.05 if c["shuffle_compress"] else 0.0)
+            + 0.2 * math.exp(-((c["memory_fraction"] - 0.62) / 0.18) ** 2)
+        )
+        if self.deployment == "cluster":
+            # Fig 1f: sharp rise at executor.cores == 4 (NUMA/slot alignment).
+            if c["executor_cores"] == 4:
+                s *= 1.35
+            elif c["executor_cores"] > 4:
+                s *= 0.92  # oversubscription penalty
+        tput = self.DEFAULT_TPUT * s * _jitter(config)
+        return PerfMetric(value=tput, higher_is_better=True,
+                          metrics={"jobs_norm": tput, "deployment": self.deployment})
+
+
+# ---------------------------------------------------------------------------
+# Front-end cache / load balancer + composition (§5.5)
+# ---------------------------------------------------------------------------
+class FrontendSurrogate(Surrogate):
+    """Front-end caching/LB tier whose capacity ceiling is near the *untuned*
+    DB throughput — the §5.5 bottleneck."""
+
+    name = "frontend"
+
+    def __init__(self, capacity_ceiling: float = 11000.0):
+        self.capacity_ceiling = capacity_ceiling
+
+    def space(self) -> ParameterSpace:
+        mb = 1024 * 1024
+        return ParameterSpace(
+            [
+                IntParam("cache_size_mb", 64, 8192, default=256, log=True),
+                EnumParam("eviction", ("lru", "lfu", "fifo"), "lru"),
+                IntParam("worker_threads", 1, 64, default=8),
+                BoolParam("pipeline_requests", False),
+            ]
+        )
+
+    def test(self, config: Config) -> PerfMetric:
+        self.space().validate(config)
+        c = config
+        s = (
+            0.75
+            + 0.10 * _sat(math.log2(c["cache_size_mb"] / 64.0), 3.0, 1.2)
+            + {"lru": 0.05, "lfu": 0.07, "fifo": 0.0}[c["eviction"]]
+            + 0.06 * _sat(c["worker_threads"], 12, 0.25)
+            + (0.05 if c["pipeline_requests"] else 0.0)
+        )
+        tput = self.capacity_ceiling * s * _jitter(config)
+        return PerfMetric(value=tput, higher_is_better=True,
+                          metrics={"ops_per_sec": tput})
+
+
+class ComposedSUT(Surrogate):
+    """Co-deployed systems tuned together (§2.1, §5.5).
+
+    The joint knob space is the (prefixed) merge of the member spaces; the
+    end-to-end throughput is the pipeline bottleneck min over members, with a
+    small interaction drag (shared CPU/memory, §2.2) when both are pushed.
+    """
+
+    def __init__(self, members: Dict[str, Surrogate], interaction: float = 0.04):
+        self.members = dict(members)
+        self.interaction = interaction
+        self.name = "+".join(self.members)
+
+    def space(self) -> ParameterSpace:
+        import copy
+
+        # Prefix every member's knobs to keep the joint space collision-free.
+        params = []
+        for prefix, m in self.members.items():
+            for p in m.space():
+                q = copy.copy(p)
+                object.__setattr__(q, "name", f"{prefix}.{p.name}")
+                params.append(q)
+        return ParameterSpace(params)
+
+    def _split(self, config: Config) -> Dict[str, Config]:
+        out: Dict[str, Config] = {k: {} for k in self.members}
+        for k, v in config.items():
+            prefix, knob = k.split(".", 1)
+            out[prefix][knob] = v
+        return out
+
+    def test(self, config: Config) -> PerfMetric:
+        parts = self._split(config)
+        values = {
+            name: self.members[name].test(cfg).value for name, cfg in parts.items()
+        }
+        bottleneck = min(values, key=values.get)
+        overall = min(values.values()) * (1.0 - self.interaction)
+        return PerfMetric(
+            value=overall,
+            higher_is_better=True,
+            metrics={"member_values": values, "bottleneck_member": bottleneck},
+        )

@@ -1,0 +1,202 @@
+"""The JAX distributed runtime as an ACTS system-under-tune.
+
+This is the paper's architecture instantiated on this framework:
+
+* **SystemManipulator** — applies a knob configuration by *re-jitting* the
+  train/serve step under new sharding rules / remat / microbatching (the
+  analogue of rewriting my.cnf and restarting mysqld; the restart cost is
+  the XLA compile, which is exactly why the resource limit is counted in
+  tests),
+* **WorkloadGenerator** — the (architecture × input shape) cell; "running"
+  the workload means AOT-compiling it for the production mesh and reading
+  the roofline terms off the compiled artifact (the staging-environment
+  measurement), or — for CPU-sized configs — actually timing real steps
+  (``measured=True``),
+* metric — estimated step seconds (max of the three roofline terms), to be
+  minimized, with an HBM-capacity penalty so infeasible settings lose.
+
+The knob space mirrors ``repro.train.step.RunKnobs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+from repro.core.params import (
+    BoolParam,
+    Config,
+    EnumParam,
+    IntParam,
+    ParameterSpace,
+)
+from repro.core.tuner import PerfMetric
+
+__all__ = ["JaxDryRunSUT", "knob_space", "knobs_from_config",
+           "JaxMeasuredSUT"]
+
+HBM_GIB = 16.0  # v5e
+
+
+def knob_space(kind: str = "train", include_mesh_knobs: bool = True
+               ) -> ParameterSpace:
+    """The configuration-parameter space of the distributed runtime."""
+    params = [
+        EnumParam("rules_preset",
+                  ("fsdp_tp", "tp", "dp", "dp_all", "fsdp_all"), "fsdp_tp"),
+        EnumParam("remat", ("full", "dots", "none"), "full"),
+        EnumParam("microbatches", (1, 2, 4, 8, 16), 4),
+        EnumParam("loss_chunk", (0, 512, 2048), 512),
+        EnumParam("moe_group", (1024, 4096, 16384), 4096),
+        BoolParam("seq_shard", False),
+        BoolParam("sp_residual", False),
+        BoolParam("kv_seq_shard", False),
+        BoolParam("expert_tp", False),
+        BoolParam("pad_heads", False),
+        BoolParam("head_dim_shard", False),
+        EnumParam("attn_block_q", (0, 256, 512, 1024), 0),
+        EnumParam("attn_block_kv", (0, 512, 1024, 2048), 0),
+    ]
+    if kind != "train":
+        # decode/prefill: trainer-only knobs pinned by omission
+        params = [p for p in params
+                  if p.name not in ("remat", "microbatches", "loss_chunk")]
+    return ParameterSpace(params)
+
+
+def knobs_from_config(config: Config):
+    from repro.train.step import RunKnobs
+
+    fields = {f.name for f in dataclasses.fields(RunKnobs)}
+    kwargs = {k: v for k, v in config.items() if k in fields}
+    return RunKnobs(**kwargs)
+
+
+class JaxDryRunSUT:
+    """config -> compile the cell -> roofline-estimated step seconds."""
+
+    def __init__(self, arch: str, shape: str, multi_pod: bool = False,
+                 hbm_gib: float = HBM_GIB, verbose: bool = False):
+        self.arch = arch
+        self.shape = shape
+        self.multi_pod = multi_pod
+        self.hbm_gib = hbm_gib
+        self.verbose = verbose
+        self.name = f"jax[{arch}×{shape}]"
+        self.records = []  # full dry-run records of every test
+
+    def test(self, config: Config) -> PerfMetric:
+        from repro.launch.dryrun import run_cell
+        from repro.launch.roofline import roofline_terms
+
+        knobs = knobs_from_config(config)
+        try:
+            rec = run_cell(self.arch, self.shape, multi_pod=self.multi_pod,
+                           knobs=knobs, verbose=False)
+        except Exception as e:  # invalid configs lose, but don't crash ACTS
+            if self.verbose:
+                print(f"[sut_jax] compile failed for {config}: {e}")
+            return PerfMetric(value=math.inf, higher_is_better=False,
+                              metrics={"error": str(e)})
+        if rec.get("status") != "ok":
+            return PerfMetric(value=math.inf, higher_is_better=False,
+                              metrics={"error": rec.get("reason", "skipped")})
+        terms = roofline_terms(rec)
+        t = terms["t_est_s"]
+        # HBM feasibility penalty on the resident estimate (exact argument
+        # bytes + modeled activations; the CPU backend's temp_size is kept
+        # as a diagnostic only): +1x per HBM of overflow steers the search
+        # back into feasible territory instead of a cliff.
+        mem = terms.get("resident_gib")
+        penalty = 1.0
+        if mem is not None and mem > self.hbm_gib:
+            penalty += (mem - self.hbm_gib) / self.hbm_gib
+        value = t * penalty
+        rec["tuner_config"] = dict(config)
+        rec["tuner_value"] = value
+        self.records.append(rec)
+        if self.verbose:
+            print(f"[sut_jax] t_est={t:.4f}s penalty={penalty:.2f} "
+                  f"dom={terms['dominant']} cfg={config}")
+        return PerfMetric(
+            value=value, higher_is_better=False,
+            metrics={
+                "t_est_s": t,
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "dominant": terms["dominant"],
+                "roofline_fraction": terms["roofline_fraction"],
+                "resident_gib": mem,
+                "mem_gib_per_device": terms.get("mem_gib_per_device"),
+                "penalty": penalty,
+            })
+
+
+class JaxMeasuredSUT:
+    """Real measured tuning for CPU-scale configs: config -> steps/sec.
+
+    This exercises the paper's actual loop (apply config, restart system,
+    run workload, measure) end-to-end on hardware we do have.
+    """
+
+    def __init__(self, cfg, seq_len: int = 128, global_batch: int = 8,
+                 steps: int = 6, warmup: int = 2, seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.steps = steps
+        self.warmup = warmup
+        self.seed = seed
+        self.name = f"jax-measured[{cfg.name}]"
+
+    def space(self) -> ParameterSpace:
+        return ParameterSpace([
+            EnumParam("remat", ("full", "dots", "none"), "full"),
+            EnumParam("microbatches", (1, 2, 4), 1),
+            EnumParam("loss_chunk", (0, 32, 64), 0),
+            BoolParam("donate", True),
+            EnumParam("scan_unroll", (1, 2), 1),
+        ])
+
+    def test(self, config: Config) -> PerfMetric:
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data import DataConfig, SyntheticLMDataset
+        from repro.models import Model
+        from repro.optim import OptimizerConfig
+        from repro.train.step import RunKnobs, init_train_state, \
+            make_train_step
+
+        knobs = RunKnobs(
+            remat=config["remat"], microbatches=config["microbatches"],
+            loss_chunk=config["loss_chunk"], donate=config["donate"],
+            scan_unroll=config["scan_unroll"], rules_preset="dp")
+        model = Model(self.cfg)
+        params, opt_state = init_train_state(
+            model, jax.random.PRNGKey(self.seed), knobs)
+        data = SyntheticLMDataset(DataConfig(
+            vocab_size=self.cfg.vocab_size, seq_len=self.seq_len,
+            global_batch=self.global_batch, seed=self.seed))
+        step_fn = jax.jit(make_train_step(model, OptimizerConfig(), knobs),
+                          donate_argnums=(0, 1) if knobs.donate else ())
+        batches = [
+            {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            for i in range(self.warmup + self.steps)
+        ]
+        for i in range(self.warmup):  # includes compile
+            params, opt_state, m = step_fn(params, opt_state, batches[i])
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        for i in range(self.warmup, self.warmup + self.steps):
+            params, opt_state, m = step_fn(params, opt_state, batches[i])
+        jax.block_until_ready(m["loss"])
+        dt = (time.time() - t0) / self.steps
+        tput = self.seq_len * self.global_batch / dt
+        return PerfMetric(value=tput, higher_is_better=True,
+                          metrics={"step_seconds": dt,
+                                   "tokens_per_sec": tput,
+                                   "loss": float(m["loss"])})

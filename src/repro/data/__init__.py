@@ -1,0 +1,4 @@
+"""Data substrate."""
+from .pipeline import DataConfig, SyntheticLMDataset, batch_specs
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "batch_specs"]

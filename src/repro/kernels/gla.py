@@ -1,0 +1,120 @@
+"""Chunked gated linear attention (GLA) as a Pallas TPU kernel.
+
+This is the recurrence core shared by Mamba2 (SSD) and xLSTM's mLSTM
+(``repro.models.gla`` is the pure-jnp reference implementation used by the
+models; ``ref.gla_ref`` is the O(S²) oracle).  TPU adaptation:
+
+* the sequential chunk scan is the *last grid dimension*; the (dk × dv)
+  state lives in VMEM scratch and carries across chunk steps — the HBM
+  traffic per chunk is exactly q/k/v/g tiles in, y tile out,
+* the intra-chunk part is two (L×L)·(L×d) MXU matmuls with a decay mask
+  computed from an in-tile cumulative sum — chunk length L is the tiling
+  knob that trades VMEM footprint against MXU utilization (ACTS tunes it),
+* all gating math is performed as exp(difference-of-cumsums) in f32, so
+  sigmoid/softplus log-decays never overflow.
+
+Layout: one grid step owns one (batch, head) pair; heads are independent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gla_pallas"]
+
+
+def _kernel(q_ref, k_ref, v_ref, g_ref, y_ref, state_out_ref, state_ref, *,
+            chunk: int, seq: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (L, dk)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (L, dk)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (L, dv)
+    g = g_ref[0, :, 0].astype(jnp.float32)  # (L,)
+
+    # mask padding steps: zero decay, zero k contribution
+    pos = ic * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    valid = pos < seq
+    g = jnp.where(valid, g, 0.0)
+    k = jnp.where(valid[:, None], k, 0.0)
+
+    c = jnp.cumsum(g)  # inclusive (L,)
+    state = state_ref[...]  # (dk, dv)
+
+    # inter-chunk: y += exp(c_t) · q_t S_in
+    y_inter = jax.lax.dot(q * jnp.exp(c)[:, None], state,
+                          preferred_element_type=jnp.float32)
+    # intra-chunk: decay matrix exp(c_t − c_s) for s ≤ t
+    dmat = c[:, None] - c[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    att = jnp.where(tri, att * jnp.exp(jnp.where(tri, dmat, 0.0)), 0.0)
+    y = y_inter + jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: S = exp(c_L) S + Σ_s exp(c_L − c_s) k_s v_sᵀ
+    cL = c[-1]
+    k_dec = k * jnp.exp(cL - c)[:, None]
+    state_ref[...] = jnp.exp(cL) * state + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ic == nc - 1)
+    def finalize():
+        state_out_ref[0, 0, :, :] = state_ref[...]
+
+
+def gla_pallas(
+    q: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    log_g: jax.Array,  # (B, S, H)
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, final_state (B,H,dk,dv) f32). Zero initial state."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padq)
+        k = jnp.pad(k, padq)
+        v = jnp.pad(v, padq)
+        log_g = jnp.pad(log_g, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, seq=S),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, dk), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, chunk, 1, dk), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, chunk, 1, dv), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ic: (b, ic, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dv), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_g)
+    return y[:, :S], state

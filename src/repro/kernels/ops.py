@@ -1,0 +1,62 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+*body* runs in Python/XLA per grid step, which validates semantics; on a real
+TPU the same calls compile through Mosaic.  ``interpret`` is resolved from
+the backend unless forced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from .decode_attention import flash_decode_pallas
+from .flash_attention import flash_attention_pallas
+from .gla import gla_pallas
+from .rmsnorm import rmsnorm_pallas
+
+__all__ = ["flash_attention", "flash_decode", "rmsnorm", "gla",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                          interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla(q, k, v, log_g, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    return gla_pallas(q, k, v, log_g, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def flash_decode(q, k, v, kv_len, *, block_kv: int = 256,
+                 interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    return flash_decode_pallas(q, k, v, kv_len, block_kv=block_kv,
+                               interpret=interp)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "rmsnorm_ref", "gla_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materialized-logits GQA attention, f32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def gla_ref(
+    q: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    log_g: jax.Array,  # (B, S, H)  (≤ 0)
+    initial_state: Optional[jax.Array] = None,  # (B, H, dk, dv)
+) -> Tuple[jax.Array, jax.Array]:
+    """O(S²) direct evaluation of gated linear attention:
+    y_t = Σ_{s≤t} exp(c_t − c_s) (q_t·k_s) v_s + exp(c_t)·q_tᵀS₀."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    c = jnp.cumsum(log_g.astype(f32), axis=1)  # (B,S,H)
+    dmat = c[:, :, None, :] - c[:, None, :, :]  # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    att = jnp.einsum("bthd,bshd->btsh", qf, kf) * jnp.exp(dmat)
+    y = jnp.einsum("btsh,bshv->bthv", att, vf)
+    S0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((B, H, dk, dv), f32))
+    y = y + jnp.einsum("bthd,bhdv->bthv", qf * jnp.exp(c)[..., None], S0)
+    cL = c[:, -1, :]
+    k_decay = jnp.exp(cL[:, None, :] - c)
+    state = jnp.exp(cL)[:, :, None, None] * S0 + jnp.einsum(
+        "bshd,bshv->bhdv", kf * k_decay[..., None], vf)
+    return y.astype(v.dtype), state

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before *any* jax
+initialization, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "describe_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment: one v5e pod (16x16) or two pods (2x16x16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int = 1):
+    """An arbitrary (pod×)data×model mesh — used by ACTS mesh-factorization
+    knobs and by CPU-scale tests (e.g. 2x2 over 4 host devices)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def describe_mesh(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

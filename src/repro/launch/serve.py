@@ -1,0 +1,58 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the batched prefill+decode engine on this host (reduced configs by
+default).  This is the interactive counterpart of the decode dry-run cells.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+__all__ = ["main"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(model, params, ServeConfig(
+        max_seq=args.prompt_len + args.max_new + 8,
+        batch_slots=args.batch_slots, temperature=args.temperature,
+        seed=args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(1, cfg.vocab_size,
+                           size=(args.requests, args.prompt_len)).tolist()
+    fe = None
+    if cfg.frontend or cfg.encoder:
+        fe = rng.normal(size=(args.requests, cfg.frontend_tokens,
+                              cfg.frontend_dim)).astype(np.float32)
+    res = engine.generate(prompts, max_new_tokens=args.max_new,
+                          frontend_embeds=fe)
+    print(f"{cfg.name}: {args.requests} requests, "
+          f"prefill {res.prefill_seconds:.2f}s, "
+          f"decode {res.decode_seconds:.2f}s "
+          f"({res.decode_tokens_per_sec:.1f} tok/s)")
+    for i, toks in enumerate(res.tokens[:3]):
+        print(f"  req {i}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant training loop on this host.  Assigned architectures
+run at their REDUCED config by default (full configs belong on the pod; use
+``--full`` to try anyway).  Execution knobs mirror ``RunKnobs``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.optim import OptimizerConfig
+from repro.train import RunKnobs, TrainLoopConfig, train
+
+__all__ = ["main"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (pod-scale!)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="none",
+                    choices=("none", "dots", "full"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    loop = TrainLoopConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed, log_every=10,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        opt=OptimizerConfig(learning_rate=args.lr, warmup_steps=10,
+                            total_steps=args.steps),
+        knobs=RunKnobs(rules_preset="dp", remat=args.remat,
+                       microbatches=args.microbatches, loss_chunk=0,
+                       compression=args.compression),
+    )
+    out = train(cfg, loop)
+    h = out["history"]
+    print(f"\n{cfg.name}: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} "
+          f"in {out['final_step']} steps ({out['wall_seconds']:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Must precede any jax import: the tuner compiles against the production mesh.
+"""ACTS over the JAX runtime (the paper's technique applied to this system).
+
+Two modes:
+
+* ``--probe knob=v[,knob=v...]`` — one manual hypothesis test: compile the
+  cell under the given knobs, print the roofline terms (the
+  hypothesis→change→measure loop of EXPERIMENTS.md §Perf).
+* default — full ACTS run: LHS + RRS over the knob space within ``--budget``
+  tests (each test = one AOT compile of the real system on the production
+  mesh), reporting default vs. best and writing the full history.
+
+Examples:
+  python -m repro.launch.tune --arch qwen2.5-32b --shape train_4k --budget 24
+  python -m repro.launch.tune --arch grok-1-314b --shape train_4k \
+      --probe expert_tp=true,rules_preset=dp
+"""
+import argparse
+import json
+import sys
+import time
+
+from repro.configs import ARCH_IDS, SHAPES
+
+__all__ = ["main"]
+
+
+def _parse_value(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        return v
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--budget", type=int, default=24)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--optimizer", default="rrs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--probe", default=None,
+                    help="knob=v[,knob=v...]: single manual hypothesis test")
+    ap.add_argument("--out-dir", default="results/tune")
+    args = ap.parse_args(argv)
+
+    from repro.core.sut_jax import JaxDryRunSUT, knob_space
+    from repro.core.tuner import Tuner
+
+    kind = SHAPES[args.shape].kind
+    sut = JaxDryRunSUT(args.arch, args.shape, multi_pod=args.multi_pod,
+                       verbose=True)
+    space = knob_space(kind)
+
+    if args.probe is not None:
+        config = space.default_config()
+        if args.probe:
+            for kv in args.probe.split(","):
+                k, v = kv.split("=", 1)
+                config[k] = _parse_value(v)
+        space.validate(config)
+        t0 = time.time()
+        metric = sut.test(config)
+        print(json.dumps({
+            "arch": args.arch, "shape": args.shape,
+            "config": {k: config[k] for k in sorted(config)},
+            "value_s": metric.value,
+            "metrics": metric.metrics,
+            "wall_s": time.time() - t0,
+        }, indent=2, default=str))
+        return 0
+
+    tuner = Tuner(space, sut, budget=args.budget,
+                  optimizer=args.optimizer, seed=args.seed, verbose=True)
+    rep = tuner.run()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    tag = f"{args.arch}_{args.shape}" + ("_mp" if args.multi_pod else "")
+    with open(os.path.join(args.out_dir, f"{tag}.json"), "w") as f:
+        f.write(rep.to_json())
+    with open(os.path.join(args.out_dir, f"{tag}_records.jsonl"), "w") as f:
+        for rec in sut.records:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+    d, b = rep.default_metric, rep.best_metric
+    print("\n=== ACTS result ===")
+    print(f"cell: {args.arch} × {args.shape} "
+          f"({'2x16x16' if args.multi_pod else '16x16'})")
+    print(f"default: t_est={d.value:.4f}s dominant={d.metrics.get('dominant')}")
+    print(f"best:    t_est={b.value:.4f}s dominant={b.metrics.get('dominant')}")
+    print(f"speedup: {rep.improvement:.2f}x in {rep.n_tests} tests "
+          f"({rep.wall_seconds:.0f}s wall)")
+    print(f"best config: {rep.best_config}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

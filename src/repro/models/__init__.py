@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo: dense/GQA transformers, MoE, xLSTM, Mamba2, enc-dec,
+vision/audio cross-attention — assembled from ModelConfig superblock patterns."""
+from .transformer import Model, count_params, model_defs
+
+__all__ = ["Model", "count_params", "model_defs"]

@@ -1,0 +1,51 @@
+"""Dense MLP variants: SwiGLU (llama-family), GeGLU (gemma), GELU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import ParamDef, dtype_of, fan_in_init
+
+__all__ = ["mlp_defs", "mlp"]
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pdt = dtype_of(cfg.param_dtype)
+    gated = cfg.activation in ("swiglu", "geglu")
+    defs = {
+        "wi": ParamDef((d, ff), ("embed_fsdp", "ff"), fan_in_init(0), pdt),
+        "wo": ParamDef((ff, d), ("ff", "embed_fsdp"), fan_in_init(0), pdt),
+    }
+    if gated:
+        defs["wg"] = ParamDef((d, ff), ("embed_fsdp", "ff"), fan_in_init(0), pdt)
+    return defs
+
+
+def _act(name: str, g: jax.Array) -> jax.Array:
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu(g)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(g, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(g)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = dtype_of(cfg.compute_dtype)
+    x = x.astype(cdt)
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(cdt))
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(cdt))
+        h = _act(cfg.activation, g) * h
+    else:
+        h = _act(cfg.activation, h)
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(cdt))
+    return constrain(out, "batch", "seq_res", "embed")

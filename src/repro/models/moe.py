@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch follows the GShard/Mesh-TensorFlow einsum formulation **with token
+groups**: tokens are split into groups of ``group_size``; within each group a
+token is routed to at most ``experts_per_token`` experts and each expert
+accepts at most ``capacity = group_size·K·cf/E`` tokens from the group.  The
+(group, tokens, experts, capacity) one-hot dispatch tensors stay O(group²)
+instead of O(T²), which is what makes 65k-token-per-device batches feasible —
+and ``group_size`` becomes a real configuration knob (ACTS tunes it).
+
+Compute scales with *active* parameters (top-k × capacity_factor), not with
+E — the honest cost model for the roofline.  Sharding experts over the
+"model" mesh axis turns the dispatch einsums into all-to-all-style
+collectives, matching production expert parallelism.  Overflowed tokens are
+dropped; the router carries a GShard-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import ParamDef, dtype_of, fan_in_init, normal_init
+
+__all__ = ["moe_defs", "moe_ffn", "router_capacity"]
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    assert cfg.moe is not None
+    d, E, ff = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_ff
+    pdt = dtype_of(cfg.param_dtype)
+    gated = cfg.activation in ("swiglu", "geglu")
+    defs = {
+        "router": ParamDef((d, E), ("embed", None), normal_init(0.02), jnp.float32),
+        "wi": ParamDef((E, d, ff), ("experts", "embed_fsdp", "expert_ff"),
+                       fan_in_init(1), pdt),
+        "wo": ParamDef((E, ff, d), ("experts", "expert_ff", "embed_fsdp"),
+                       fan_in_init(1), pdt),
+    }
+    if gated:
+        defs["wg"] = ParamDef((E, d, ff), ("experts", "embed_fsdp", "expert_ff"),
+                              fan_in_init(1), pdt)
+    return defs
+
+
+def router_capacity(group_size: int, n_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    cap = int(group_size * top_k * capacity_factor / n_experts)
+    return max(cap, top_k)
+
+
+def moe_ffn(
+    params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+    group_size: int = 4096,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    assert cfg.moe is not None
+    spec = cfg.moe
+    B, S, d = x.shape
+    E, K = spec.n_experts, spec.experts_per_token
+    Tg = min(group_size, S)
+    if S % Tg:
+        # fall back to one group per sequence remainder-free split
+        Tg = S
+    G = B * (S // Tg)
+    C = router_capacity(Tg, E, K, spec.capacity_factor)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    xg = x.reshape(G, Tg, d)  # batch-major: group dim inherits batch sharding
+    xg = constrain(xg, "batch", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+
+    # top-k gates, renormalized over the selected experts (Mixtral-style)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) inside its expert queue, within the group
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (G, Tg, K, E)
+    flat = sel.reshape(G, Tg * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Tg, K, E)
+    pos = (pos_in_expert * sel).sum(-1)  # (G, Tg, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # dispatch / combine tensors: (G, Tg, E, C)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=cdt)[..., :C]
+    disp = jnp.einsum("gtke,gtkc->gtec", sel.astype(cdt), pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", sel.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(cdt)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg.astype(cdt))  # (G, E, C, d)
+    xe = constrain(xe, "batch", "experts", "cap", "embed")
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(cdt))
+    if "wg" in params:
+        g = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(cdt))
+        h = (jax.nn.silu(g) if cfg.activation == "swiglu"
+             else jax.nn.gelu(g, approximate=True)) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, "batch", "experts", "cap", "expert_ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(cdt))
+    out = jnp.einsum("gecd,gtec->gtd", ye, comb).reshape(B, S, d)
+
+    # GShard/Switch load-balance auxiliary loss
+    me = probs.mean((0, 1))  # mean router prob per expert
+    ce = sel[:, :, 0, :].astype(jnp.float32).mean((0, 1))  # top-1 fraction
+    aux = E * jnp.sum(me * ce)
+    return constrain(out, "batch", "seq_res", "embed"), aux.astype(jnp.float32)

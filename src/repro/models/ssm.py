@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block — state-space duality on top of the GLA core.
+
+Follows the minimal Mamba2 formulation:
+
+    [z | x | B | C | dt] = in_proj(u)
+    x,B,C <- causal depthwise conv (k=4) + SiLU
+    dt = softplus(dt_raw + dt_bias);  g = -exp(A_log) · dt   (per head)
+    h_t = exp(g_t)·h_{t-1} + dt_t·B_t x_tᵀ ;  y_t = C_tᵀ h_t + D·x_t
+    out = out_proj( RMSNorm(y) * SiLU(z) )
+
+B/C are shared across heads (single group), x is split into heads of size
+``head_dim = d_inner / ssm_heads``; the recurrence is ``chunked_gla`` with
+q=C, k=B, v=dt·x.  Decode keeps a (conv window, state) cache — O(1) per
+token, which is why the 500k-token decode cell runs on SSM archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import (
+    ParamDef,
+    dtype_of,
+    fan_in_init,
+    normal_init,
+    ones_init,
+    rms_norm,
+    zeros_init,
+)
+from repro.models.gla import chunked_gla, gla_step
+
+
+def _gla(cfg, q, k, v, log_g):
+    """Chunked-GLA dispatch: pure-jnp core or the Pallas TPU kernel."""
+    if cfg.gla_impl == "pallas":
+        from repro.kernels.ops import gla as gla_kernel
+
+        return gla_kernel(q, k, v, log_g, chunk=cfg.ssm_chunk)
+    return chunked_gla(q, k, v, log_g, chunk=cfg.ssm_chunk)
+
+__all__ = ["mamba2_defs", "mamba2_block", "mamba2_cache_defs", "mamba2_decode"]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(1, d_inner // 64)
+    hd = d_inner // nh
+    ds = cfg.ssm_state
+    return d_inner, nh, hd, ds
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_inner, nh, hd, ds = _dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    pdt = dtype_of(cfg.param_dtype)
+
+    def neg_A_init(key, shape, dtype):
+        # A in [1, 16] -> A_log = log(A)
+        a = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dtype)
+
+    def dt_bias_init(key, shape, dtype):
+        # dt in [1e-3, 1e-1] after softplus
+        dt = jnp.exp(jax.random.uniform(key, shape, jnp.float32,
+                                        jnp.log(1e-3), jnp.log(1e-1)))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+
+    return {
+        "in_proj": ParamDef((d, 2 * d_inner + 2 * ds + nh),
+                            ("embed_fsdp", "conv_dim"), fan_in_init(0), pdt),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "conv_dim"),
+                           normal_init(0.1), pdt),
+        "conv_b": ParamDef((conv_dim,), ("conv_dim",), zeros_init(), pdt),
+        "A_log": ParamDef((nh,), ("ssm_heads",), neg_A_init, jnp.float32),
+        "D": ParamDef((nh,), ("ssm_heads",), ones_init(), jnp.float32),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), dt_bias_init, jnp.float32),
+        "norm_scale": ParamDef((d_inner,), (None,), ones_init(), jnp.float32),
+        "out_proj": ParamDef((d_inner, d), ("conv_dim", "embed_fsdp"),
+                             fan_in_init(0), pdt),
+    }
+
+
+def mamba2_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    d_inner, nh, hd, ds = _dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, conv_dim),
+                         ("batch", None, "conv_dim"), zeros_init(), jnp.float32),
+        "state": ParamDef((batch, nh, ds, hd),
+                          ("batch", "ssm_heads", "ssm_state", None),
+                          zeros_init(), jnp.float32),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, nh, hd, ds = _dims(cfg)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via k shifted adds. xBC: (B, S, D); w: (k, D)."""
+    kk = w.shape[0]
+    xp = jnp.pad(xBC, ((0, 0), (kk - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(xp[:, j:j + S, :] * w[j] for j in range(kk)) + b
+    return jax.nn.silu(out)
+
+
+def _ssd_inputs(cfg: ModelConfig, params, xBC, dt_raw):
+    d_inner, nh, hd, ds = _dims(cfg)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (..., nh)
+    log_g = -jnp.exp(params["A_log"].astype(jnp.float32)) * dt
+    return x, Bm, Cm, dt, log_g
+
+
+def mamba2_block(
+    params: Dict[str, jax.Array], u: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """u: (B, S, d_model) -> (B, S, d_model). Full-sequence (train/prefill)."""
+    B, S, d = u.shape
+    d_inner, nh, hd, ds = _dims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", u.astype(cdt),
+                        params["in_proj"].astype(cdt))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC.astype(jnp.float32), params["conv_w"].astype(jnp.float32),
+                       params["conv_b"].astype(jnp.float32))
+    x, Bm, Cm, dt, log_g = _ssd_inputs(cfg, params, xBC, dt_raw)
+
+    xh = x.reshape(B, S, nh, hd)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, nh, ds))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, nh, ds))
+    v = xh * dt[..., None]
+    y, _ = _gla(cfg, q, k, v, log_g)
+    y = y + xh * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = constrain(y, "batch", "seq", "conv_dim")
+
+    y = rms_norm(y, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32))
+    out = jnp.einsum("bsp,pd->bsd", y.astype(cdt), params["out_proj"].astype(cdt))
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mamba2_decode(
+    params: Dict[str, jax.Array],
+    u: jax.Array,  # (B, 1, d_model)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token recurrent step; O(1) state update."""
+    B, S, d = u.shape
+    assert S == 1
+    d_inner, nh, hd, ds = _dims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", u.astype(cdt),
+                        params["in_proj"].astype(cdt))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = xBC[:, 0].astype(jnp.float32)  # (B, conv_dim)
+
+    # conv window update
+    window = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,k,D)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkd,kd->bd", window, w) + params["conv_b"].astype(
+        jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    x, Bm, Cm, dt, log_g = _ssd_inputs(cfg, params, conv_out[:, None, :],
+                                       dt_raw)
+    xh = x[:, 0].reshape(B, nh, hd)
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (B, nh, ds))
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (B, nh, ds))
+    v = xh * dt[:, 0, :, None]
+    y, state = gla_step(q, k, v, log_g[:, 0], cache["state"])
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner)
+
+    y = rms_norm(y, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32))
+    out = jnp.einsum("bsp,pd->bsd", y.astype(cdt), params["out_proj"].astype(cdt))
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, truly recurrent) — arXiv:2405.04517.
+
+mLSTM is gated linear attention with exponential input gates and sigmoid
+forget gates plus a normalizer state:
+
+    C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ      n_t = f_t·n_{t-1} + i_t·k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+We run it on the shared ``chunked_gla`` core by (a) folding the input gate
+into k and (b) appending a ones-column to v so the same scan produces the
+normalizer — one recurrence, two readouts.  TPU adaptation note (DESIGN.md):
+the original CUDA kernels stabilize exponential gates with a running
+max-state; on the chunked path we instead clamp the input-gate pre-activation
+(|ĩ| ≤ 10), which keeps f32 chunk math finite with sigmoid forget gates.
+
+sLSTM keeps per-head scalar states with hidden-state feedback (R·h_{t-1}),
+which makes it sequential by construction; it runs as ``lax.scan`` over time
+with the paper's log-space max stabilizer.  This is the honest cost of sLSTM
+on any hardware — the xLSTM paper itself places few sLSTM layers for this
+reason.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import (
+    ParamDef,
+    dtype_of,
+    fan_in_init,
+    normal_init,
+    ones_init,
+    rms_norm,
+    zeros_init,
+)
+from repro.models.gla import chunked_gla, gla_step
+
+__all__ = [
+    "mlstm_defs", "mlstm_block", "mlstm_cache_defs", "mlstm_decode",
+    "slstm_defs", "slstm_block", "slstm_cache_defs", "slstm_decode",
+]
+
+_ICLAMP = 10.0
+
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model  # projected inner width
+    nh = cfg.n_heads
+    dh = d_in // nh
+    return d_in, nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, nh, dh = _mdims(cfg)
+    pdt = dtype_of(cfg.param_dtype)
+    return {
+        "up_proj": ParamDef((d, 2 * d_in), ("embed_fsdp", "conv_dim"),
+                            fan_in_init(0), pdt),
+        "conv_w": ParamDef((cfg.ssm_conv, d_in), (None, "conv_dim"),
+                           normal_init(0.1), pdt),
+        "conv_b": ParamDef((d_in,), ("conv_dim",), zeros_init(), pdt),
+        "wq": ParamDef((d_in, nh, dh), ("conv_dim", "ssm_heads", None),
+                       fan_in_init(0), pdt),
+        "wk": ParamDef((d_in, nh, dh), ("conv_dim", "ssm_heads", None),
+                       fan_in_init(0), pdt),
+        "wv": ParamDef((d_in, nh, dh), ("conv_dim", "ssm_heads", None),
+                       fan_in_init(0), pdt),
+        "w_if": ParamDef((d_in, nh, 2), ("conv_dim", "ssm_heads", None),
+                         normal_init(0.02), jnp.float32),
+        "b_if": ParamDef((nh, 2), ("ssm_heads", None), zeros_init(), jnp.float32),
+        "norm_scale": ParamDef((d_in,), (None,), ones_init(), jnp.float32),
+        "down_proj": ParamDef((d_in, d), ("conv_dim", "embed_fsdp"),
+                              fan_in_init(0), pdt),
+    }
+
+
+def mlstm_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    d_in, nh, dh = _mdims(cfg)
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, d_in),
+                         ("batch", None, "conv_dim"), zeros_init(), jnp.float32),
+        "state": ParamDef((batch, nh, dh, dh + 1),
+                          ("batch", "ssm_heads", None, None),
+                          zeros_init(), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b):
+    kk = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
+    return jax.nn.silu(sum(xp[:, j:j + S, :] * w[j] for j in range(kk)) + b)
+
+
+def _mlstm_qkvg(params, xc, cfg):
+    """Projections + gates from the conv output. xc: (B,S,d_in) f32."""
+    d_in, nh, dh = _mdims(cfg)
+    q = jnp.einsum("bsp,phk->bshk", xc, params["wq"].astype(jnp.float32))
+    k = jnp.einsum("bsp,phk->bshk", xc, params["wk"].astype(jnp.float32))
+    v = jnp.einsum("bsp,phk->bshk", xc, params["wv"].astype(jnp.float32))
+    q = q / jnp.sqrt(jnp.float32(dh))
+    gates = jnp.einsum("bsp,phg->bshg", xc, params["w_if"].astype(jnp.float32))
+    gates = gates + params["b_if"].astype(jnp.float32)
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+    log_f = jax.nn.log_sigmoid(f_pre)  # ≤ 0: safe decay
+    i_gate = jnp.exp(jnp.clip(i_pre, -_ICLAMP, _ICLAMP))  # clamped exp gate
+    return q, k * i_gate[..., None], v, log_f
+
+
+def _mlstm_readout(y_aug):
+    """Split [values | normalizer] and normalize (denominator floor 1.0)."""
+    y, den = y_aug[..., :-1], y_aug[..., -1:]
+    return y / jnp.maximum(jnp.abs(den), 1.0)
+
+
+def mlstm_block(params, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = u.shape
+    d_in, nh, dh = _mdims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+    zx = jnp.einsum("bsd,dp->bsp", u.astype(cdt), params["up_proj"].astype(cdt))
+    z, x_in = jnp.split(zx, 2, axis=-1)
+    xc = _causal_conv(x_in.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32),
+                      params["conv_b"].astype(jnp.float32))
+    q, k, v, log_f = _mlstm_qkvg(params, xc, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    from repro.models.ssm import _gla
+
+    y_aug, _ = _gla(cfg, q, k, v_aug, log_f)
+    h = _mlstm_readout(y_aug).reshape(B, S, d_in)
+    h = constrain(h, "batch", "seq", "conv_dim")
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsp,pd->bsd", h.astype(cdt), params["down_proj"].astype(cdt))
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mlstm_decode(params, u, cache, cfg: ModelConfig):
+    B = u.shape[0]
+    d_in, nh, dh = _mdims(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+    zx = jnp.einsum("bsd,dp->bsp", u.astype(cdt), params["up_proj"].astype(cdt))
+    z, x_in = jnp.split(zx, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], x_in.astype(jnp.float32)], axis=1)
+    w = params["conv_w"].astype(jnp.float32)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w) +
+                     params["conv_b"].astype(jnp.float32))[:, None, :]
+    q, k, v, log_f = _mlstm_qkvg(params, xc, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, state = gla_step(q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0],
+                            cache["state"])
+    h = _mlstm_readout(y_aug).reshape(B, 1, d_in)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsp,pd->bsd", h.astype(cdt), params["down_proj"].astype(cdt))
+    return out, {"conv": window[:, 1:], "state": state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    pdt = dtype_of(cfg.param_dtype)
+    return {
+        # the hidden dim dh is sharded over the model axis ("slstm_dh") on
+        # the OUTPUT side of the recurrent weights: the per-step rec result
+        # and all gate/cell states stay local shards, the only per-step
+        # collective is the tiny all-gather of h for the next contraction,
+        # and the dR weight-gradient psum XLA otherwise emits every timestep
+        # becomes a local sharded accumulation
+        "w_in": ParamDef((d, nh, 4, dh),
+                         ("embed_fsdp", "ssm_heads", None, "slstm_dh"),
+                         fan_in_init(0), pdt),
+        # block-diagonal recurrent weights: per-head (dh, 4, dh)
+        "r": ParamDef((nh, dh, 4, dh), ("ssm_heads", None, None, "slstm_dh"),
+                      fan_in_init(1), jnp.float32),
+        "bias": ParamDef((nh, 4, dh), ("ssm_heads", None, "slstm_dh"),
+                         zeros_init(), jnp.float32),
+        "norm_scale": ParamDef((d,), (None,), ones_init(), jnp.float32),
+        "out_proj": ParamDef((d, d), ("embed_fsdp", "embed"), fan_in_init(0), pdt),
+    }
+
+
+def slstm_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    shape = (batch, nh, dh)
+    axes = ("batch", "ssm_heads", "slstm_dh")
+    return {name: ParamDef(shape, axes, zeros_init(), jnp.float32)
+            for name in ("c", "n", "h", "m")}
+
+
+def _slstm_cell(r, bias, wx_t, state):
+    """One sLSTM time step with log-space stabilizer.
+
+    wx_t: (B, nh, 4, dh) input contribution; state: dict of (B, nh, dh).
+    """
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhk,hkgd->bhgd", h, r)  # (B, nh, 4, dh)
+    pre = wx_t + rec + bias
+    i_pre, f_pre, z_pre, o_pre = (pre[:, :, 0], pre[:, :, 1], pre[:, :, 2],
+                                  pre[:, :, 3])
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)  # stabilizer state
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(params, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = u.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    cdt = dtype_of(cfg.compute_dtype)
+    wx = jnp.einsum("bsd,dhgk->bshgk", u.astype(cdt),
+                    params["w_in"].astype(cdt)).astype(jnp.float32)
+    state0 = {k: jnp.zeros((B, nh, dh), jnp.float32) for k in ("c", "n", "h")}
+    state0["m"] = jnp.full((B, nh, dh), -1e30, jnp.float32)
+    r = params["r"].astype(jnp.float32)
+    bias = params["bias"].astype(jnp.float32)
+
+    def step(state, wx_t):
+        new = _slstm_cell(r, bias, wx_t, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d)  # (B,S,nh*dh)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h.astype(cdt), params["out_proj"].astype(cdt))
+    return constrain(out, "batch", "seq", "embed")
+
+
+def slstm_decode(params, u, cache, cfg: ModelConfig):
+    B = u.shape[0]
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    cdt = dtype_of(cfg.compute_dtype)
+    wx = jnp.einsum("bsd,dhgk->bshgk", u.astype(cdt),
+                    params["w_in"].astype(cdt)).astype(jnp.float32)[:, 0]
+    new = _slstm_cell(params["r"].astype(jnp.float32),
+                      params["bias"].astype(jnp.float32), wx, cache)
+    h = new["h"].reshape(B, 1, d)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h.astype(cdt), params["out_proj"].astype(cdt))
+    return out, new

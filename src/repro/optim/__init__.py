@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from .adamw import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_at,
+    opt_state_defs,
+)
+from .compression import COMPRESSIONS, compress_grads, compression_init
+
+__all__ = [n for n in dir() if not n.startswith("_")]

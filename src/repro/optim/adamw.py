@@ -1,0 +1,109 @@
+"""AdamW with f32 moments, global-norm clipping and LR schedules — pure
+pytree functions (no optax dependency)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "adamw_init", "adamw_update", "lr_at",
+           "global_norm", "clip_by_global_norm", "opt_state_defs"]
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.learning_rate * warm * decay
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros32, params),
+        "nu": jax.tree_util.tree_map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_defs(param_defs):
+    """ParamDef tree for the optimizer state (moments shard like params)."""
+    from repro.models.common import ParamDef, zeros_init
+
+    def moment(d):
+        return ParamDef(d.shape, d.axes, zeros_init(), jnp.float32)
+
+    is_def = lambda x: isinstance(x, ParamDef)
+    return {
+        "mu": jax.tree_util.tree_map(moment, param_defs, is_leaf=is_def),
+        "nu": jax.tree_util.tree_map(moment, param_defs, is_leaf=is_def),
+        "step": ParamDef((), (), zeros_init(), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                  tree), norm
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig):
+    """One AdamW step. grads may be any float dtype; math runs in f32."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu_n = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu_n = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mhat = mu_n / b1c
+        vhat = nu_n / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_n = p32 - lr * (delta + cfg.weight_decay * p32)
+        return p_n.astype(p.dtype), mu_n, nu_n
+
+    out = jax.tree_util.tree_map(upd, grads, opt_state["mu"], opt_state["nu"],
+                                 params)
+    # unzip the 3-tuples
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, lr

@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two schemes, both with per-leaf error-feedback accumulators so the bias is
+corrected over steps (Karimireddy et al., "EF-SGD"):
+
+* ``int8``  — per-tensor symmetric linear quantization (32x -> 8x bytes on
+  the wire when paired with int8 reduce-scatter on real fabric),
+* ``topk``  — keep the largest-|g| fraction, zero the rest (sparse push).
+
+In this SPMD codebase the gradients are reduced implicitly by the XLA
+partitioner, so compression is applied *around* the reduction point: the
+train step quantizes (grad + error), dequantizes for the update, and carries
+the residual.  On a real pod the same hooks pair with int8 collectives; the
+numerics — which is what tests can verify — are identical.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compression_init", "compress_grads", "COMPRESSIONS"]
+
+COMPRESSIONS = ("none", "int8", "topk")
+
+
+def compression_init(params, scheme: str):
+    if scheme == "none":
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g32: jax.Array) -> jax.Array:
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g32: jax.Array, frac: float) -> jax.Array:
+    flat = g32.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g32) >= thresh, g32, 0.0)
+
+
+def compress_grads(
+    grads, error: Optional[Any], scheme: str, topk_frac: float = 0.05
+) -> Tuple[Any, Optional[Any]]:
+    """Returns (decompressed grads to apply, new error-feedback state)."""
+    if scheme == "none":
+        return grads, error
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if scheme == "int8":
+            out = _int8_roundtrip(g32)
+        elif scheme == "topk":
+            out = _topk_roundtrip(g32, topk_frac)
+        else:
+            raise ValueError(f"unknown compression {scheme!r}")
+        return out.astype(g.dtype), g32 - out
+
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    new_grads = jax.tree_util.tree_map(
+        lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_error = jax.tree_util.tree_map(
+        lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_error

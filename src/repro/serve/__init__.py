@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill + KV-cache decode engine."""
+from .engine import GenerationResult, ServeConfig, ServeEngine
+
+__all__ = ["GenerationResult", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,141 @@
+"""Batched serving engine: prefill + KV-cache decode with slot admission.
+
+Scope: fixed-capacity batch slots, greedy or temperature sampling, EOS
+early-exit, equal-length prompt batching (the paged-attention/continuous-
+batching generalization is out of scope for this repro; the restriction is
+documented in DESIGN.md).  The decode step is the same ``serve_step`` the
+dry-run lowers for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models import Model
+
+__all__ = ["ServeConfig", "ServeEngine", "GenerationResult"]
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int = 2048
+    batch_slots: int = 8
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[List[int]]  # generated continuations (per request)
+    prefill_seconds: float
+    decode_seconds: float
+    steps: int
+
+    @property
+    def decode_tokens_per_sec(self) -> float:
+        n = sum(len(t) for t in self.tokens)
+        return n / max(self.decode_seconds, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(
+        self,
+        prompts: Sequence[Sequence[int]],
+        max_new_tokens: int,
+        frontend_embeds: Optional[np.ndarray] = None,
+    ) -> GenerationResult:
+        """Generate continuations for a batch of equal-length prompts.
+
+        Requests are packed into ``batch_slots``-sized waves; a short final
+        wave is padded with dummy prompts (their outputs are discarded).
+        """
+        lens = {len(p) for p in prompts}
+        if len(lens) != 1:
+            raise ValueError("engine batches equal-length prompts; "
+                             f"got lengths {sorted(lens)}")
+        (plen,) = lens
+        if plen + max_new_tokens > self.cfg.max_seq:
+            raise ValueError("prompt + generation exceeds max_seq")
+
+        slots = self.cfg.batch_slots
+        outputs: List[List[int]] = []
+        prefill_s = decode_s = 0.0
+        steps = 0
+        for wave_start in range(0, len(prompts), slots):
+            wave = list(prompts[wave_start:wave_start + slots])
+            n_real = len(wave)
+            while len(wave) < slots:
+                wave.append(wave[0])  # pad with a copy; discarded later
+            fe = None
+            if frontend_embeds is not None:
+                fe = frontend_embeds[wave_start:wave_start + slots]
+                if fe.shape[0] < slots:
+                    reps = np.repeat(fe[:1], slots - fe.shape[0], axis=0)
+                    fe = np.concatenate([fe, reps], axis=0)
+            toks, pf, dc, st = self._generate_wave(
+                np.asarray(wave, np.int32), max_new_tokens, fe)
+            outputs.extend(toks[:n_real])
+            prefill_s += pf
+            decode_s += dc
+            steps += st
+        return GenerationResult(outputs, prefill_s, decode_s, steps)
+
+    def _generate_wave(self, prompt_arr: np.ndarray, max_new: int,
+                       frontend_embeds) -> Any:
+        B, P = prompt_arr.shape
+        cache = self.model.init_cache(B, max_seq=self.cfg.max_seq)
+        batch = {"tokens": jnp.asarray(prompt_arr)}
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits.block_until_ready()
+        prefill_s = time.time() - t0
+
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        out = np.zeros((B, max_new), np.int64)
+        done = np.zeros(B, bool)
+        t0 = time.time()
+        produced = 0
+        for step in range(max_new):
+            tok = self._sample(logits, rng, step)
+            out[:, step] = np.asarray(tok[:, 0])
+            produced = step + 1
+            if self.cfg.eos_token is not None:
+                done |= out[:, step] == self.cfg.eos_token
+                if done.all():
+                    break
+            if produced < max_new:
+                logits, cache = self._decode(self.params, tok, cache)
+        decode_s = time.time() - t0
+
+        results = []
+        for b in range(B):
+            toks = out[b, :produced].tolist()
+            if self.cfg.eos_token is not None and self.cfg.eos_token in toks:
+                toks = toks[:toks.index(self.cfg.eos_token) + 1]
+            results.append(toks)
+        return results, prefill_s, decode_s, produced
+
+    def _sample(self, logits, rng, step):
+        lg = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1, keepdims=True).astype(jnp.int32)
+        key = jax.random.fold_in(rng, step)
+        return jax.random.categorical(
+            key, lg / self.cfg.temperature, axis=-1)[:, None].astype(jnp.int32)

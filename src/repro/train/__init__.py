@@ -1,0 +1,5 @@
+"""Training substrate: step factories, knobs, fault-tolerant loop."""
+from .loop import SimulatedFailure, TrainLoopConfig, train
+from .step import RunKnobs, init_train_state, make_serve_step, make_train_step
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,147 @@
+"""Train/serve step factories — where the execution knobs live.
+
+``RunKnobs`` is the configuration surface of the distributed runtime: remat
+policy, microbatch count, loss chunking, MoE group size, gradient
+compression, sharding-rule preset.  These are exactly the knobs
+``repro.core.sut_jax`` exposes to the ACTS tuner — the paper's "configuration
+setting" for this system.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    compression_init,
+)
+
+__all__ = ["RunKnobs", "make_train_step", "make_serve_step", "init_train_state"]
+
+
+@dataclass(frozen=True)
+class RunKnobs:
+    rules_preset: str = "fsdp_tp"  # dp | tp | fsdp_tp (sharding-rule preset)
+    remat: str = "full"  # none | full | dots
+    microbatches: int = 4
+    loss_chunk: int = 512  # 0 = unchunked cross-entropy
+    moe_group: int = 4096
+    compression: str = "none"  # none | int8 | topk
+    donate: bool = True
+    seq_shard: bool = False  # sequence parallelism for long prefill
+    sp_residual: bool = False  # Megatron-SP: shard residual stream on seq
+    kv_seq_shard: bool = False  # shard decode KV cache along sequence
+    expert_tp: bool = False  # TP inside experts (expert_ff -> model)
+    pad_heads: bool = False  # pad query heads to a shardable multiple (16)
+    head_dim_shard: bool = False  # shard attention on head_dim, not heads
+    attn_impl: Optional[str] = None  # override ModelConfig.attn_impl
+    attn_block_q: int = 0  # 0 = keep ModelConfig default
+    attn_block_kv: int = 0
+    scan_unroll: int = 1
+
+    def axis_rules(self):
+        from repro.dist.sharding import RULE_PRESETS
+
+        rules = RULE_PRESETS[self.rules_preset]
+        if self.seq_shard:
+            rules = rules.replace(seq="model")
+        if self.sp_residual:
+            rules = rules.replace(seq_res="model")
+        if self.kv_seq_shard:
+            rules = rules.replace(kv_seq="model")
+        if self.expert_tp:
+            rules = rules.replace(expert_ff="model")
+        if self.head_dim_shard:
+            rules = rules.replace(heads=None, kv_heads=None,
+                                  head_dim="model")
+        return rules
+
+
+def init_train_state(model: Model, rng, knobs: RunKnobs):
+    params = model.init(rng)
+    opt_state = adamw_init(params)
+    if knobs.compression != "none":
+        opt_state["error"] = compression_init(params, knobs.compression)
+    return params, opt_state
+
+
+def make_train_step(
+    model: Model, opt_cfg: OptimizerConfig, knobs: RunKnobs
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Microbatching runs as a scan with f32 gradient accumulation
+    (compute of microbatch i overlaps the reduction of i-1 under XLA's
+    latency-hiding scheduler on real hardware)."""
+
+    def loss_fn(params, mb):
+        total, metrics = model.loss(
+            params, mb, remat=knobs.remat, loss_chunk=knobs.loss_chunk,
+            moe_group=knobs.moe_group)
+        return total, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        k = knobs.microbatches
+        if k <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(k, b // k, *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(reshape, batch)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc_g, acc_l, acc_m = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc_g, g)
+                acc_m = jax.tree_util.tree_map(lambda a, x: a + x, acc_m, m)
+                return (acc_g, acc_l + l, acc_m), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": 0.0, "aux_loss": 0.0, "accuracy": 0.0,
+                      "tokens": 0.0}
+            zero_m = jax.tree_util.tree_map(jnp.float32, zero_m)
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (zero_g, jnp.float32(0.0), zero_m), mbs,
+                unroll=knobs.scan_unroll)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = loss / k
+            metrics = jax.tree_util.tree_map(lambda x: x / k, metrics)
+
+        new_opt = dict(opt_state)
+        if knobs.compression != "none":
+            grads, new_err = compress_grads(grads, opt_state["error"],
+                                            knobs.compression)
+            new_opt["error"] = new_err
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        core_state = {k2: new_opt[k2] for k2 in ("mu", "nu", "step")}
+        new_params, core_state, lr = adamw_update(grads, core_state, params,
+                                                  opt_cfg)
+        new_opt.update(core_state)
+        metrics = dict(metrics, grad_norm=gnorm, learning_rate=lr,
+                       total_loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, cache, tokens) -> (logits, new_cache): one decode
+    step of one new token per sequence against the KV cache."""
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, tokens, cache)
+
+    return serve_step

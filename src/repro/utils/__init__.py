@@ -1,0 +1,4 @@
+from . import hlo
+from .flops import model_flops
+
+__all__ = ["hlo", "model_flops"]

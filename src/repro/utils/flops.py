@@ -1,0 +1,38 @@
+"""Analytic MODEL_FLOPS: 6·N·D for dense training, 6·N_active·D for MoE,
+2·N·D for inference (decode/prefill) — the "useful compute" yardstick the
+roofline report compares against compiled HLO FLOPs."""
+from __future__ import annotations
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import count_params
+
+__all__ = ["model_flops", "active_params"]
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k of E experts)."""
+    n = count_params(cfg)
+    if cfg.moe:
+        from repro.models.moe import moe_defs
+        from repro.models.common import count_def_params
+
+        moe_per_block = count_def_params(moe_defs(cfg))
+        n_moe_blocks = sum(1 for k in cfg.superblock if k.startswith("moe")) \
+            * cfg.n_superblocks
+        total_moe = moe_per_block * n_moe_blocks
+        frac = cfg.moe.experts_per_token / cfg.moe.n_experts
+        n = n - total_moe + int(total_moe * frac)
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Total useful FLOPs for one step of the given shape (whole cluster)."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch

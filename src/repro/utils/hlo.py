@@ -1,0 +1,126 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, remat detection.
+
+``compiled.as_text()`` is the optimized per-device module after the SPMD
+partitioner has inserted collectives, so operand shapes are *shard* shapes.
+We build an id -> bytes map from every instruction definition, then sum
+operand bytes for each collective op — per-device collective traffic, which
+``roofline.py`` converts into the collective roofline term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["CollectiveStats", "parse_collectives", "dtype_bytes",
+           "parse_shape_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# %name = bf16[2,16,128]{2,1,0} op-name(%a, %b), ...
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}: ]+?))\s+"
+    r"([\w\-]+)(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, int] = field(default_factory=dict)  # kind -> count
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    total_bytes: int = 0  # per-device operand bytes across all collectives
+
+    def summary(self) -> str:
+        if not self.ops:
+            return "no collectives"
+        parts = [f"{k}×{self.ops[k]} ({self.bytes_by_kind[k] / 1e6:.1f}MB)"
+                 for k in sorted(self.ops)]
+        return ", ".join(parts) + f"; total {self.total_bytes / 1e6:.1f}MB"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # Pass 1: instruction id -> result bytes.
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _op = m.groups()
+        sizes[name] = parse_shape_bytes(type_str)
+
+    # Pass 2: collective lines; sum operand bytes.
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((c for c in COLLECTIVE_OPS if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.startswith(f"{kind}-start"):
+            kind = kind  # async start carries the payload
+        elif op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        # operands: everything inside the first (...) group
+        try:
+            args = line.split("(", 1)[1]
+            args = args.split(")", 1)[0]
+        except IndexError:
+            args = ""
+        operand_bytes = 0
+        for om in _OPERAND_RE.finditer(args):
+            operand_bytes += sizes.get(om.group(1), 0)
+        if operand_bytes == 0:
+            operand_bytes = parse_shape_bytes(type_str)  # fallback: result
+        stats.ops[kind] = stats.ops.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + \
+            operand_bytes
+        stats.total_bytes += operand_bytes
+    return stats
+
+
+def count_ops(hlo_text: str, ops: Tuple[str, ...] = ("fusion", "dot",
+                                                     "convolution",
+                                                     "custom-call")) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line.strip())
+        if m:
+            op = m.group(3)
+            for o in ops:
+                if op.startswith(o):
+                    counts[o] += 1
+    return dict(counts)

@@ -1,0 +1,320 @@
+"""Trip-count-aware static cost analysis of post-SPMD HLO.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any program
+built on ``lax.scan`` (layer stacks, microbatching, chunked attention/GLA)
+underreports FLOPs, bytes and collective traffic by the trip count.  This
+module re-derives the three roofline inputs from the HLO text itself:
+
+* parse every computation and its instructions,
+* build the call graph (while bodies/conditions, fusions, calls, branches),
+* extract while trip counts from the canonical `compare(iv, constant)`
+  condition pattern (what scan lowers to),
+* propagate execution multipliers from ENTRY,
+* FLOPs      = Σ dot/conv flops × multiplier            (MXU work),
+* bytes      = Σ (operands + results) of top-level memory ops × multiplier
+               (fusion-boundary traffic — XLA's own bytes-accessed notion),
+* collectives = Σ operand bytes of collective ops × multiplier.
+
+All quantities are per-device (the module is the SPMD per-device program).
+This is a static estimate: elementwise flops inside fusions are ignored
+(matmul-dominated workloads) and fusion-internal reuse is invisible — both
+noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_HEADER_PARAM = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\/ ]+?))\s+"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_ATTR_COMP = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_DIMS_ATTR = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_ATTR = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that do not move data at fusion-boundary granularity
+_NO_MEM = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+           "after-all", "token", "while", "conditional", "call", "iota",
+           "partition-id", "replica-id"}
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr] = field(default_factory=list)
+    is_entry: bool = False
+    param_types: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0  # every fusion boundary (upper bound)
+    mem_bytes: float = 0.0  # memory-op traffic: dot/slice/gather/collective
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+    unresolved_trips: List[str] = field(default_factory=list)
+
+
+# ops whose operands/results genuinely stream HBM on TPU (elementwise chains
+# fuse into their producers/consumers and are excluded)
+_MEM_OPS = ("dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+            "gather", "scatter", "copy") + tuple(COLLECTIVES)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _parse_computations(hlo: str) -> List[_Comp]:
+    comps: List[_Comp] = []
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line):
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = _Comp(m.group(1), is_entry=line.startswith("ENTRY"))
+                # record parameter names -> types (dot operands may be params)
+                header_args = line.split("(", 1)[1].rsplit("->", 1)[0]
+                for pm in _HEADER_PARAM.finditer(header_args):
+                    cur.param_types[pm.group(1)] = pm.group(2)
+                comps.append(cur)
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, op = m.groups()
+            cur.instrs.append(_Instr(name, type_str, op, line))
+    return comps
+
+
+def _dot_flops(instr: _Instr, sizes: Dict[str, str]) -> float:
+    """2 × |output| × contracted-dim-product for a dot instruction."""
+    out = _shape_dims(instr.type_str)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracted size from the lhs operand's shape + contracting dims attr
+    mdims = _DIMS_ATTR.search(instr.line)
+    ops = _OPERAND.findall(instr.line.split("(", 1)[1])
+    contracted = 1
+    if mdims and ops:
+        lhs_type = sizes.get(ops[0])
+        if lhs_type:
+            parsed = _shape_dims(lhs_type)
+            if parsed:
+                _, lhs_dims = parsed
+                idxs = [int(i) for i in mdims.group(1).split(",") if i]
+                for i in idxs:
+                    if i < len(lhs_dims):
+                        contracted *= lhs_dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+    by_name = {c.name: c for c in comps}
+    # instruction result types (global namespace is fine: names are unique)
+    sizes: Dict[str, str] = {}
+    for c in comps:
+        sizes.update(c.param_types)
+        for ins in c.instrs:
+            sizes[ins.name] = ins.type_str
+
+    cost = HloCost()
+
+    # ---- trip counts for while conditions --------------------------------
+    def trip_of(cond_name: str) -> Optional[int]:
+        cond = by_name.get(cond_name)
+        if cond is None:
+            return None
+        consts: Dict[str, int] = {}
+        for ins in cond.instrs:
+            m = _CONSTANT.search(ins.line)
+            if m and ins.op == "constant":
+                consts[ins.name] = int(m.group(1))
+        for ins in cond.instrs:
+            if ins.op == "compare" and ("direction=LT" in ins.line
+                                        or "direction=GT" in ins.line):
+                ops = _OPERAND.findall(ins.line.split("(", 1)[1])
+                for o in ops:
+                    if o in consts:
+                        return consts[o]
+        return None
+
+    # ---- call edges -------------------------------------------------------
+    # caller -> [(callee, kind)], kind in {body, cond, fusion/call/branch}
+    edges: Dict[str, List[Tuple[str, float]]] = {c.name: [] for c in comps}
+    for c in comps:
+        for ins in c.instrs:
+            if ins.op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                # preferred: XLA's own annotation on the while op
+                mt = _TRIP_CFG.search(ins.line)
+                trip = int(mt.group(1)) if mt else None
+                if trip is None and cond:
+                    trip = trip_of(cond)  # fallback: parse the condition
+                cost.n_while += 1
+                if trip is None:
+                    trip = 1
+                    cost.unresolved_trips.append(ins.name)
+                else:
+                    cost.trip_counts[ins.name] = trip
+                if body:
+                    edges[c.name].append((body, float(trip)))
+                if cond:
+                    edges[c.name].append((cond, float(trip + 1)))
+            else:
+                m2 = _BRANCHES.search(ins.line)
+                if m2:
+                    for b in _OPERAND.findall(m2.group(1)):
+                        edges[c.name].append((b, 1.0))
+                for m in _ATTR_COMP.finditer(ins.line):
+                    key = m.group(0).split("=")[0]
+                    if key in ("calls", "to_apply"):
+                        edges[c.name].append((m.group(1), 1.0))
+
+    # ---- propagate multipliers from ENTRY ---------------------------------
+    mult: Dict[str, float] = {c.name: 0.0 for c in comps}
+    for c in comps:
+        if c.is_entry:
+            mult[c.name] = 1.0
+    # call graph is a DAG; a few passes reach the fixpoint
+    for _ in range(64):
+        changed = False
+        new = {c.name: (1.0 if c.is_entry else 0.0) for c in comps}
+        for caller, outs in edges.items():
+            for callee, factor in outs:
+                if callee in new:
+                    new[callee] += mult.get(caller, 0.0) * factor
+        for k in mult:
+            if abs(new[k] - mult[k]) > 1e-9 * max(1.0, abs(mult[k])):
+                changed = True
+        mult = new
+        if not changed:
+            break
+
+    # ---- accumulate costs --------------------------------------------------
+    for c in comps:
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        for ins in c.instrs:
+            if ins.op in ("dot", "convolution"):
+                cost.flops += m * _dot_flops(ins, sizes)
+            kind = next((k for k in COLLECTIVES if ins.op.startswith(k)), None)
+            if kind and not ins.op.endswith("-done"):
+                try:
+                    args = ins.line.split("(", 1)[1].split(")", 1)[0]
+                except IndexError:
+                    args = ""
+                ob = sum(_type_bytes(sizes.get(o, ""))
+                         for o in _OPERAND.findall(args))
+                if ob == 0:
+                    ob = _type_bytes(ins.type_str)
+                d = cost.collectives.setdefault(kind,
+                                                {"count": 0.0, "bytes": 0.0})
+                d["count"] += m
+                d["bytes"] += m * ob
+                cost.collective_bytes += m * ob
+            if ins.op in _NO_MEM or ins.op.endswith("-done"):
+                continue
+            try:
+                args = ins.line.split("(", 1)[1].split(")", 1)[0]
+                operand_bytes = sum(_type_bytes(sizes.get(o, ""))
+                                    for o in _OPERAND.findall(args))
+            except IndexError:
+                operand_bytes = 0
+            result_bytes = _type_bytes(ins.type_str)
+            cost.bytes_accessed += m * (result_bytes + operand_bytes)
+            # HBM traffic model per op class:
+            if ins.op.startswith("dynamic-slice"):
+                # reads only the slice (== result)
+                cost.mem_bytes += m * 2 * result_bytes
+            elif ins.op.startswith("dynamic-update-slice"):
+                # reads + writes the updated region (operand 1); the full
+                # buffer aliases in place
+                ops_list = _OPERAND.findall(args)
+                upd = _type_bytes(sizes.get(ops_list[1], "")) if len(
+                    ops_list) > 1 else result_bytes
+                cost.mem_bytes += m * 2 * upd
+            elif ins.op.startswith(("gather", "scatter")):
+                cost.mem_bytes += m * 2 * result_bytes
+            elif ins.op.startswith(("dot", "convolution", "copy")) or any(
+                    ins.op.startswith(c) for c in COLLECTIVES):
+                cost.mem_bytes += m * (result_bytes + operand_bytes)
+            elif ins.op == "fusion":
+                # a fusion containing real compute streams its boundary; pure
+                # elementwise fusions do too, at the producer/consumer — but
+                # counting every one double-counts chains, so only fusions
+                # with a dot/gather/slice inside (kLoop wrappers) are charged
+                callee = _ATTR_COMP.search(ins.line)
+                inner = by_name.get(callee.group(1)) if callee else None
+                if inner and any(i2.op in ("dot", "convolution", "gather",
+                                           "scatter", "dynamic-slice",
+                                           "dynamic-update-slice")
+                                 for i2 in inner.instrs):
+                    # charge result + slice-corrected operands
+                    cost.mem_bytes += m * (result_bytes + min(
+                        operand_bytes, 4 * result_bytes))
+    return cost

@@ -1,0 +1,113 @@
+"""Unit + property tests for ACTS parameter spaces."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BoolParam,
+    EnumParam,
+    FloatParam,
+    IntParam,
+    ParameterSpace,
+)
+
+
+def make_space():
+    return ParameterSpace(
+        [
+            BoolParam("flag", default=True),
+            EnumParam("mode", ("a", "b", "c"), default="b"),
+            IntParam("count", 1, 100, default=10),
+            IntParam("size", 1, 2**20, default=64, log=True),
+            FloatParam("ratio", 0.0, 1.0, default=0.5),
+            FloatParam("rate", 1e-6, 1.0, default=1e-3, log=True),
+        ]
+    )
+
+
+class TestRoundTrip:
+    @given(st.floats(min_value=0.0, max_value=1.0, exclude_max=True))
+    @settings(max_examples=100, deadline=None)
+    def test_unit_roundtrip_stable(self, u):
+        """from_unit → to_unit → from_unit must be a fixed point."""
+        for p in make_space():
+            v1 = p.from_unit(u)
+            v2 = p.from_unit(p.to_unit(v1))
+            assert v1 == v2, f"{p.name}: {v1} != {v2} at u={u}"
+
+    @given(st.lists(st.floats(0.0, 1.0, exclude_max=True), min_size=6, max_size=6))
+    @settings(max_examples=50, deadline=None)
+    def test_vector_roundtrip(self, us):
+        space = make_space()
+        cfg = space.from_unit_vector(np.array(us))
+        space.validate(cfg)
+        cfg2 = space.from_unit_vector(space.to_unit_vector(cfg))
+        assert cfg == cfg2
+
+    def test_bounds_respected(self):
+        space = make_space()
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            cfg = space.random_config(rng)
+            space.validate(cfg)
+            assert 1 <= cfg["count"] <= 100
+            assert 1 <= cfg["size"] <= 2**20
+            assert 0.0 <= cfg["ratio"] <= 1.0
+            assert 1e-6 <= cfg["rate"] <= 1.0
+
+
+class TestSpace:
+    def test_default(self):
+        space = make_space()
+        d = space.default_config()
+        assert d["flag"] is True and d["mode"] == "b" and d["count"] == 10
+
+    def test_duplicate_names_rejected(self):
+        with pytest.raises(ValueError):
+            ParameterSpace([BoolParam("x"), BoolParam("x")])
+
+    def test_merge_prefix_and_subset(self):
+        a = ParameterSpace([BoolParam("x"), IntParam("y", 0, 5)])
+        b = ParameterSpace([BoolParam("x")])
+        m = a.merge(b, prefix="jvm.")
+        assert set(m.names) == {"x", "y", "jvm.x"}
+        s = m.subset(["y", "jvm.x"])
+        assert s.names == ["y", "jvm.x"]
+
+    def test_freeze(self):
+        space = make_space()
+        view = space.freeze({"mode": "c", "flag": False})
+        assert view.dim == space.dim - 2
+        cfg = view.from_unit_vector(np.full(view.dim, 0.3))
+        assert cfg["mode"] == "c" and cfg["flag"] is False
+        assert view.default_config()["mode"] == "c"
+
+    def test_log_cardinality(self):
+        sp = ParameterSpace([BoolParam("a"), EnumParam("b", (1, 2, 3, 4, 5))])
+        assert math.isclose(sp.log_cardinality(), math.log10(10))
+        assert math.isinf(make_space().log_cardinality())
+
+    def test_invalid_values_rejected(self):
+        space = make_space()
+        bad = space.default_config()
+        bad["count"] = 101
+        with pytest.raises(ValueError):
+            space.validate(bad)
+        missing = space.default_config()
+        del missing["mode"]
+        with pytest.raises(ValueError):
+            space.validate(missing)
+
+    def test_log_param_coverage(self):
+        """Log-scale knobs should spread samples across decades."""
+        p = IntParam("size", 1, 2**20, log=True)
+        vals = [p.from_unit(u) for u in np.linspace(0, 0.999, 50)]
+        decades = {int(math.log10(max(v, 1))) for v in vals}
+        assert len(decades) >= 5  # covers most of the 6-decade range
+
+    def test_enum_grid(self):
+        p = EnumParam("m", ("x", "y", "z"))
+        assert p.grid(30) == ["x", "y", "z"]

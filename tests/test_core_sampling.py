@@ -1,0 +1,82 @@
+"""Property tests for LHS: the paper's three sampling conditions (§4.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    MySQLSurrogate,
+    centered_l2_discrepancy,
+    lhs,
+    lhs_unit,
+    maximin_lhs,
+    min_pairwise_distance,
+    random_unit,
+    stratification_counts,
+)
+
+
+class TestLHSProperties:
+    @given(
+        m=st.integers(min_value=1, max_value=64),
+        dim=st.integers(min_value=1, max_value=20),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_stratification(self, m, dim, seed):
+        """Condition (1)+(3): every interval of every knob used exactly once."""
+        pts = lhs_unit(m, dim, np.random.default_rng(seed))
+        assert pts.shape == (m, dim)
+        assert (pts >= 0).all() and (pts < 1).all()
+        assert (stratification_counts(pts) == 1).all()
+
+    @given(
+        m=st.integers(min_value=1, max_value=50),
+        seed=st.integers(min_value=0, max_value=1000),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_exact_size(self, m, seed):
+        """Condition (2): |sample set| == resource limit, exactly."""
+        sut = MySQLSurrogate()
+        samples = lhs(sut.space(), m, np.random.default_rng(seed))
+        assert len(samples) == m
+        for cfg in samples:
+            sut.space().validate(cfg)
+
+    def test_maximin_is_still_lhs(self):
+        pts = maximin_lhs(20, 6, np.random.default_rng(0))
+        assert (stratification_counts(pts) == 1).all()
+
+    def test_coverage_scales_with_m(self):
+        """Condition (3): more budget ⇒ wider coverage (lower discrepancy)."""
+        rng = np.random.default_rng(42)
+        discs = []
+        for m in (8, 32, 128):
+            d = np.mean(
+                [centered_l2_discrepancy(lhs_unit(m, 4, rng)) for _ in range(10)]
+            )
+            discs.append(d)
+        assert discs[0] > discs[1] > discs[2]
+
+    def test_lhs_beats_random_coverage(self):
+        """LHS should be more uniform than iid-random at equal budget."""
+        rng = np.random.default_rng(7)
+        m, dim, reps = 32, 6, 20
+        lhs_d = np.mean(
+            [centered_l2_discrepancy(lhs_unit(m, dim, rng)) for _ in range(reps)]
+        )
+        rnd_d = np.mean(
+            [centered_l2_discrepancy(random_unit(m, dim, rng)) for _ in range(reps)]
+        )
+        assert lhs_d < rnd_d
+        lhs_md = np.mean(
+            [min_pairwise_distance(lhs_unit(m, dim, rng)) for _ in range(reps)]
+        )
+        rnd_md = np.mean(
+            [min_pairwise_distance(random_unit(m, dim, rng)) for _ in range(reps)]
+        )
+        assert lhs_md > rnd_md
+
+    def test_zero_and_one_sample(self):
+        assert lhs_unit(0, 3, np.random.default_rng(0)).shape == (0, 3)
+        assert lhs_unit(1, 3, np.random.default_rng(0)).shape == (1, 3)

@@ -1,0 +1,197 @@
+"""Integration tests for the ACTS flexible architecture (tuner ⇄ manipulator
+⇄ workload generator) and the paper's §5 case studies on surrogates."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CallableSUT,
+    ComposedSUT,
+    FrontendSurrogate,
+    MySQLSurrogate,
+    PerfMetric,
+    SparkSurrogate,
+    TomcatSurrogate,
+    TunableSystem,
+    Tuner,
+    identify_bottleneck,
+)
+
+
+class RecordingManipulator:
+    """System manipulator that records the apply/teardown lifecycle."""
+
+    def __init__(self, sut):
+        self.sut = sut
+        self.applied = []
+        self.torn_down = 0
+
+    def apply(self, config):
+        self.applied.append(config)
+        return config
+
+    def teardown(self, handle):
+        self.torn_down += 1
+
+
+class SurrogateWorkload:
+    def __init__(self, sut):
+        self.sut = sut
+
+    def run(self, handle):
+        return self.sut.test(handle)
+
+
+class TestFlexibleArchitecture:
+    def test_manipulator_workload_decoupling(self):
+        """The tuner must drive the SUT only through the two components."""
+        surrogate = MySQLSurrogate()
+        manip = RecordingManipulator(surrogate)
+        system = TunableSystem(manip, SurrogateWorkload(surrogate), name="mysql")
+        rep = Tuner(surrogate.space(), system, budget=20, seed=0).run()
+        assert rep.n_tests == 20
+        assert len(manip.applied) == 20  # every test restarted the SUT
+        assert manip.torn_down == 20  # and tore it down afterwards
+        assert rep.improvement > 1.0
+
+    def test_resource_limit_is_hard(self):
+        surrogate = MySQLSurrogate()
+        calls = []
+
+        def fn(cfg):
+            calls.append(cfg)
+            return surrogate.test(cfg)
+
+        Tuner(surrogate.space(), CallableSUT(fn), budget=13, seed=0).run()
+        assert len(calls) == 13
+
+    def test_duplicate_configs_do_not_burn_budget(self):
+        from repro.core import BoolParam, ParameterSpace
+
+        # 2-knob boolean space: only 4 distinct configs exist.
+        space = ParameterSpace([BoolParam("a"), BoolParam("b")])
+        calls = []
+
+        def fn(cfg):
+            calls.append(tuple(sorted(cfg.items())))
+            return PerfMetric(value=1.0 + cfg["a"] + 0.5 * cfg["b"])
+
+        rep = Tuner(space, CallableSUT(fn), budget=50, seed=0).run()
+        assert len(set(calls)) == len(calls)  # never re-tested a config
+        assert rep.n_tests <= 4
+        assert rep.best_config["a"] is True and rep.best_config["b"] is True
+
+    def test_default_tested_first_and_never_worse(self):
+        surrogate = TomcatSurrogate()
+        rep = Tuner(surrogate.space(), surrogate, budget=30, seed=5).run()
+        assert rep.history[0].phase == "default"
+        assert rep.best_metric.value >= rep.default_metric.value  # ACTS contract
+
+    def test_report_json_roundtrip(self):
+        surrogate = SparkSurrogate()
+        rep = Tuner(surrogate.space(), surrogate, budget=15, seed=0).run()
+        blob = json.loads(rep.to_json())
+        assert blob["n_tests"] == 15
+        assert blob["improvement"] == pytest.approx(rep.improvement)
+        assert len(blob["history"]) >= 15
+
+    def test_minimization_metrics_supported(self):
+        """Latency-style (lower-is-better) SUTs must tune correctly too."""
+        from repro.core import FloatParam, ParameterSpace
+
+        space = ParameterSpace([FloatParam("x", -2.0, 2.0, default=1.8)])
+
+        def fn(cfg):
+            return PerfMetric(value=cfg["x"] ** 2, higher_is_better=False)
+
+        rep = Tuner(space, CallableSUT(fn), budget=60, seed=0).run()
+        assert abs(rep.best_config["x"]) < 0.3
+        assert rep.improvement > 1.0  # ratio defined in user-facing direction
+
+
+class TestPaperCaseStudies:
+    def test_mysql_11x(self):
+        """§5.1: >11x throughput over default within a few hundred tests."""
+        sut = MySQLSurrogate("uniform_read")
+        rep = Tuner(sut.space(), sut, budget=200, seed=1).run()
+        assert rep.default_metric.value == pytest.approx(9815, rel=0.02)
+        assert rep.improvement > 10.0  # "more than 11 times" at the paper's budget
+        # the surface supports 12x; make sure head-room exists
+        assert rep.best_metric.value < 12.5 * rep.default_metric.value
+
+    def test_mysql_workload_changes_dominant_knob(self):
+        """§2.2/Fig 1a vs 1d: query_cache dominates reads, not writes."""
+        read = MySQLSurrogate("uniform_read")
+        rw = MySQLSurrogate("zipfian_rw")
+        base = read.space().default_config()
+        on = dict(base, query_cache_type="ON")
+        gain_read = read.test(on).value / read.test(base).value
+        gain_rw = rw.test(on).value / rw.test(base).value
+        assert gain_read > 2.0  # dominant
+        assert gain_rw < 1.1  # not dominant (invalidation overhead)
+
+    def test_tomcat_table1_shape(self):
+        """§5.2 Table 1: a few-percent txn gain, all metrics improving."""
+        sut = TomcatSurrogate(fully_utilized=True)
+        rep = Tuner(sut.space(), sut, budget=120, seed=3).run()
+        imp = rep.improvement - 1.0
+        assert 0.02 < imp < 0.08  # paper: +4.07%
+        m_def, m_best = rep.default_metric.metrics, rep.best_metric.metrics
+        assert m_best["hits_per_sec"] > m_def["hits_per_sec"]
+        assert m_best["failed_txns"] < m_def["failed_txns"]
+        assert m_best["errors"] < m_def["errors"]
+
+    def test_jvm_knob_shifts_tomcat_optimum(self):
+        """§2.2/Fig 1b vs 1e: co-deployed JVM changes where the optimum is."""
+        sut = TomcatSurrogate(fully_utilized=False)
+        space = sut.space()
+
+        def best_threads(tsr):
+            vals = {}
+            for mt in range(25, 1000, 25):
+                cfg = space.default_config()
+                cfg["maxThreads"] = mt
+                cfg["jvm_TargetSurvivorRatio"] = tsr
+                vals[mt] = sut.test(cfg).value
+            return max(vals, key=vals.get)
+
+        assert best_threads(5) != best_threads(95)
+
+    def test_spark_deployment_changes_surface(self):
+        """§2.2/Fig 1c vs 1f: cluster mode has the cores==4 ridge."""
+        alone = SparkSurrogate("standalone")
+        clust = SparkSurrogate("cluster")
+        base = alone.space().default_config()
+
+        def by_cores(sut):
+            return [
+                sut.test(dict(base, executor_cores=c)).value for c in range(1, 9)
+            ]
+
+        va, vc = by_cores(alone), by_cores(clust)
+        # standalone: saturating, no spike => consecutive ratios modest
+        ratios_a = [b / a for a, b in zip(va, va[1:])]
+        assert max(ratios_a) < 1.35
+        # cluster: jump into cores=4, drop after
+        assert vc[3] / vc[2] > 1.2 and vc[4] < vc[3]
+
+    def test_bottleneck_identification(self):
+        """§5.5: DB tunes well alone; composed stays capped => frontend."""
+        db = MySQLSurrogate("zipfian_rw")
+        fe = FrontendSurrogate(capacity_ceiling=11000.0)
+        report = identify_bottleneck(
+            {"db": db, "frontend": fe}, budget_per_system=60, seed=0
+        )
+        assert report.member_reports["db"].improvement > 1.5  # tunes well alone
+        assert report.bottleneck == "frontend"
+        assert "frontend" in report.summary()
+
+    def test_composed_space_is_joint(self):
+        db = MySQLSurrogate()
+        fe = FrontendSurrogate()
+        comp = ComposedSUT({"db": db, "fe": fe})
+        space = comp.space()
+        assert space.dim == db.space().dim + fe.space().dim
+        metric = comp.test(space.default_config())
+        assert metric.metrics["bottleneck_member"] in ("db", "fe")

@@ -1,0 +1,124 @@
+"""Optimizer substrate tests: AdamW, schedules, clipping, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    compression_init,
+    global_norm,
+    lr_at,
+)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.array([3.0, -2.0, 1.5])}
+        target = jnp.array([1.0, 1.0, 1.0])
+        cfg = OptimizerConfig(learning_rate=0.05, weight_decay=0.0,
+                              warmup_steps=0, schedule="constant")
+        state = adamw_init(params)
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        assert float(loss(params)) < 1e-3
+
+    def test_moments_are_f32(self):
+        params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        state = adamw_init(params)
+        assert state["mu"]["w"].dtype == jnp.float32
+        assert state["nu"]["w"].dtype == jnp.float32
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.ones((8,)) * 10}
+        cfg = OptimizerConfig(learning_rate=0.1, weight_decay=0.5,
+                              warmup_steps=0, schedule="constant")
+        state = adamw_init(params)
+        zero_g = {"w": jnp.zeros((8,))}
+        for _ in range(50):
+            params, state, _ = adamw_update(zero_g, state, params, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+class TestSchedule:
+    def test_warmup_and_decay(self):
+        cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=100,
+                              total_steps=1000, schedule="cosine",
+                              min_lr_ratio=0.1)
+        assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+        assert float(lr_at(cfg, jnp.int32(50))) == pytest.approx(5e-4)
+        assert float(lr_at(cfg, jnp.int32(100))) == pytest.approx(1e-3)
+        end = float(lr_at(cfg, jnp.int32(1000)))
+        assert end == pytest.approx(1e-4, rel=1e-3)
+
+    @given(step=st.integers(0, 2000))
+    @settings(max_examples=30, deadline=None)
+    def test_lr_bounded(self, step):
+        cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=10,
+                              total_steps=1000)
+        lr = float(lr_at(cfg, jnp.int32(step)))
+        assert 0.0 <= lr <= 1e-3 + 1e-12
+
+
+class TestClip:
+    def test_clip_reduces_norm(self):
+        tree = {"a": jnp.ones((10,)) * 100.0}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(np.sqrt(10) * 100)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_no_clip_below_threshold(self):
+        tree = {"a": jnp.ones((4,)) * 0.1}
+        clipped, _ = clip_by_global_norm(tree, 10.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(tree["a"]))
+
+
+class TestCompression:
+    @pytest.mark.parametrize("scheme", ["int8", "topk"])
+    def test_error_feedback_is_unbiased_over_time(self, scheme):
+        """EF guarantee: Σ applied_t ≈ Σ raw_t (residual stays bounded)."""
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.zeros((64,))}
+        error = compression_init(params, scheme)
+        total_raw = np.zeros(64)
+        total_applied = np.zeros(64)
+        for _ in range(50):
+            g = {"w": jnp.asarray(rng.normal(size=64), jnp.float32)}
+            applied, error = compress_grads(g, error, scheme)
+            total_raw += np.asarray(g["w"])
+            total_applied += np.asarray(applied["w"])
+        residual = np.abs(np.asarray(error["w"]))
+        np.testing.assert_allclose(total_applied + np.asarray(error["w"]),
+                                   total_raw, rtol=1e-4, atol=1e-4)
+        assert residual.max() < 5.0  # residual bounded, not growing
+
+    def test_int8_quantization_error_small(self):
+        g = {"w": jnp.linspace(-1, 1, 255)}
+        error = compression_init(g, "int8")
+        applied, error = compress_grads(g, error, "int8")
+        assert float(jnp.abs(applied["w"] - g["w"]).max()) < 1.0 / 127 + 1e-6
+
+    def test_none_passthrough(self):
+        g = {"w": jnp.ones(4)}
+        out, err = compress_grads(g, None, "none")
+        assert out is g and err is None
+
+    def test_topk_sparsity(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=100),
+                              jnp.float32)}
+        error = compression_init(g, "topk")
+        applied, _ = compress_grads(g, error, "topk", topk_frac=0.05)
+        nonzero = int((np.asarray(applied["w"]) != 0).sum())
+        assert nonzero <= 6
