@@ -4,60 +4,118 @@ On this CPU container interpret-mode timings are NOT indicative of TPU
 performance — the derived column therefore reports allclose deltas and the
 arithmetic-intensity of each kernel call (the quantity that matters for the
 VMEM-tiling argument), not speedups.
+
+The block-size sweep rows report, per candidate tiling, the autotune cost
+model's estimated TPU time (the objective the ACTS kernel autotuner
+minimizes) next to the interpret-mode wall time and correctness check —
+the perf trajectory is additionally written to ``BENCH_kernels.json`` at
+the repo root so successive PRs can diff machine-readable numbers.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List
+from typing import Any, Dict, List
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune import KERNELS
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gla import gla_pallas
-from repro.kernels.ref import attention_ref, gla_ref
+from repro.kernels.ref import attention_ref, gla_ref, rmsnorm_ref
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 from .common import Row
 
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
 
-def run() -> List[Row]:
-    rng = np.random.default_rng(0)
+
+def _sweep_flash(rng, record) -> List[Row]:
     rows: List[Row] = []
-
     B, S, H, KV, D = 1, 256, 4, 2, 32
     q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
-    t0 = time.time()
-    out = flash_attention_pallas(q, k, v, causal=True, block_q=64,
-                                 block_kv=64, interpret=True)
-    us = (time.time() - t0) * 1e6
-    err = float(jnp.abs(out - attention_ref(q, k, v)).max())
+    ref = attention_ref(q, k, v)
+    dims = {"B": B, "S": S, "H": H, "KV": KV, "D": D}
+    model = KERNELS["flash_attention"].model_cost
+    for bq, bk in ((32, 32), (64, 64), (128, 128), (64, 128)):
+        t0 = time.time()
+        out = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                     block_kv=bk, interpret=True)
+        us = (time.time() - t0) * 1e6
+        err = float(jnp.abs(out - ref).max())
+        est = model({"block_q": bq, "block_kv": bk}, dims, "float32")
+        name = f"flash_attn_S{S}_bq{bq}_bkv{bk}"
+        rows.append((name, us, f"model {est * 1e6:.1f}us err {err:.1e}"))
+        record(name, us, {"model_us": est * 1e6, "max_err": err,
+                          "block_q": bq, "block_kv": bk})
     flops = 4 * B * H * S * S * D / 2
-    bytes_ = (q.size + k.size + v.size + out.size) * 4
-    rows.append(("flash_attn_256_maxerr", us, f"{err:.2e}"))
-    rows.append(("flash_attn_arith_intensity", us,
+    bytes_ = (q.size + k.size + v.size + q.size) * 4
+    rows.append(("flash_attn_arith_intensity", 0.0,
                  f"{flops / bytes_:.1f} flop/B"))
+    return rows
 
+
+def _sweep_rmsnorm(rng, record) -> List[Row]:
+    rows: List[Row] = []
     x = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
     s = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
-    t0 = time.time()
-    rn = rmsnorm_pallas(x, s, interpret=True)
-    us = (time.time() - t0) * 1e6
-    from repro.kernels.ref import rmsnorm_ref
+    ref = rmsnorm_ref(x, s)
+    model = KERNELS["rmsnorm"].model_cost
+    dims = {"ROWS": 512, "D": 256}
+    for br in (64, 128, 256, 512):
+        t0 = time.time()
+        out = rmsnorm_pallas(x, s, block_rows=br, interpret=True)
+        us = (time.time() - t0) * 1e6
+        err = float(jnp.abs(out - ref).max())
+        est = model({"block_rows": br}, dims, "float32")
+        name = f"rmsnorm_512x256_br{br}"
+        rows.append((name, us, f"model {est * 1e6:.1f}us err {err:.1e}"))
+        record(name, us, {"model_us": est * 1e6, "max_err": err,
+                          "block_rows": br})
+    return rows
 
-    rows.append(("rmsnorm_maxerr", us,
-                 f"{float(jnp.abs(rn - rmsnorm_ref(x, s)).max()):.2e}"))
 
+def _sweep_gla(rng, record) -> List[Row]:
+    rows: List[Row] = []
     gq = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
     gk = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
     gv = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
     gg = jnp.asarray(-np.abs(rng.normal(size=(1, 128, 2)) * 0.3), jnp.float32)
-    t0 = time.time()
-    y, st = gla_pallas(gq, gk, gv, gg, chunk=32, interpret=True)
-    us = (time.time() - t0) * 1e6
-    yr, sr = gla_ref(gq, gk, gv, gg)
-    rows.append(("gla_chunk_maxerr", us,
-                 f"{float(jnp.abs(y - yr).max()):.2e}"))
+    yr, _ = gla_ref(gq, gk, gv, gg)
+    model = KERNELS["gla"].model_cost
+    dims = {"B": 1, "S": 128, "H": 2, "DK": 16, "DV": 16}
+    for chunk in (16, 32, 64):
+        t0 = time.time()
+        y, _state = gla_pallas(gq, gk, gv, gg, chunk=chunk, interpret=True)
+        us = (time.time() - t0) * 1e6
+        err = float(jnp.abs(y - yr).max())
+        est = model({"chunk": chunk}, dims, "float32")
+        name = f"gla_S128_chunk{chunk}"
+        rows.append((name, us, f"model {est * 1e6:.1f}us err {err:.1e}"))
+        record(name, us, {"model_us": est * 1e6, "max_err": err,
+                          "chunk": chunk})
+    return rows
+
+
+def run() -> List[Row]:
+    rng = np.random.default_rng(0)
+    results: Dict[str, Dict[str, Any]] = {}
+
+    def record(name: str, us: float, extra: Dict[str, Any]) -> None:
+        results[name] = dict(extra, interpret_us=us)
+
+    rows: List[Row] = []
+    rows += _sweep_flash(rng, record)
+    rows += _sweep_rmsnorm(rng, record)
+    rows += _sweep_gla(rng, record)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump({"schema": "kernel-bench-v1", "time": time.time(),
+                   "results": results}, f, indent=1, sort_keys=True)
+    rows.append(("kernel_bench_json", 0.0, JSON_PATH))
     return rows

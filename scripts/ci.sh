@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + batched-tuning smoke benchmark.
+#
+#   scripts/ci.sh            # full tier-1 suite, then the smoke bench
+#   scripts/ci.sh --fast     # skip the slow subprocess/dry-run tests
+#
+# The smoke benchmark runs the batched-vs-sequential evaluation engine
+# comparison (RRS on the MySQL surrogate, budget 500) and fails CI if the
+# engines diverge; its speedup line is the perf-trajectory signal.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
+fi
+
+echo "=== tier-1: python -m pytest ${PYTEST_ARGS[*]} ==="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "=== smoke: batched tuning engine (budget 500, ~seconds) ==="
+timeout 30 python - <<'EOF'
+import benchmarks.rrs_convergence as rc
+
+rows = rc._bench_batched_engine()
+for name, us, derived in rows:
+    print(f"{name},{us:.1f},{derived}")
+speedup = float(rows[2][2].rstrip("x"))
+assert speedup > 1.0, f"batched engine slower than sequential ({speedup}x)"
+EOF
+
+echo "CI OK"

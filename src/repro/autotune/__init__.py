@@ -1,0 +1,39 @@
+"""ACTS applied to our own Pallas kernels: block-size autotuning.
+
+See README.md in this package for the cache design and usage; the short
+version:
+
+    from repro import autotune
+    autotune.autotune_kernel("flash_attention",
+                             {"B": 1, "S": 2048, "H": 16, "KV": 4, "D": 128},
+                             dtype="bfloat16", budget=16)
+
+tunes the kernel's tiling with the ordinary ACTS tuner and persists the
+winner; afterwards every ``repro.kernels.ops`` call with that problem shape
+picks the tuned blocks up automatically.
+"""
+from .api import (
+    autotune_kernel,
+    backend_name,
+    cached_blocks,
+    ensure_tuned,
+    resolve_blocks,
+)
+from .cache import AutotuneCache, default_cache, reset_default_cache
+from .space import KERNELS, KernelSpace, shape_sig
+from .sut import KernelSUT
+
+__all__ = [
+    "AutotuneCache",
+    "KERNELS",
+    "KernelSUT",
+    "KernelSpace",
+    "autotune_kernel",
+    "backend_name",
+    "cached_blocks",
+    "default_cache",
+    "ensure_tuned",
+    "reset_default_cache",
+    "resolve_blocks",
+    "shape_sig",
+]

@@ -1,0 +1,112 @@
+"""ACTS-driven kernel autotuning: tune, persist, resolve.
+
+The flow mirrors the paper's architecture end to end:
+
+    tune:     ``autotune_kernel`` runs the ordinary ACTS ``Tuner`` (LHS +
+              RRS under a test budget) over a ``KernelSpace`` with a
+              ``KernelSUT``, then persists the winner.
+    persist:  ``AutotuneCache`` keys the result by (kernel, shape
+              signature, dtype, backend) in one JSON file.
+    resolve:  ``resolve_blocks`` is the cheap read path the kernel entry
+              points (``repro.kernels.ops``) call when no explicit block
+              override is given — cache hit wins, builtin default
+              otherwise.  After the first disk read it is a dict lookup.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .cache import AutotuneCache, default_cache
+from .space import KERNELS, KernelSpace, shape_sig
+from .sut import KernelSUT
+
+__all__ = ["autotune_kernel", "ensure_tuned", "resolve_blocks",
+           "cached_blocks", "backend_name"]
+
+
+def backend_name() -> str:
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax always importable here
+        return "unknown"
+
+
+def cached_blocks(kernel: str, dims: Dict[str, int], dtype: str,
+                  cache: Optional[AutotuneCache] = None,
+                  backend: Optional[str] = None) -> Optional[Dict[str, Any]]:
+    """The tuned block config for this problem, or None if never tuned."""
+    sig = shape_sig(KernelSpace(kernel).validate_dims(dims))
+    cache = cache or default_cache()
+    return cache.get_config(kernel, sig, dtype,
+                            backend or backend_name())
+
+
+def resolve_blocks(kernel: str, dims: Dict[str, int], dtype: str,
+                   defaults: Dict[str, Any],
+                   cache: Optional[AutotuneCache] = None) -> Dict[str, Any]:
+    """Tuned config if the cache has one, else the builtin defaults."""
+    try:
+        tuned = cached_blocks(kernel, dims, dtype, cache=cache)
+    except Exception:
+        return dict(defaults)
+    if tuned:
+        out = dict(defaults)
+        out.update({k: tuned[k] for k in defaults if k in tuned})
+        return out
+    return dict(defaults)
+
+
+def autotune_kernel(
+    kernel: str,
+    dims: Dict[str, int],
+    dtype: str = "float32",
+    budget: int = 16,
+    mode: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    seed: int = 0,
+    cache: Optional[AutotuneCache] = None,
+    optimizer: str = "rrs",
+    verbose: bool = False,
+) -> Dict[str, Any]:
+    """Run ACTS over one kernel × problem signature and persist the winner.
+
+    Returns a summary dict {kernel, sig, config, value, n_tests, mode}.
+    """
+    from repro.core.tuner import Tuner
+
+    sut = KernelSUT(kernel, dims, dtype=dtype, mode=mode,
+                    interpret=interpret, seed=seed)
+    report = Tuner(sut.space(), sut, budget=budget, optimizer=optimizer,
+                   seed=seed, verbose=verbose).run()
+    cache = cache or default_cache()
+    sig = shape_sig(sut.dims)
+    summary = {
+        "kernel": kernel,
+        "sig": sig,
+        "dtype": dtype,
+        "backend": backend_name(),
+        "config": dict(report.best_config),
+        "value": report.best_metric.value,
+        "default_value": report.default_metric.value,
+        "n_tests": report.n_tests,
+        "mode": sut.mode,
+    }
+    cache.put(kernel, sig, dtype, summary["backend"], summary["config"],
+              summary["value"],
+              meta={"mode": sut.mode, "n_tests": report.n_tests,
+                    "default_value": summary["default_value"]})
+    return summary
+
+
+def ensure_tuned(kernel: str, dims: Dict[str, int], dtype: str = "float32",
+                 budget: int = 16, cache: Optional[AutotuneCache] = None,
+                 **kw: Any) -> Dict[str, Any]:
+    """Cache hit → return it; miss → tune now and persist."""
+    cache = cache or default_cache()
+    tuned = cached_blocks(kernel, dims, dtype, cache=cache)
+    if tuned is not None:
+        return tuned
+    return autotune_kernel(kernel, dims, dtype=dtype, budget=budget,
+                           cache=cache, **kw)["config"]

@@ -1,0 +1,117 @@
+"""Persistent kernel-autotune cache.
+
+One JSON file maps ``kernel|shape-signature|dtype|backend`` to the tuned
+block configuration (plus the measured/modelled cost and provenance).  The
+file is the contract between the tuning side (``repro.autotune.autotune_
+kernel``, ``python -m repro.launch.tune --tune-kernels``) and the consuming
+side (``repro.kernels.ops`` resolves block defaults through it; the serve
+engine and the dry-run's ``RunKnobs`` consult it for their shapes).
+
+Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  Writes are atomic (tmp + rename) so
+concurrent tuning jobs cannot corrupt the file; last-writer-wins per key is
+acceptable because entries are deterministic for a given machine.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Optional
+
+__all__ = ["AutotuneCache", "default_cache", "reset_default_cache"]
+
+
+def _default_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+class AutotuneCache:
+    """(kernel, shape, dtype, backend) -> tuned block config, on disk."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or _default_path()
+        self._lock = threading.Lock()
+        self._data: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def key(kernel: str, sig: str, dtype: str, backend: str) -> str:
+        return f"{kernel}|{sig}|{dtype}|{backend}"
+
+    def _load(self) -> Dict[str, Any]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                self._data = {}
+        return self._data
+
+    def reload(self) -> None:
+        """Drop the in-memory view and re-read the file on next access."""
+        with self._lock:
+            self._data = None
+
+    # ------------------------------------------------------------------
+    def get(self, kernel: str, sig: str, dtype: str,
+            backend: str) -> Optional[Dict[str, Any]]:
+        """The cached entry ({config, value, ...}) or None."""
+        with self._lock:
+            entry = self._load().get(self.key(kernel, sig, dtype, backend))
+        return dict(entry) if entry else None
+
+    def get_config(self, kernel: str, sig: str, dtype: str,
+                   backend: str) -> Optional[Dict[str, Any]]:
+        entry = self.get(kernel, sig, dtype, backend)
+        return dict(entry["config"]) if entry else None
+
+    def put(self, kernel: str, sig: str, dtype: str, backend: str,
+            config: Dict[str, Any], value: float,
+            meta: Optional[Dict[str, Any]] = None) -> None:
+        with self._lock:
+            data = self._load()
+            data[self.key(kernel, sig, dtype, backend)] = {
+                "config": dict(config),
+                "value": float(value),
+                "meta": dict(meta or {}),
+                "time": time.time(),
+            }
+            self._save(data)
+
+    def _save(self, data: Dict[str, Any]) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load())
+
+
+_default: Optional[AutotuneCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> AutotuneCache:
+    global _default
+    with _default_lock:
+        if _default is None or _default.path != _default_path():
+            _default = AutotuneCache()
+        return _default
+
+
+def reset_default_cache() -> None:
+    """Forget the process-wide cache object (tests repoint the env var)."""
+    global _default
+    with _default_lock:
+        _default = None

@@ -1,0 +1,283 @@
+"""Kernel block-configuration spaces + analytic cost models.
+
+``KernelSpace`` turns each Pallas kernel's tiling knobs into an ACTS
+``ParameterSpace`` so the ordinary tuner stack (LHS + RRS, budget, cache,
+report) drives kernel autotuning exactly like it drives MySQL knobs — the
+paper's architecture pointed at our own hot path.
+
+Per kernel: the knob space, an input builder for a problem signature, a
+call adapter, and a roofline-style cost model.  The model is the CPU-side
+stand-in for wall-clock timing (interpret-mode timings are meaningless for
+TPU performance): it scores a block config by grid-step overhead + per-tile
+MXU/VPU time + HBM streaming, with hard VMEM-capacity infeasibility and
+sublane/lane alignment penalties (TPU tiles are (8/16/32, 128) — see the
+Pallas guide).  On real TPU hardware the ``time`` mode measures instead.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.params import EnumParam, ParameterSpace
+
+__all__ = ["KernelSpace", "KERNELS", "shape_sig"]
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM (v5e-class)
+MXU_FLOPS_PER_S = 394e12 * 0.5  # bf16 peak derated
+HBM_BYTES_PER_S = 819e9
+GRID_STEP_OVERHEAD_S = 1.5e-6  # per grid step (dispatch + DMA setup)
+
+
+def shape_sig(dims: Dict[str, int]) -> str:
+    """Canonical problem signature, e.g. ``B2_D64_H4_KV2_S256``."""
+    return "_".join(f"{k}{int(v)}" for k, v in sorted(dims.items()))
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2}[dtype]
+
+
+def _sublane(dtype: str) -> int:
+    return {"float32": 8, "bfloat16": 16, "float16": 16}[dtype]
+
+
+def _align_penalty(block: int, dtype: str) -> float:
+    """Mosaic pads tiles to (sublane, 128); fractional-tile waste factor."""
+    sub = _sublane(dtype)
+    padded = math.ceil(block / sub) * sub
+    return padded / max(block, 1)
+
+
+def _roofline_s(flops: float, hbm_bytes: float, n_steps: float,
+                vmem_bytes: float) -> float:
+    if vmem_bytes > VMEM_BYTES:
+        return math.inf  # tile set does not fit on-chip
+    compute = flops / MXU_FLOPS_PER_S
+    stream = hbm_bytes / HBM_BYTES_PER_S
+    return max(compute, stream) + n_steps * GRID_STEP_OVERHEAD_S
+
+
+# ---------------------------------------------------------------------------
+# per-kernel definitions
+# ---------------------------------------------------------------------------
+_POW2_BLOCKS = (16, 32, 64, 128, 256, 512)
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    name: str
+    dims: Tuple[str, ...]  # required signature dims
+    knobs: Tuple[str, ...]
+    make_space: Callable[[], ParameterSpace]
+    make_inputs: Callable[[Dict[str, int], str, np.random.Generator], tuple]
+    call: Callable[[tuple, Dict[str, Any], bool], Any]
+    model_cost: Callable[[Dict[str, Any], Dict[str, int], str], float]
+
+
+def _rand(rng, shape, dtype):
+    import jax.numpy as jnp
+
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(
+        {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+         "float16": jnp.float16}[dtype])
+
+
+# -- flash attention ---------------------------------------------------------
+def _fa_space() -> ParameterSpace:
+    return ParameterSpace([
+        EnumParam("block_q", _POW2_BLOCKS, 128),
+        EnumParam("block_kv", _POW2_BLOCKS, 128),
+    ])
+
+
+def _fa_inputs(d, dtype, rng):
+    q = _rand(rng, (d["B"], d["S"], d["H"], d["D"]), dtype)
+    k = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    v = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    return q, k, v
+
+
+def _fa_call(inputs, config, interpret):
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    q, k, v = inputs
+    return flash_attention_pallas(q, k, v, causal=True,
+                                  block_q=config["block_q"],
+                                  block_kv=config["block_kv"],
+                                  interpret=interpret)
+
+
+def _fa_cost(config, d, dtype):
+    B, S, H, D = d["B"], d["S"], d["H"], d["D"]
+    bq = min(config["block_q"], S)
+    bk = min(config["block_kv"], S)
+    nq, nk = math.ceil(S / bq), math.ceil(S / bk)
+    n_steps = B * H * nq * nk
+    # causal: roughly half the (q, kv) tile pairs are reachable
+    live = 0.55 * n_steps
+    pad = _align_penalty(bq, dtype) * _align_penalty(bk, dtype)
+    flops = live * (4.0 * bq * bk * D) * pad
+    ib = _dtype_bytes(dtype)
+    hbm = (B * H * nq * bq * D * ib          # q tiles
+           + 2.0 * live * bk * D * ib        # streamed k/v tiles
+           + B * H * S * D * ib)             # output
+    vmem = (bq * D + 2 * bk * D) * ib + bq * (2 + D) * 4
+    return _roofline_s(flops, hbm, n_steps, vmem)
+
+
+# -- decode attention --------------------------------------------------------
+def _fd_space() -> ParameterSpace:
+    return ParameterSpace([
+        EnumParam("block_kv", (32, 64, 128, 256, 512, 1024), 256),
+    ])
+
+
+def _fd_inputs(d, dtype, rng):
+    q = _rand(rng, (d["B"], d["H"], d["D"]), dtype)
+    k = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    v = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    return q, k, v, d["S"]
+
+
+def _fd_call(inputs, config, interpret):
+    from repro.kernels.decode_attention import flash_decode_pallas
+
+    q, k, v, kv_len = inputs
+    return flash_decode_pallas(q, k, v, kv_len,
+                               block_kv=config["block_kv"],
+                               interpret=interpret)
+
+
+def _fd_cost(config, d, dtype):
+    B, S, H, KV, D = d["B"], d["S"], d["H"], d["KV"], d["D"]
+    G = max(H // KV, 1)
+    bk = min(config["block_kv"], S)
+    nk = math.ceil(S / bk)
+    n_steps = B * KV * nk
+    ib = _dtype_bytes(dtype)
+    flops = n_steps * 4.0 * G * bk * D * _align_penalty(bk, dtype)
+    hbm = 2.0 * B * KV * nk * bk * D * ib  # stream the cache once
+    vmem = 2 * bk * D * ib + G * (2 + D) * 4 + G * D * ib
+    return _roofline_s(flops, hbm, n_steps, vmem)
+
+
+# -- gated linear attention --------------------------------------------------
+def _gla_space() -> ParameterSpace:
+    return ParameterSpace([
+        EnumParam("chunk", (16, 32, 64, 128, 256), 128),
+    ])
+
+
+def _gla_inputs(d, dtype, rng):
+    q = _rand(rng, (d["B"], d["S"], d["H"], d["DK"]), dtype)
+    k = _rand(rng, (d["B"], d["S"], d["H"], d["DK"]), dtype)
+    v = _rand(rng, (d["B"], d["S"], d["H"], d["DV"]), dtype)
+    import jax.numpy as jnp
+
+    g = jnp.asarray(-np.abs(rng.normal(size=(d["B"], d["S"], d["H"])) * 0.3),
+                    jnp.float32)
+    return q, k, v, g
+
+
+def _gla_call(inputs, config, interpret):
+    from repro.kernels.gla import gla_pallas
+
+    q, k, v, g = inputs
+    return gla_pallas(q, k, v, g, chunk=config["chunk"],
+                      interpret=interpret)[0]
+
+
+def _gla_cost(config, d, dtype):
+    B, S, H, DK, DV = d["B"], d["S"], d["H"], d["DK"], d["DV"]
+    L = min(config["chunk"], S)
+    nc = math.ceil(S / L)
+    n_steps = B * H * nc
+    ib = _dtype_bytes(dtype)
+    pad = _align_penalty(L, dtype)
+    # intra-chunk (L,L)x(L,dv) + qk^T + state update, all MXU work
+    flops = n_steps * (2.0 * L * L * DK + 2.0 * L * L * DV
+                       + 4.0 * L * DK * DV) * pad
+    hbm = n_steps * L * (2 * DK + 2 * DV + 1) * ib
+    vmem = (L * (2 * DK + 2 * DV) + L) * ib + DK * DV * 4 + L * L * 4
+    return _roofline_s(flops, hbm, n_steps, vmem)
+
+
+# -- rmsnorm -----------------------------------------------------------------
+def _rn_space() -> ParameterSpace:
+    return ParameterSpace([
+        EnumParam("block_rows", (8, 16, 32, 64, 128, 256, 512, 1024), 256),
+    ])
+
+
+def _rn_inputs(d, dtype, rng):
+    x = _rand(rng, (d["ROWS"], d["D"]), dtype)
+    import jax.numpy as jnp
+
+    s = jnp.asarray(rng.normal(size=(d["D"],)), jnp.float32)
+    return x, s
+
+
+def _rn_call(inputs, config, interpret):
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+
+    x, s = inputs
+    return rmsnorm_pallas(x, s, block_rows=config["block_rows"],
+                          interpret=interpret)
+
+
+def _rn_cost(config, d, dtype):
+    rows, D = d["ROWS"], d["D"]
+    br = min(config["block_rows"], rows)
+    n = math.ceil(rows / br)
+    ib = _dtype_bytes(dtype)
+    pad = _align_penalty(br, dtype)
+    flops = n * 4.0 * br * D * pad  # VPU work; counted at MXU scale below
+    hbm = 2.0 * rows * D * ib + n * D * 4
+    vmem = 2 * br * D * max(ib, 4) + D * 4
+    # rmsnorm is pure VPU: scale compute down to VPU throughput (~1/8 MXU)
+    return _roofline_s(flops * 8.0, hbm, n, vmem)
+
+
+KERNELS: Dict[str, KernelDef] = {
+    "flash_attention": KernelDef(
+        "flash_attention", ("B", "S", "H", "KV", "D"),
+        ("block_q", "block_kv"),
+        _fa_space, _fa_inputs, _fa_call, _fa_cost),
+    "decode_attention": KernelDef(
+        "decode_attention", ("B", "S", "H", "KV", "D"), ("block_kv",),
+        _fd_space, _fd_inputs, _fd_call, _fd_cost),
+    "gla": KernelDef(
+        "gla", ("B", "S", "H", "DK", "DV"), ("chunk",),
+        _gla_space, _gla_inputs, _gla_call, _gla_cost),
+    "rmsnorm": KernelDef(
+        "rmsnorm", ("ROWS", "D"), ("block_rows",),
+        _rn_space, _rn_inputs, _rn_call, _rn_cost),
+}
+
+
+class KernelSpace:
+    """The ACTS parameter space of one kernel's tiling knobs."""
+
+    def __init__(self, kernel: str):
+        if kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {kernel!r}; "
+                             f"have {sorted(KERNELS)}")
+        self.kernel = kernel
+        self.definition = KERNELS[kernel]
+
+    def space(self) -> ParameterSpace:
+        return self.definition.make_space()
+
+    @property
+    def knobs(self) -> Tuple[str, ...]:
+        return self.definition.knobs
+
+    def validate_dims(self, dims: Dict[str, int]) -> Dict[str, int]:
+        missing = [k for k in self.definition.dims if k not in dims]
+        if missing:
+            raise ValueError(
+                f"kernel {self.kernel}: missing dims {missing}")
+        return {k: int(dims[k]) for k in self.definition.dims}

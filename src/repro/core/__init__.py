@@ -6,7 +6,8 @@ library: typed parameter spaces over a unit hypercube, scalable sampling
 manipulator ⇄ workload generator architecture.  The JAX distributed runtime
 in this repo is itself a first-class SUT (``repro.core.sut_jax``).
 """
-from .base import BudgetExhausted, Trial, TuningResult
+from .base import BatchObjective, BudgetedRun, BudgetExhausted, Trial, \
+    TuningResult
 from .bottleneck import BottleneckReport, identify_bottleneck
 from .optimizers import (
     OPTIMIZERS,
@@ -45,6 +46,7 @@ from .surrogates import (
     TomcatSurrogate,
 )
 from .tuner import (
+    BatchEvaluator,
     CallableSUT,
     PerfMetric,
     SystemManipulator,

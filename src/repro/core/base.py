@@ -1,12 +1,16 @@
 """Shared types for ACTS optimizers and the tuner."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from .params import Config
 
-__all__ = ["Trial", "TuningResult", "Objective", "BudgetExhausted"]
+__all__ = ["Trial", "TuningResult", "Objective", "BatchObjective",
+           "BudgetedRun", "BudgetExhausted"]
 
 
 class BudgetExhausted(Exception):
@@ -48,3 +52,79 @@ class TuningResult:
 
 
 Objective = Callable[[Config], float]
+
+# A batch objective scores a whole candidate round in one call.  It may
+# return values for a strict *prefix* of the requested configs: a short
+# return means the resource limit was exhausted after that prefix, and the
+# caller must record the prefix and stop.
+BatchObjective = Callable[[Sequence[Config]], Sequence[float]]
+
+
+class BudgetedRun:
+    """Shared optimizer bookkeeping: budget enforcement + history + best.
+
+    ``evaluate_batch`` scores one candidate round.  The round is truncated
+    to the remaining budget; if the objective itself runs out of resource
+    (a short prefix return from a ``BatchObjective``), the prefix is
+    recorded before ``BudgetExhausted`` propagates — exactly what a
+    point-by-point loop would have left behind.  Candidate rounds are
+    scored through ``batch_objective`` when one is provided (the tuner's
+    vectorized ``BatchEvaluator`` path) and per-config otherwise; the two
+    modes evaluate the identical trial sequence.
+    """
+
+    def __init__(self, space, objective: Optional[Objective], budget: int,
+                 batch_objective: Optional[BatchObjective] = None):
+        self.space = space
+        self.objective = objective
+        self.batch_objective = batch_objective
+        self.budget = budget
+        self.history: List[Trial] = []
+        self.n_tests = 0
+        self.best_u = None
+        self.best_val = math.inf
+
+    @property
+    def remaining(self) -> int:
+        return self.budget - self.n_tests
+
+    def evaluate_batch(self, units, phase: str):
+        units = np.atleast_2d(np.asarray(units, dtype=float))
+        if self.remaining <= 0:
+            raise BudgetExhausted
+        truncated = len(units) > self.remaining
+        units = units[: self.remaining]
+        cfgs = self.space.from_unit_matrix(units)
+        if self.batch_objective is not None:
+            vals = [float(v) for v in self.batch_objective(cfgs)]
+        else:
+            vals = []
+            try:
+                for cfg in cfgs:
+                    vals.append(float(self.objective(cfg)))
+            except BudgetExhausted:
+                pass  # record the prefix below, then re-raise
+        for u, cfg, val in zip(units, cfgs, vals):
+            self.n_tests += 1
+            self.history.append(Trial(cfg, val, self.n_tests, phase))
+            if val < self.best_val:
+                self.best_val, self.best_u = val, u.copy()
+        if truncated or len(vals) < len(units):
+            raise BudgetExhausted
+        return np.asarray(vals)
+
+    def evaluate(self, u, phase: str) -> float:
+        return float(
+            self.evaluate_batch(np.asarray(u, float)[None], phase)[0])
+
+    def result(self) -> TuningResult:
+        if self.best_u is None:
+            return TuningResult(
+                self.space.default_config(), math.inf, self.history,
+                self.n_tests)
+        return TuningResult(
+            self.space.from_unit_vector(self.best_u),
+            self.best_val,
+            self.history,
+            self.n_tests,
+        )

@@ -13,18 +13,29 @@ here are the methods the paper positions against:
 
 All optimizers minimize, operate on the unit hypercube, and respect a strict
 test budget — the resource limit of the ACTS problem definition (§3).
+
+Every optimizer is *round-based*: candidates are generated a whole round at
+a time and scored through ``_BudgetedRun.evaluate_batch``, which dispatches
+to a vectorized ``batch_objective`` when one is provided (the tuner's
+``BatchEvaluator`` path) and falls back to a per-config loop otherwise.
+Candidate generation never depends on the dispatch mode, so batched and
+sequential runs of the same seed evaluate the *identical* trial sequence —
+the parity guarantee the batched-tuning tests pin down.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Type
+from typing import Dict, List, Optional, Sequence, Type
 
 import numpy as np
 
-from .base import BudgetExhausted, Objective, Trial, TuningResult
+from .base import BatchObjective, BudgetedRun, BudgetExhausted, Objective, \
+    Trial, TuningResult
 from .params import Config, ParameterSpace
 from .rrs import RRSOptimizer
 from .sampling import lhs_unit
+
+_BudgetedRun = BudgetedRun  # shared bookkeeping lives in base.py
 
 __all__ = [
     "RandomSearchOptimizer",
@@ -36,43 +47,12 @@ __all__ = [
 ]
 
 
-class _BudgetedRun:
-    """Shared bookkeeping: budget enforcement + history + best tracking."""
-
-    def __init__(self, space: ParameterSpace, objective: Objective, budget: int):
-        self.space = space
-        self.objective = objective
-        self.budget = budget
-        self.history: List[Trial] = []
-        self.n_tests = 0
-        self.best_u: Optional[np.ndarray] = None
-        self.best_val = math.inf
-
-    def evaluate(self, u: np.ndarray, phase: str) -> float:
-        if self.n_tests >= self.budget:
-            raise BudgetExhausted
-        cfg = self.space.from_unit_vector(u)
-        val = float(self.objective(cfg))
-        self.n_tests += 1
-        self.history.append(Trial(cfg, val, self.n_tests, phase))
-        if val < self.best_val:
-            self.best_val, self.best_u = val, u.copy()
-        return val
-
-    def result(self) -> TuningResult:
-        if self.best_u is None:
-            return TuningResult(
-                self.space.default_config(), math.inf, self.history, self.n_tests
-            )
-        return TuningResult(
-            self.space.from_unit_vector(self.best_u),
-            self.best_val,
-            self.history,
-            self.n_tests,
-        )
-
-
 class RandomSearchOptimizer:
+    """Uniform random sampling in rounds of ``round_size``."""
+
+    def __init__(self, round_size: int = 64):
+        self.round_size = max(1, round_size)
+
     def optimize(
         self,
         space: ParameterSpace,
@@ -80,14 +60,15 @@ class RandomSearchOptimizer:
         budget: int,
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
+        batch_objective: Optional[BatchObjective] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget)
+        run = _BudgetedRun(space, objective, budget, batch_objective)
         try:
             if init_unit_points is not None:
-                for u in np.atleast_2d(init_unit_points):
-                    run.evaluate(np.asarray(u, float), "explore")
+                run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
             while True:
-                run.evaluate(rng.random(space.dim), "explore")
+                n = min(self.round_size, max(run.remaining, 1))
+                run.evaluate_batch(rng.random((n, space.dim)), "explore")
         except BudgetExhausted:
             pass
         return run.result()
@@ -103,15 +84,16 @@ class LHSOnlyOptimizer:
         budget: int,
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
+        batch_objective: Optional[BatchObjective] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget)
+        run = _BudgetedRun(space, objective, budget, batch_objective)
         try:
             if init_unit_points is not None:
-                for u in np.atleast_2d(init_unit_points):
-                    run.evaluate(np.asarray(u, float), "explore")
-            remaining = budget - run.n_tests
-            for u in lhs_unit(remaining, space.dim, rng):
-                run.evaluate(u, "explore")
+                run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
+            remaining = run.remaining
+            if remaining > 0:
+                run.evaluate_batch(lhs_unit(remaining, space.dim, rng),
+                                   "explore")
         except BudgetExhausted:
             pass
         return run.result()
@@ -120,8 +102,11 @@ class LHSOnlyOptimizer:
 class SmartHillClimbingOptimizer:
     """Smart Hill-Climbing (Xi et al. 2004), simplified:
 
-    LHS initial design → Gaussian proposals around the incumbent with
-    per-round variance shrink; random restart after ``patience`` stale rounds.
+    LHS initial design (one batched round) → Gaussian proposals around the
+    incumbent with per-round variance shrink; random restart after
+    ``patience`` stale rounds.  The climb itself is inherently sequential
+    (every proposal conditions on the previous outcome), so proposals run
+    as rounds of one.
     """
 
     def __init__(self, init_frac: float = 0.25, shrink: float = 0.7,
@@ -138,16 +123,15 @@ class SmartHillClimbingOptimizer:
         budget: int,
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
+        batch_objective: Optional[BatchObjective] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget)
+        run = _BudgetedRun(space, objective, budget, batch_objective)
         dim = space.dim
         try:
             if init_unit_points is not None:
-                for u in np.atleast_2d(init_unit_points):
-                    run.evaluate(np.asarray(u, float), "explore")
+                run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
             n_init = max(2, int(budget * self.init_frac) - run.n_tests)
-            for u in lhs_unit(n_init, dim, rng):
-                run.evaluate(u, "explore")
+            run.evaluate_batch(lhs_unit(n_init, dim, rng), "explore")
             sigma, stale = self.sigma0, 0
             incumbent = run.best_u if run.best_u is not None else rng.random(dim)
             incumbent_val = run.best_val
@@ -171,7 +155,12 @@ class SmartHillClimbingOptimizer:
 
 
 class CoordinateSearchOptimizer:
-    """Cyclic coordinate line search — the manual-tuning-guide strategy."""
+    """Cyclic coordinate line search — the manual-tuning-guide strategy.
+
+    Each axis sweep is one candidate round: all probe points along the axis
+    are generated from the current incumbent and scored together, then the
+    incumbent moves to the best improving probe.
+    """
 
     def __init__(self, points_per_axis: int = 5, shrink: float = 0.5):
         self.points_per_axis = points_per_axis
@@ -184,13 +173,13 @@ class CoordinateSearchOptimizer:
         budget: int,
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
+        batch_objective: Optional[BatchObjective] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget)
+        run = _BudgetedRun(space, objective, budget, batch_objective)
         dim = space.dim
         try:
             if init_unit_points is not None:
-                for u in np.atleast_2d(init_unit_points):
-                    run.evaluate(np.asarray(u, float), "explore")
+                run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
             x = space.to_unit_vector(space.default_config())
             fx = run.evaluate(x, "explore")
             span = 1.0
@@ -199,15 +188,20 @@ class CoordinateSearchOptimizer:
                 for j in range(dim):
                     lo = max(0.0, x[j] - span / 2)
                     hi = min(1.0, x[j] + span / 2)
+                    cands = []
                     for t in np.linspace(lo, hi, self.points_per_axis):
                         cand = x.copy()
                         cand[j] = min(t, 1 - 1e-12)
                         if abs(cand[j] - x[j]) < 1e-12:
                             continue
-                        val = run.evaluate(cand, "exploit")
-                        if val < fx:
-                            x, fx = cand, val
-                            improved_any = True
+                        cands.append(cand)
+                    if not cands:
+                        continue
+                    vals = run.evaluate_batch(np.stack(cands), "exploit")
+                    best_i = int(np.argmin(vals))
+                    if vals[best_i] < fx:
+                        x, fx = cands[best_i], float(vals[best_i])
+                        improved_any = True
                 if not improved_any:
                     span *= self.shrink
                     if span < 1e-3:

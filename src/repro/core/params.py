@@ -46,6 +46,17 @@ class Parameter:
     def validate(self, value: Any) -> bool:
         raise NotImplementedError
 
+    def from_unit_array(self, us: np.ndarray) -> List[Any]:
+        """Vectorized ``from_unit`` over a 1-D array of unit samples.
+
+        The input must already be clipped to [0, 1) —
+        ``ParameterSpace.from_unit_matrix`` clips the whole sample matrix
+        once so the per-parameter kernels stay allocation-light.  Returns
+        plain Python values (the scalar path's types), so configs built
+        from a batch are indistinguishable from per-point ones.
+        """
+        return [self.from_unit(float(u)) for u in us]
+
     # Number of distinct values (None for continuous).
     @property
     def cardinality(self) -> Optional[int]:
@@ -67,6 +78,10 @@ def _clip_unit(u: float) -> float:
     return min(max(float(u), 0.0), np.nextafter(1.0, 0.0))
 
 
+def _clip_unit_arr(us: np.ndarray) -> np.ndarray:
+    return np.clip(np.asarray(us, dtype=float), 0.0, np.nextafter(1.0, 0.0))
+
+
 @dataclass(frozen=True)
 class BoolParam(Parameter):
     name: str
@@ -74,6 +89,9 @@ class BoolParam(Parameter):
 
     def from_unit(self, u: float) -> bool:
         return _clip_unit(u) >= 0.5
+
+    def from_unit_array(self, us: np.ndarray) -> List[Any]:
+        return (us >= 0.5).tolist()
 
     def to_unit(self, value: Any) -> float:
         return 0.75 if value else 0.25
@@ -105,6 +123,10 @@ class EnumParam(Parameter):
     def from_unit(self, u: float) -> Any:
         idx = int(_clip_unit(u) * len(self.choices))
         return self.choices[idx]
+
+    def from_unit_array(self, us: np.ndarray) -> List[Any]:
+        idx = (us * len(self.choices)).astype(np.int64)
+        return [self.choices[i] for i in idx]
 
     def to_unit(self, value: Any) -> float:
         idx = self.choices.index(value)
@@ -142,6 +164,15 @@ class IntParam(Parameter):
             lo, hi = math.log(self.lo), math.log(self.hi + 1)
             return min(self.hi, int(math.exp(lo + u * (hi - lo))))
         return self.lo + int(u * (self.hi - self.lo + 1))
+
+    def from_unit_array(self, us: np.ndarray) -> List[Any]:
+        if self.log:
+            lo, hi = math.log(self.lo), math.log(self.hi + 1)
+            vals = np.minimum(
+                self.hi, np.exp(lo + us * (hi - lo)).astype(np.int64))
+        else:
+            vals = self.lo + (us * (self.hi - self.lo + 1)).astype(np.int64)
+        return vals.tolist()
 
     def to_unit(self, value: Any) -> float:
         v = int(value)
@@ -182,6 +213,12 @@ class FloatParam(Parameter):
             lo, hi = math.log(self.lo), math.log(self.hi)
             return float(math.exp(lo + u * (hi - lo)))
         return float(self.lo + u * (self.hi - self.lo))
+
+    def from_unit_array(self, us: np.ndarray) -> List[Any]:
+        if self.log:
+            lo, hi = math.log(self.lo), math.log(self.hi)
+            return np.exp(lo + us * (hi - lo)).tolist()
+        return (self.lo + us * (self.hi - self.lo)).tolist()
 
     def to_unit(self, value: Any) -> float:
         v = float(value)
@@ -256,6 +293,106 @@ class ParameterSpace:
             raise ValueError(f"expected shape ({self.dim},), got {u.shape}")
         return {p.name: p.from_unit(float(ui)) for p, ui in zip(self, u)}
 
+    def _conversion_plan(self):
+        """Group parameters by conversion kind for matrix-wide transforms.
+
+        Computed once per space: sampling-heavy optimizer loops convert
+        hundreds of small rounds, so the per-round fixed cost must be a
+        handful of vector ops, not ~3 per parameter.
+        """
+        plan = {
+            "bool": [], "enum": [], "int_lin": [], "int_log": [],
+            "float_lin": [], "float_log": [], "custom": [],
+        }
+        for j, p in enumerate(self):
+            t = type(p)
+            if t is BoolParam:
+                plan["bool"].append(j)
+            elif t is EnumParam:
+                plan["enum"].append((j, p.choices))
+            elif t is IntParam:
+                plan["int_log" if p.log else "int_lin"].append((j, p))
+            elif t is FloatParam:
+                plan["float_log" if p.log else "float_lin"].append((j, p))
+            else:  # subclassed parameter: fall back to its own kernel
+                plan["custom"].append((j, p))
+        for kind in ("int_lin", "int_log", "float_lin", "float_log"):
+            entries = plan[kind]
+            if not entries:
+                continue
+            idx = [j for j, _ in entries]
+            if kind == "int_lin":
+                lo = np.array([p.lo for _, p in entries], float)
+                span = np.array([p.hi - p.lo + 1 for _, p in entries], float)
+            elif kind == "float_lin":
+                lo = np.array([p.lo for _, p in entries], float)
+                span = np.array([p.hi - p.lo for _, p in entries], float)
+            elif kind == "int_log":
+                lo = np.array([math.log(p.lo) for _, p in entries], float)
+                span = np.array([math.log(p.hi + 1) - math.log(p.lo)
+                                 for _, p in entries], float)
+            else:  # float_log
+                lo = np.array([math.log(p.lo) for _, p in entries], float)
+                span = np.array([math.log(p.hi) - math.log(p.lo)
+                                 for _, p in entries], float)
+            plan[kind] = (idx, lo, span,
+                          [p.hi for _, p in entries] if kind == "int_log"
+                          else None)
+        self.__dict__["_plan"] = plan
+        return plan
+
+    def from_unit_matrix(self, units: np.ndarray) -> List[Config]:
+        """Vectorized ``from_unit_vector`` over an (m, dim) sample matrix.
+
+        Parameters are converted in matrix-wide groups (one transform per
+        parameter *kind*) — the conversion half of the batched evaluation
+        engine's speedup.
+        """
+        units = np.atleast_2d(np.asarray(units, dtype=float))
+        if units.shape[1] != self.dim:
+            raise ValueError(
+                f"expected shape (m, {self.dim}), got {units.shape}")
+        units = _clip_unit_arr(units)  # one clip for the whole matrix
+        plan = self.__dict__.get("_plan") or self._conversion_plan()
+        cols: List[Any] = [None] * self.dim
+        if plan["bool"]:
+            idx = plan["bool"]
+            vals = units[:, idx] >= 0.5
+            for k, j in enumerate(idx):
+                cols[j] = vals[:, k].tolist()
+        for j, choices in plan["enum"]:
+            ci = (units[:, j] * len(choices)).astype(np.int64)
+            cols[j] = [choices[i] for i in ci]
+        for kind in ("int_lin", "int_log", "float_lin", "float_log"):
+            entry = plan[kind]
+            if not entry or isinstance(entry, list):
+                continue
+            idx, lo, span, hi = entry
+            if kind == "int_lin":
+                # match the scalar formula exactly: lo + int(u * span)
+                vals = lo.astype(np.int64) + (
+                    units[:, idx] * span).astype(np.int64)
+            elif kind == "int_log":
+                vals = np.minimum(np.exp(lo + units[:, idx] * span)
+                                  .astype(np.int64),
+                                  np.array(hi, dtype=np.int64))
+            elif kind == "float_log":
+                vals = np.exp(lo + units[:, idx] * span)
+            else:
+                vals = lo + units[:, idx] * span
+            for k, j in enumerate(idx):
+                cols[j] = vals[:, k].tolist()
+        for j, p in plan["custom"]:
+            # Trust a subclass's own vectorized kernel only if it defines
+            # one; otherwise loop its (possibly overridden) from_unit so
+            # batched conversion never diverges from the scalar path.
+            if "from_unit_array" in type(p).__dict__:
+                cols[j] = p.from_unit_array(units[:, j])
+            else:
+                cols[j] = [p.from_unit(float(u)) for u in units[:, j]]
+        names = self.names
+        return [dict(zip(names, row)) for row in zip(*cols)]
+
     def to_unit_vector(self, config: Mapping[str, Any]) -> np.ndarray:
         self.validate(config)
         return np.array([p.to_unit(config[p.name]) for p in self], dtype=float)
@@ -295,7 +432,7 @@ class ParameterSpace:
 
     def config_key(self, config: Mapping[str, Any]) -> Tuple:
         """Hashable identity of a config (for duplicate-test caching)."""
-        return tuple((n, config[n]) for n in self.names)
+        return tuple((n, config[n]) for n in self._params)
 
 
 class FrozenSpaceView(ParameterSpace):
@@ -325,6 +462,12 @@ class FrozenSpaceView(ParameterSpace):
         cfg.update(self._fixed)
         return cfg
 
+    def from_unit_matrix(self, units: np.ndarray) -> List[Config]:
+        cfgs = super().from_unit_matrix(units)
+        for cfg in cfgs:
+            cfg.update(self._fixed)
+        return cfgs
+
     def to_unit_vector(self, config: Mapping[str, Any]) -> np.ndarray:
         return np.array([p.to_unit(config[p.name]) for p in self], dtype=float)
 
@@ -344,4 +487,4 @@ class FrozenSpaceView(ParameterSpace):
                 )
 
     def config_key(self, config: Mapping[str, Any]) -> Tuple:
-        return tuple((n, config[n]) for n in self.names)
+        return tuple((n, config[n]) for n in self._params)

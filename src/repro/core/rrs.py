@@ -9,7 +9,7 @@ the three scalability conditions:
       batches, finer exploitation), and
   (3) the re-exploration stage prevents permanent capture by local optima.
 
-Structure (faithful to the original):
+Structure (round-synchronous variant):
 
   EXPLORE   Draw ``n = ln(1-p)/ln(1-r)`` samples; with confidence ``p`` the
             best of them lies in the top ``r``-fraction of the space.  The
@@ -17,12 +17,24 @@ Structure (faithful to the original):
             threshold ``y_r``.  Any sample beating ``y_r`` seeds exploitation.
   EXPLOIT   Recursive local search in an axis-aligned box of measure ``rho``
             (initially ``r``) centred on the promising point: ``l =
-            ln(1-q)/ln(1-v)`` samples per round; improvement ⇒ re-centre;
+            ln(1-q)/ln(1-v)`` samples per round; the whole round is scored
+            at once and the box re-centres on the round's best improver;
             no improvement in a round ⇒ shrink the box by ``c``; stop when
             the box measure falls below ``st`` and resume exploration.
 
-ACTS couples RRS with LHS (§4.3 "LHS + RRS"): the exploration batches here are
-drawn with LHS rather than i.i.d. uniform, inheriting LHS's stratified
+Every round — exploration batch, warm-start batch and exploitation round —
+is evaluated as ONE call through ``_BudgetedRun.evaluate_batch``, so a SUT
+exposing the tuner's ``BatchEvaluator`` protocol scores each round in a
+single vectorized call instead of ``n`` Python round-trips.  (The original
+formulation evaluates exploitation candidates one at a time and re-centres
+on the *first* improver; scoring the full round and taking its best is the
+standard batch-parallel adaptation, and is what makes the evaluation
+pipeline vectorizable end to end.)  Candidate generation is independent of
+the dispatch mode, so batched and sequential runs are trial-for-trial
+identical.
+
+ACTS couples RRS with LHS (§4.3 "LHS + RRS"): the exploration batches here
+are drawn with LHS rather than i.i.d. uniform, inheriting LHS's stratified
 coverage; set ``explore_sampler="random"`` for the original formulation.
 
 Everything operates on the unit hypercube via ``ParameterSpace``; boolean and
@@ -35,7 +47,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from .base import BudgetExhausted, Objective, Trial, TuningResult
+from .base import BatchObjective, BudgetExhausted, Objective, Trial, \
+    TuningResult
+from .base import BudgetedRun as _BudgetedRun
 from .params import Config, ParameterSpace
 from .sampling import get_sampler
 
@@ -48,11 +62,17 @@ class RRSOptimizer:
         p: float = 0.99,
         r: float = 0.1,
         q: float = 0.99,
-        v: float = 0.8,
+        v: float = 0.5,
         c: float = 0.5,
         st: float = 1e-3,
         explore_sampler: str = "lhs",
     ):
+        # v=0.5 (l = ln(1-q)/ln(1-v) = 7 samples per exploitation round) is
+        # the round-synchronous default: wider rounds both amortize the
+        # per-round dispatch of the batched evaluation engine and drill the
+        # promising box with confidence q per round.  The original paper's
+        # sequential formulation used v=0.8 (l = 3); pass it explicitly to
+        # reproduce that behaviour.
         if not (0 < r < 1 and 0 < p < 1 and 0 < q < 1 and 0 < v < 1):
             raise ValueError("p, r, q, v must be in (0, 1)")
         if not (0 < c < 1):
@@ -71,28 +91,13 @@ class RRSOptimizer:
         budget: int,
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
+        batch_objective: Optional[BatchObjective] = None,
     ) -> TuningResult:
         """Minimize ``objective`` over ``space`` within ``budget`` tests."""
         dim = space.dim
         sampler = get_sampler(self.explore_sampler)
-
-        history: List[Trial] = []
+        run = _BudgetedRun(space, objective, budget, batch_objective)
         explore_values: List[float] = []
-        n_tests = 0
-        best_u: Optional[np.ndarray] = None
-        best_val = math.inf
-
-        def evaluate(u: np.ndarray, phase: str) -> float:
-            nonlocal n_tests, best_u, best_val
-            if n_tests >= budget:
-                raise BudgetExhausted
-            cfg = space.from_unit_vector(u)
-            val = float(objective(cfg))
-            n_tests += 1
-            history.append(Trial(cfg, val, n_tests, phase))
-            if val < best_val:
-                best_val, best_u = val, u.copy()
-            return val
 
         def threshold() -> float:
             """Running r-quantile of exploration values (promise threshold)."""
@@ -103,49 +108,39 @@ class RRSOptimizer:
         try:
             # Optional warm start (e.g. the tuner's initial LHS round).
             if init_unit_points is not None:
-                for u in np.atleast_2d(init_unit_points):
-                    val = evaluate(np.asarray(u, dtype=float), "explore")
-                    explore_values.append(val)
+                vals = run.evaluate_batch(np.atleast_2d(init_unit_points),
+                                          "explore")
+                explore_values.extend(float(v) for v in vals)
 
             while True:
                 # ---------------- exploration ----------------
                 batch = sampler(self.n_explore, dim, rng)
-                promising: Optional[np.ndarray] = None
-                promising_val = math.inf
-                for u in batch:
-                    val = evaluate(u, "explore")
-                    explore_values.append(val)
-                    if val < promising_val:
-                        promising, promising_val = u.copy(), val
+                vals = run.evaluate_batch(batch, "explore")
+                explore_values.extend(float(v) for v in vals)
+                i_best = int(np.argmin(vals))
+                promising = np.asarray(batch[i_best], dtype=float)
+                promising_val = float(vals[i_best])
                 # Only exploit points that beat the running r-quantile
                 # threshold (the "promising" test of the original paper).
-                if promising is None or promising_val > threshold():
+                if promising_val > threshold():
                     continue
 
                 # ---------------- exploitation ----------------
                 center, center_val = promising, promising_val
                 rho = self.r  # box measure as a fraction of the space
                 while rho >= self.st:
-                    improved = False
-                    for _ in range(self.n_exploit):
-                        cand = self._sample_box(center, rho, dim, rng)
-                        val = evaluate(cand, "exploit")
-                        if val < center_val:
-                            center, center_val = cand, val
-                            improved = True
-                            break  # re-align immediately on improvement
-                    if not improved:
+                    cands = self._sample_box_round(center, rho, dim, rng,
+                                                   self.n_exploit)
+                    cvals = run.evaluate_batch(cands, "exploit")
+                    j = int(np.argmin(cvals))
+                    if float(cvals[j]) < center_val:
+                        center, center_val = cands[j], float(cvals[j])
+                    else:
                         rho *= self.c  # shrink and keep drilling
         except BudgetExhausted:
             pass
 
-        if best_u is None:
-            # Budget was zero; fall back to the space default.
-            cfg = space.default_config()
-            return TuningResult(cfg, math.inf, history, n_tests)
-        return TuningResult(
-            space.from_unit_vector(best_u), best_val, history, n_tests
-        )
+        return run.result()
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -160,3 +155,19 @@ class RRSOptimizer:
         lo = np.maximum(lo, 0.0)
         hi = np.minimum(lo + side, 1.0)
         return lo + rng.random(dim) * (hi - lo)
+
+    @staticmethod
+    def _sample_box_round(
+        center: np.ndarray, rho: float, dim: int,
+        rng: np.random.Generator, n: int
+    ) -> np.ndarray:
+        """One exploitation round of ``n`` box samples in a single draw.
+
+        ``rng.random((n, dim))`` consumes the bit stream exactly like ``n``
+        sequential ``_sample_box`` calls, so round-based runs reproduce the
+        point-by-point candidate sequence."""
+        side = rho ** (1.0 / dim)
+        lo = np.clip(center - side / 2, 0.0, 1.0 - side)
+        lo = np.maximum(lo, 0.0)
+        hi = np.minimum(lo + side, 1.0)
+        return lo + rng.random((n, dim)) * (hi - lo)

@@ -23,14 +23,22 @@ Surrogates carry a tiny deterministic "measurement jitter" (hash-seeded,
 ±0.5%) so optimizers face realistic non-smoothness, while every test remains
 exactly reproducible — a requirement for the test suite.
 
+Every surrogate implements the tuner's ``BatchEvaluator`` protocol: the
+response surface is evaluated as vectorized NumPy over a whole candidate
+round (``test_batch``), and the scalar ``test`` delegates to a batch of one
+so both evaluation engines share bit-identical arithmetic.  The per-call
+Python overhead this amortizes (knob-space construction, validation,
+scalar math) is exactly the per-sample evaluation cost the batched tuning
+engine exists to remove.
+
 These surrogates are the paper's *benchmark workloads*; the real system under
 tune in this repo is the JAX distributed runtime (``repro.core.sut_jax``).
 """
 from __future__ import annotations
 
 import math
-import zlib
-from typing import Any, Dict, Optional, Tuple
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,15 +62,70 @@ __all__ = [
 ]
 
 
-def _jitter(config: Config, scale: float = 0.005) -> float:
-    """Deterministic pseudo-measurement-noise multiplier in [1-s, 1+s]."""
-    h = zlib.crc32(repr(sorted(config.items())).encode()) / 0xFFFFFFFF
-    return 1.0 + scale * (2.0 * h - 1.0)
+def _jitter_unit(cols: Sequence[np.ndarray]) -> np.ndarray:
+    """Deterministic pseudo-noise seed in [0, 1) per config (vectorized).
+
+    FNV/Murmur-style mixing of every knob column's float64 bit pattern —
+    one batch of vector ops instead of a per-config ``repr``+``crc32``
+    round-trip.  Configs differing in any knob (used by the response
+    surface or not) draw different noise, like a real measurement would.
+    """
+    if isinstance(cols, np.ndarray):
+        mat = cols  # (n, k) knob matrix
+    else:
+        mat = np.column_stack(cols) if len(cols) else np.zeros((0, 1))
+    bits = np.ascontiguousarray(mat.astype(np.float64, copy=False)) \
+        .view(np.uint64)
+    h = np.full(len(mat), 0xCBF29CE484222325, dtype=np.uint64)
+    for j in range(bits.shape[1]):
+        h = (h ^ bits[:, j]) * np.uint64(0x100000001B3)
+    h ^= h >> np.uint64(33)
+    h = h * np.uint64(0xFF51AFD7ED558CCD)
+    h ^= h >> np.uint64(29)
+    return (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
 
 
-def _sat(x: float, x0: float, sharp: float = 1.0) -> float:
-    """Smooth saturating curve in [0, 1]: 0 at -inf, 1 at +inf, 0.5 at x0."""
-    return 1.0 / (1.0 + math.exp(-sharp * (x - x0)))
+def _jitter_scale(unit: np.ndarray, scale: float = 0.005) -> np.ndarray:
+    """Noise multiplier in [1-s, 1+s] from a per-config unit seed."""
+    return 1.0 + scale * (2.0 * unit - 1.0)
+
+
+def _sat(x, x0: float, sharp: float = 1.0):
+    """Smooth saturating curve in [0, 1]: 0 at -inf, 1 at +inf, 0.5 at x0.
+
+    Accepts scalars or arrays (vectorized batch path).
+    """
+    return 1.0 / (1.0 + np.exp(-sharp * (np.asarray(x, dtype=float) - x0)))
+
+
+# constant offsets that re-zero each gain term at the default setting;
+# precomputed once (identical formulas, hoisted out of the batch hot path)
+def _const(x) -> float:
+    return float(np.asarray(x))
+
+
+# enum lookup tables (indexed by canonical enum position / knob value)
+_QCT_READ = np.array([0.0, 1.20, 0.85])
+_QCT_RW = np.array([0.0, -0.18, 0.02])
+_FLUSH_RW = np.array([0.85, 0.0, 0.60])
+_COMP_TABLE = np.array([1.0, 0.97, 0.90])
+_GC_TABLE = np.array([0.97, 1.0, 0.95])
+_EVICT_TABLE = np.array([0.05, 0.07, 0.0])
+_C_SAT_TC = _const(1.0 / (1.0 + np.exp(-0.05 * (9 - 64))))
+_C_BP_READ = _const(0.55 * 2 / (1.0 + np.exp(-6.0 * (0.0 - 0.45))))
+_C_CONN_READ = 0.10 * math.exp(-((151 - 1800) / 1200.0) ** 2)
+_C_BP_RW = _const(1.0 / (1.0 + np.exp(-5.0 * (0.0 - 0.4))))
+_C_CONN_RW = 0.12 * math.exp(-((151 - 900) / 700.0) ** 2)
+_C_LF_RW = _const(1.0 / (1.0 + np.exp(-5.0 * (math.log2(12.0) / 10.0 - 0.5))))
+
+
+def _col(configs: Sequence[Config], knob: str) -> np.ndarray:
+    return np.array([c[knob] for c in configs], dtype=float)
+
+
+def _map_enum(configs: Sequence[Config], knob: str,
+              table: Dict[Any, float]) -> np.ndarray:
+    return np.array([table[c[knob]] for c in configs], dtype=float)
 
 
 class Surrogate:
@@ -74,7 +137,21 @@ class Surrogate:
         raise NotImplementedError
 
     def test(self, config: Config) -> PerfMetric:
-        raise NotImplementedError
+        """Validate + score one configuration (a batch of one)."""
+        self.space().validate(config)
+        return self.test_batch([config])[0]
+
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        """Score a whole candidate round in one vectorized call.
+
+        Configs are trusted (no per-config validation) — the tuner only
+        sends configs produced by ``ParameterSpace.from_unit_vector``.
+        Subclasses override this with a vectorized path; the fallback here
+        loops a subclass-provided ``test``.
+        """
+        if type(self).test is Surrogate.test:  # neither method overridden
+            raise NotImplementedError("override test or test_batch")
+        return [self.test(c) for c in configs]
 
     # For Fig.1-style projections.
     def surface(
@@ -84,14 +161,15 @@ class Surrogate:
         base = space.default_config()
         xs = space[knob_x].grid(n)
         ys = space[knob_y].grid(n)
-        z = np.zeros((len(xs), len(ys)))
-        for i, xv in enumerate(xs):
-            for j, yv in enumerate(ys):
+        cfgs = []
+        for xv in xs:
+            for yv in ys:
                 cfg = dict(base)
                 cfg[knob_x] = xv
                 cfg[knob_y] = yv
-                z[i, j] = self.test(cfg).value
-        return xs, ys, z
+                cfgs.append(cfg)
+        vals = np.array([m.value for m in self.test_batch(cfgs)])
+        return xs, ys, vals.reshape(len(xs), len(ys))
 
 
 # ---------------------------------------------------------------------------
@@ -134,76 +212,105 @@ class MySQLSurrogate(Surrogate):
             ]
         )
 
-    # per-knob log-gain functions; g(default) == 0 by construction
-    def _gains(self, cfg: Config) -> Dict[str, float]:
-        mb = 1024 * 1024
-        g: Dict[str, float] = {}
+    _KNOBS = ("query_cache_type", "innodb_buffer_pool_size",
+              "max_connections", "innodb_log_file_size",
+              "innodb_flush_log_at_trx_commit", "thread_cache_size",
+              "table_open_cache", "innodb_thread_concurrency",
+              "sync_binlog", "tmp_table_size")
+    _QCT_IDX = {"OFF": 0, "ON": 1, "DEMAND": 2}
 
-        bp = math.log2(cfg["innodb_buffer_pool_size"] / (128 * mb)) / 8.0  # 0..1
-        lf = math.log2(cfg["innodb_log_file_size"] / (4 * mb)) / 10.0  # 0..1
-        conn = cfg["max_connections"]
-        tc = cfg["thread_cache_size"]
-        toc = math.log2(cfg["table_open_cache"] / 64.0) / 8.0
-        itc = cfg["innodb_thread_concurrency"]
-        tmp = math.log2(cfg["tmp_table_size"] / mb) / 10.0
+    # canonical numeric columns: one extraction pass shared by gains + jitter
+    def _extract(self, configs: Sequence[Config]) -> Dict[str, np.ndarray]:
+        qct_idx = self._QCT_IDX
+        mat = np.array(
+            [(qct_idx[c["query_cache_type"]], c["innodb_buffer_pool_size"],
+              c["max_connections"], c["innodb_log_file_size"],
+              c["innodb_flush_log_at_trx_commit"], c["thread_cache_size"],
+              c["table_open_cache"], c["innodb_thread_concurrency"],
+              c["sync_binlog"], c["tmp_table_size"]) for c in configs],
+            dtype=float)
+        return dict(zip(self._KNOBS, mat.T))
+
+    # per-knob log-gain terms, vectorized; g(default) == 0 by construction
+    def _gain_terms(self, cols: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        mb = 1024 * 1024
+        g: Dict[str, np.ndarray] = {}
+
+        qct = cols["query_cache_type"]  # 0=OFF 1=ON 2=DEMAND
+        bp = np.log2(cols["innodb_buffer_pool_size"] / (128 * mb)) / 8.0
+        lf = np.log2(cols["innodb_log_file_size"] / (4 * mb)) / 10.0
+        conn = cols["max_connections"]
+        flush = cols["innodb_flush_log_at_trx_commit"]
+        tc = cols["thread_cache_size"]
+        toc = np.log2(cols["table_open_cache"] / 64.0) / 8.0
+        itc = cols["innodb_thread_concurrency"]
+        sync = cols["sync_binlog"] != 0
+        tmp = np.log2(cols["tmp_table_size"] / mb) / 10.0
 
         if self.workload == "uniform_read":
             # Fig 1a: query cache dominates — two nearly-parallel "lines".
-            g["query_cache_type"] = {"OFF": 0.0, "ON": 1.20, "DEMAND": 0.85}[
-                cfg["query_cache_type"]
-            ]
-            g["innodb_buffer_pool_size"] = 0.55 * _sat(bp, 0.45, 6.0) * 2 - 0.55 * 2 * _sat(0.0, 0.45, 6.0)
-            g["max_connections"] = 0.10 * math.exp(-((conn - 1800) / 1200.0) ** 2) - 0.10 * math.exp(-((151 - 1800) / 1200.0) ** 2)
+            g["query_cache_type"] = _QCT_READ[qct.astype(np.int64)]
+            g["innodb_buffer_pool_size"] = 0.55 * _sat(bp, 0.45, 6.0) * 2 - _C_BP_READ
+            g["max_connections"] = 0.10 * np.exp(-((conn - 1800) / 1200.0) ** 2) - _C_CONN_READ
             g["innodb_log_file_size"] = 0.04 * (lf - math.log2(12.0) / 10.0)
             g["innodb_flush_log_at_trx_commit"] = 0.0  # read-only: irrelevant
-            g["thread_cache_size"] = 0.06 * (_sat(tc, 64, 0.05) - _sat(9, 64, 0.05))
+            g["thread_cache_size"] = 0.06 * (_sat(tc, 64, 0.05) - _C_SAT_TC)
             g["table_open_cache"] = 0.05 * (toc - math.log2(2000 / 64.0) / 8.0)
-            g["innodb_thread_concurrency"] = 0.05 * math.exp(-((itc - 0) / 24.0) ** 2) - 0.05
+            g["innodb_thread_concurrency"] = 0.05 * np.exp(-((itc - 0) / 24.0) ** 2) - 0.05
             g["sync_binlog"] = 0.0
             g["tmp_table_size"] = 0.02 * (tmp - 4.0 / 10.0)
         else:
             # Fig 1d: cache invalidation kills the query cache's dominance.
-            g["query_cache_type"] = {"OFF": 0.0, "ON": -0.18, "DEMAND": 0.02}[
-                cfg["query_cache_type"]
-            ]
-            g["innodb_buffer_pool_size"] = 0.55 * (_sat(bp, 0.4, 5.0) - _sat(0.0, 0.4, 5.0))
-            g["max_connections"] = 0.12 * math.exp(-((conn - 900) / 700.0) ** 2) - 0.12 * math.exp(-((151 - 900) / 700.0) ** 2)
-            g["innodb_log_file_size"] = 0.35 * (_sat(lf, 0.5, 5.0) - _sat(math.log2(12.0) / 10.0, 0.5, 5.0))
-            g["innodb_flush_log_at_trx_commit"] = {1: 0.0, 0: 0.85, 2: 0.60}[
-                cfg["innodb_flush_log_at_trx_commit"]
-            ]
-            g["thread_cache_size"] = 0.08 * (_sat(tc, 64, 0.05) - _sat(9, 64, 0.05))
+            g["query_cache_type"] = _QCT_RW[qct.astype(np.int64)]
+            g["innodb_buffer_pool_size"] = 0.55 * (_sat(bp, 0.4, 5.0) - _C_BP_RW)
+            g["max_connections"] = 0.12 * np.exp(-((conn - 900) / 700.0) ** 2) - _C_CONN_RW
+            g["innodb_log_file_size"] = 0.35 * (_sat(lf, 0.5, 5.0) - _C_LF_RW)
+            g["innodb_flush_log_at_trx_commit"] = _FLUSH_RW[
+                flush.astype(np.int64)]  # indexed by knob value 0/1/2
+            g["thread_cache_size"] = 0.08 * (_sat(tc, 64, 0.05) - _C_SAT_TC)
             g["table_open_cache"] = 0.03 * (toc - math.log2(2000 / 64.0) / 8.0)
-            g["innodb_thread_concurrency"] = 0.10 * math.exp(-((itc - 32) / 24.0) ** 2) - 0.10 * math.exp(-((0 - 32) / 24.0) ** 2)
-            g["sync_binlog"] = 0.40 if not cfg["sync_binlog"] else 0.0
+            g["innodb_thread_concurrency"] = 0.10 * np.exp(-((itc - 32) / 24.0) ** 2) - 0.10 * math.exp(-((0 - 32) / 24.0) ** 2)
+            g["sync_binlog"] = np.where(sync, 0.0, 0.40)
             g["tmp_table_size"] = 0.05 * (tmp - 4.0 / 10.0)
         return g
+
+    def _gains(self, cfg: Config) -> Dict[str, float]:
+        terms = self._gain_terms(self._extract([cfg]))
+        # constant (config-independent) terms are plain floats
+        return {k: float(v if np.isscalar(v) else v[0])
+                for k, v in terms.items()}
 
     def _max_log_gain(self) -> float:
         """Analytic max of sum of gains (each term maximized independently)."""
         space = self.space()
         best = 0.0
+        default = space.default_config()
         for p in space:
             vals = p.grid(64) if p.cardinality is None or p.cardinality > 64 else p.grid(p.cardinality)
-            gmax = -math.inf
+            cfgs = []
             for v in vals:
-                cfg = space.default_config()
+                cfg = dict(default)
                 cfg[p.name] = v
-                gmax = max(gmax, self._gains(cfg)[p.name])
-            best += gmax
+                cfgs.append(cfg)
+            best += float(np.max(self._gain_terms(self._extract(cfgs))[p.name]))
         return best
 
-    def test(self, config: Config) -> PerfMetric:
-        self.space().validate(config)
-        g = sum(self._gains(config).values())
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        cols = self._extract(configs)
+        g = sum(self._gain_terms(cols).values())
         if self.workload == "uniform_read":
             # Normalize so the global max hits BEST_TPUT exactly.
             scale = math.log(self.BEST_TPUT / self.DEFAULT_TPUT) / self._max_log_gain_cached()
         else:
             scale = 1.0
-        tput = self.DEFAULT_TPUT * math.exp(g * scale) * _jitter(config)
-        return PerfMetric(value=tput, higher_is_better=True,
-                          metrics={"ops_per_sec": tput, "workload": self.workload})
+        jit = _jitter_scale(_jitter_unit(list(cols.values())))
+        tput = self.DEFAULT_TPUT * np.exp(g * scale) * jit
+        return [
+            PerfMetric(value=float(t), higher_is_better=True,
+                       metrics={"ops_per_sec": float(t),
+                                "workload": self.workload})
+            for t in tput
+        ]
 
     _mlg: Optional[float] = None
 
@@ -233,7 +340,6 @@ class TomcatSurrogate(Surrogate):
         self.fully_utilized = fully_utilized
 
     def space(self) -> ParameterSpace:
-        mb = 1024 * 1024
         return ParameterSpace(
             [
                 IntParam("maxThreads", 25, 1000, default=200),
@@ -248,60 +354,88 @@ class TomcatSurrogate(Surrogate):
             ]
         )
 
-    def _utilization_score(self, cfg: Config) -> float:
-        """0..1 'smoothness-free' capacity score."""
-        mt = cfg["maxThreads"]
-        heap = cfg["jvm_heap_mb"]
+    _KNOBS = ("maxThreads", "acceptCount", "maxKeepAliveRequests",
+              "connectionTimeout_ms", "tcpNoDelay", "compression",
+              "jvm_heap_mb", "jvm_TargetSurvivorRatio", "jvm_gc")
+    _COMP_IDX = {"off": 0, "on": 1, "force": 2}
+    _GC_IDX = {"ParallelGC": 0, "G1GC": 1, "CMS": 2}
+
+    def _extract(self, configs: Sequence[Config]) -> Dict[str, np.ndarray]:
+        comp_idx, gc_idx = self._COMP_IDX, self._GC_IDX
+        mat = np.array(
+            [(c["maxThreads"], c["acceptCount"], c["maxKeepAliveRequests"],
+              c["connectionTimeout_ms"], c["tcpNoDelay"],
+              comp_idx[c["compression"]], c["jvm_heap_mb"],
+              c["jvm_TargetSurvivorRatio"], gc_idx[c["jvm_gc"]])
+             for c in configs],
+            dtype=float)
+        return dict(zip(self._KNOBS, mat.T))
+
+    def _utilization_score(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        """0..1 'smoothness-free' capacity score (vectorized)."""
+        mt = cols["maxThreads"]
+        heap = cols["jvm_heap_mb"]
         # concave peak in threads (context-switch cost beyond ~400)
-        s_threads = math.exp(-((mt - 420) / 320.0) ** 2)
-        s_heap = _sat(math.log2(heap / 256.0), 2.2, 1.6)
-        s_accept = _sat(cfg["acceptCount"], 150, 0.01)
-        s_keep = _sat(cfg["maxKeepAliveRequests"], 60, 0.02)
-        s_nodelay = 1.0 if cfg["tcpNoDelay"] else 0.93
-        s_comp = {"off": 1.0, "on": 0.97, "force": 0.90}[cfg["compression"]]
-        s_gc = {"ParallelGC": 0.97, "G1GC": 1.0, "CMS": 0.95}[cfg["jvm_gc"]]
+        s_threads = np.exp(-((mt - 420) / 320.0) ** 2)
+        s_heap = _sat(np.log2(heap / 256.0), 2.2, 1.6)
+        s_accept = _sat(cols["acceptCount"], 150, 0.01)
+        s_keep = _sat(cols["maxKeepAliveRequests"], 60, 0.02)
+        s_nodelay = np.where(cols["tcpNoDelay"] != 0, 1.0, 0.93)
+        s_comp = _COMP_TABLE[cols["compression"].astype(np.int64)]
+        s_gc = _GC_TABLE[cols["jvm_gc"].astype(np.int64)]
         return (
             0.45 * s_threads + 0.25 * s_heap + 0.1 * s_accept + 0.1 * s_keep
         ) * s_nodelay * s_comp * s_gc + 0.1
 
-    def _bumps(self, cfg: Config) -> float:
+    def _bumps(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
         """Irregular bumpy modulation; phase set by the JVM survivor ratio."""
-        mt = cfg["maxThreads"]
-        ac = cfg["acceptCount"]
-        phase = cfg["jvm_TargetSurvivorRatio"] / 99.0 * 2 * math.pi
+        mt = cols["maxThreads"]
+        ac = cols["acceptCount"]
+        phase = cols["jvm_TargetSurvivorRatio"] / 99.0 * 2 * math.pi
         b = (
-            0.05 * math.sin(mt / 37.0 + phase)
-            + 0.04 * math.sin(mt / 11.0 + 2.3 * phase)
-            + 0.03 * math.sin(ac / 23.0 - phase)
+            0.05 * np.sin(mt / 37.0 + phase)
+            + 0.04 * np.sin(mt / 11.0 + 2.3 * phase)
+            + 0.03 * np.sin(ac / 23.0 - phase)
         )
         return 1.0 + b
 
-    def test(self, config: Config) -> PerfMetric:
-        self.space().validate(config)
-        score = self._utilization_score(config) * self._bumps(config)
-        default = dict(self.space().default_config())
-        ref = self._utilization_score(default) * self._bumps(default)
-        rel = score / ref
+    _ref_score: Optional[float] = None
+
+    def _default_score(self) -> float:
+        if type(self)._ref_score is None:
+            cols = self._extract([self.space().default_config()])
+            type(self)._ref_score = float(
+                (self._utilization_score(cols) * self._bumps(cols))[0])
+        return type(self)._ref_score
+
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        cols = self._extract(configs)
+        score = self._utilization_score(cols) * self._bumps(cols)
+        rel = score / self._default_score()
         if self.fully_utilized:
             # §5.2: network cores saturated — compress headroom to ~±5%.
-            rel = 1.0 + 0.28 * (rel - 1.0) if rel > 1 else rel
-            rel = min(rel, 1.055)
-        txns = self.DEFAULT_TXNS * rel * _jitter(config)
-        hits = 3235.0 * (rel ** 2.8) * _jitter(config, 0.003)  # hits grow faster
-        failed = max(0.0, 165.0 / (rel ** 3.2)) * _jitter(config, 0.01)
-        errors = max(0.0, 37.0 / (rel ** 2.4)) * _jitter(config, 0.01)
+            rel = np.where(rel > 1, 1.0 + 0.28 * (rel - 1.0), rel)
+            rel = np.minimum(rel, 1.055)
+        jit = _jitter_unit(list(cols.values()))
+        txns = self.DEFAULT_TXNS * rel * _jitter_scale(jit)
+        hits = 3235.0 * (rel ** 2.8) * _jitter_scale(jit, 0.003)
+        failed = np.maximum(0.0, 165.0 / (rel ** 3.2)) * _jitter_scale(jit, 0.01)
+        errors = np.maximum(0.0, 37.0 / (rel ** 2.4)) * _jitter_scale(jit, 0.01)
         passed = txns * 3600.0 * 0.904
-        return PerfMetric(
-            value=txns,
-            higher_is_better=True,
-            metrics={
-                "txns_per_sec": txns,
-                "hits_per_sec": hits,
-                "passed_txns": passed,
-                "failed_txns": failed,
-                "errors": errors,
-            },
-        )
+        return [
+            PerfMetric(
+                value=float(txns[i]),
+                higher_is_better=True,
+                metrics={
+                    "txns_per_sec": float(txns[i]),
+                    "hits_per_sec": float(hits[i]),
+                    "passed_txns": float(passed[i]),
+                    "failed_txns": float(failed[i]),
+                    "errors": float(errors[i]),
+                },
+            )
+            for i in range(len(configs))
+        ]
 
 
 # ---------------------------------------------------------------------------
@@ -331,28 +465,36 @@ class SparkSurrogate(Surrogate):
             ]
         )
 
-    def test(self, config: Config) -> PerfMetric:
-        self.space().validate(config)
-        c = config
-        mem = math.log2(c["executor_memory_mb"] / 512.0) / 5.0  # 0..1
-        par = math.log2(c["default_parallelism"] / 8.0) / 6.0  # 0..1
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        cores = _col(configs, "executor_cores")
+        mem_mb = _col(configs, "executor_memory_mb")
+        parallelism = _col(configs, "default_parallelism")
+        kryo = _map_enum(configs, "serializer", {"java": 0, "kryo": 1})
+        compress = _col(configs, "shuffle_compress")
+        frac = _col(configs, "memory_fraction")
+        mem = np.log2(mem_mb / 512.0) / 5.0
+        par = np.log2(parallelism / 8.0) / 6.0
         s = (
-            0.8 * _sat(c["executor_cores"], 3.0, 1.1)
+            0.8 * _sat(cores, 3.0, 1.1)
             + 0.7 * _sat(mem, 0.45, 6.0)
-            + 0.3 * math.exp(-((par - 0.55) / 0.35) ** 2)
-            + (0.12 if c["serializer"] == "kryo" else 0.0)
-            + (0.05 if c["shuffle_compress"] else 0.0)
-            + 0.2 * math.exp(-((c["memory_fraction"] - 0.62) / 0.18) ** 2)
+            + 0.3 * np.exp(-((par - 0.55) / 0.35) ** 2)
+            + np.where(kryo != 0, 0.12, 0.0)
+            + np.where(compress != 0, 0.05, 0.0)
+            + 0.2 * np.exp(-((frac - 0.62) / 0.18) ** 2)
         )
         if self.deployment == "cluster":
-            # Fig 1f: sharp rise at executor.cores == 4 (NUMA/slot alignment).
-            if c["executor_cores"] == 4:
-                s *= 1.35
-            elif c["executor_cores"] > 4:
-                s *= 0.92  # oversubscription penalty
-        tput = self.DEFAULT_TPUT * s * _jitter(config)
-        return PerfMetric(value=tput, higher_is_better=True,
-                          metrics={"jobs_norm": tput, "deployment": self.deployment})
+            # Fig 1f: sharp rise at executor.cores == 4 (NUMA/slot alignment);
+            # oversubscription penalty above.
+            s = np.where(cores == 4, s * 1.35, np.where(cores > 4, s * 0.92, s))
+        jit = _jitter_scale(_jitter_unit(
+            [cores, mem_mb, parallelism, compress, kryo, frac]))
+        tput = self.DEFAULT_TPUT * s * jit
+        return [
+            PerfMetric(value=float(t), higher_is_better=True,
+                       metrics={"jobs_norm": float(t),
+                                "deployment": self.deployment})
+            for t in tput
+        ]
 
 
 # ---------------------------------------------------------------------------
@@ -368,7 +510,6 @@ class FrontendSurrogate(Surrogate):
         self.capacity_ceiling = capacity_ceiling
 
     def space(self) -> ParameterSpace:
-        mb = 1024 * 1024
         return ParameterSpace(
             [
                 IntParam("cache_size_mb", 64, 8192, default=256, log=True),
@@ -378,19 +519,26 @@ class FrontendSurrogate(Surrogate):
             ]
         )
 
-    def test(self, config: Config) -> PerfMetric:
-        self.space().validate(config)
-        c = config
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        cache = _col(configs, "cache_size_mb")
+        eviction = _map_enum(configs, "eviction",
+                             {"lru": 0, "lfu": 1, "fifo": 2})
+        workers = _col(configs, "worker_threads")
+        pipeline = _col(configs, "pipeline_requests")
         s = (
             0.75
-            + 0.10 * _sat(math.log2(c["cache_size_mb"] / 64.0), 3.0, 1.2)
-            + {"lru": 0.05, "lfu": 0.07, "fifo": 0.0}[c["eviction"]]
-            + 0.06 * _sat(c["worker_threads"], 12, 0.25)
-            + (0.05 if c["pipeline_requests"] else 0.0)
+            + 0.10 * _sat(np.log2(cache / 64.0), 3.0, 1.2)
+            + _EVICT_TABLE[eviction.astype(np.int64)]
+            + 0.06 * _sat(workers, 12, 0.25)
+            + np.where(pipeline != 0, 0.05, 0.0)
         )
-        tput = self.capacity_ceiling * s * _jitter(config)
-        return PerfMetric(value=tput, higher_is_better=True,
-                          metrics={"ops_per_sec": tput})
+        jit = _jitter_scale(_jitter_unit([cache, eviction, workers, pipeline]))
+        tput = self.capacity_ceiling * s * jit
+        return [
+            PerfMetric(value=float(t), higher_is_better=True,
+                       metrics={"ops_per_sec": float(t)})
+            for t in tput
+        ]
 
 
 class ComposedSUT(Surrogate):
@@ -426,14 +574,32 @@ class ComposedSUT(Surrogate):
         return out
 
     def test(self, config: Config) -> PerfMetric:
-        parts = self._split(config)
-        values = {
-            name: self.members[name].test(cfg).value for name, cfg in parts.items()
-        }
-        bottleneck = min(values, key=values.get)
-        overall = min(values.values()) * (1.0 - self.interaction)
-        return PerfMetric(
-            value=overall,
-            higher_is_better=True,
-            metrics={"member_values": values, "bottleneck_member": bottleneck},
-        )
+        self.space().validate(config)
+        return self.test_batch([config])[0]
+
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        parts = [self._split(c) for c in configs]
+        member_vals: Dict[str, np.ndarray] = {}
+        for name, member in self.members.items():
+            sub = [p[name] for p in parts]
+            batch = getattr(member, "test_batch", None)
+            # duck-typed members (plain test-only SUTs) compose too
+            metrics = batch(sub) if callable(batch) else \
+                [member.test(c) for c in sub]
+            member_vals[name] = np.array([m.value for m in metrics])
+        stacked = np.stack(list(member_vals.values()))  # (members, n)
+        names = list(member_vals)
+        overall = stacked.min(axis=0) * (1.0 - self.interaction)
+        bottleneck_idx = stacked.argmin(axis=0)
+        return [
+            PerfMetric(
+                value=float(overall[i]),
+                higher_is_better=True,
+                metrics={
+                    "member_values": {n: float(member_vals[n][i])
+                                      for n in names},
+                    "bottleneck_member": names[int(bottleneck_idx[i])],
+                },
+            )
+            for i in range(len(configs))
+        ]

@@ -23,7 +23,8 @@ import json
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, \
+    Tuple
 
 import numpy as np
 
@@ -36,6 +37,7 @@ __all__ = [
     "PerfMetric",
     "SystemManipulator",
     "WorkloadGenerator",
+    "BatchEvaluator",
     "TunableSystem",
     "CallableSUT",
     "Tuner",
@@ -77,6 +79,22 @@ class WorkloadGenerator(Protocol):
         ...
 
 
+class BatchEvaluator(Protocol):
+    """A SUT that can score a whole sample set in one call.
+
+    ``test_batch`` must return one ``PerfMetric`` per config, in order, and
+    must be *value-equivalent* to calling ``test`` per config — the tuner
+    relies on that equivalence for batched-vs-sequential parity.  SUTs whose
+    evaluation is vectorizable (analytic surrogates, ``jax.vmap``-able
+    models) implement this to collapse each optimizer round into a single
+    Python call; the trial cache, budget accounting and ``TuningReport``
+    are unaffected.
+    """
+
+    def test_batch(self, configs: Sequence[Config]) -> Sequence[PerfMetric]:
+        ...
+
+
 class TunableSystem:
     """Manipulator + workload generator == one testable SUT deployment."""
 
@@ -99,11 +117,22 @@ class TunableSystem:
 
 
 class CallableSUT:
-    """Adapter: a plain ``config -> PerfMetric`` function as a TunableSystem."""
+    """Adapter: a plain ``config -> PerfMetric`` function as a TunableSystem.
 
-    def __init__(self, fn: Callable[[Config], PerfMetric], name: str = "sut"):
+    Pass ``batch_fn`` (configs -> metrics) to make the adapter a
+    ``BatchEvaluator``; without it the tuner falls back to per-config calls.
+    """
+
+    def __init__(self, fn: Callable[[Config], PerfMetric], name: str = "sut",
+                 batch_fn: Optional[
+                     Callable[[Sequence[Config]], Sequence[PerfMetric]]
+                 ] = None):
         self.fn = fn
         self.name = name
+        if batch_fn is not None:
+            # instance attribute, so hasattr-based batch detection only
+            # fires for adapters that actually provide one
+            self.test_batch = batch_fn
 
     def test(self, config: Config) -> PerfMetric:
         return self.fn(config)
@@ -197,6 +226,14 @@ class Tuner:
     to return a setting *at least as good as* the given one, so the default's
     measurement both anchors the improvement ratio and participates in the
     search history.
+
+    ``batch`` selects the evaluation engine: ``None`` (default) batches
+    whenever the SUT implements the ``BatchEvaluator`` protocol, ``True``
+    forces batching (falling back to an internal loop for test-only SUTs)
+    and ``False`` forces one ``sut.test`` call per trial.  Both engines run
+    the identical trial sequence — same seed + budget gives the same best
+    config and test count — because the optimizers generate candidates
+    round-by-round independent of how rounds are scored.
     """
 
     def __init__(
@@ -210,6 +247,7 @@ class Tuner:
         seed: int = 0,
         optimizer_kwargs: Optional[Dict[str, Any]] = None,
         verbose: bool = False,
+        batch: Optional[bool] = None,
     ):
         if budget < 1:
             raise ValueError("budget (resource limit) must be >= 1")
@@ -222,12 +260,46 @@ class Tuner:
         self.seed = seed
         self.optimizer_kwargs = dict(optimizer_kwargs or {})
         self.verbose = verbose
+        if batch is None:
+            batch = callable(getattr(sut, "test_batch", None))
+        self.batch = bool(batch)
 
         self._cache: Dict[Tuple, PerfMetric] = {}
         self._n_tests = 0
         self._higher_is_better: Optional[bool] = None
+        # SUT invocations: one per test() call plus one per test_batch()
+        # call — the quantity the batched engine minimizes.
+        self.n_evaluator_calls = 0
 
     # ------------------------------------------------------------------
+    def _run_sut(self, configs: List[Config]) -> List[PerfMetric]:
+        """Uncached, unbudgeted SUT evaluation of distinct configs."""
+        if self.batch and callable(getattr(self.sut, "test_batch", None)):
+            self.n_evaluator_calls += 1
+            metrics = list(self.sut.test_batch(configs))
+            if len(metrics) != len(configs):
+                raise ValueError(
+                    f"{getattr(self.sut, 'name', 'sut')}.test_batch returned "
+                    f"{len(metrics)} metrics for {len(configs)} configs")
+            return metrics
+        out = []
+        for cfg in configs:
+            self.n_evaluator_calls += 1
+            out.append(self.sut.test(cfg))
+        return out
+
+    def _record(self, keys: List[Tuple], metrics: List[PerfMetric]) -> None:
+        for key, metric in zip(keys, metrics):
+            self._n_tests += 1
+            self._cache[key] = metric
+            if self._higher_is_better is None:
+                self._higher_is_better = metric.higher_is_better
+            if self.verbose:
+                print(
+                    f"[tuner] test {self._n_tests}/{self.budget}: "
+                    f"value={metric.value:.6g} config={dict(key)}"
+                )
+
     def _test(self, config: Config) -> PerfMetric:
         """Budgeted, cached test of one configuration on the real SUT."""
         key = self.space.config_key(config)
@@ -235,17 +307,33 @@ class Tuner:
             return self._cache[key]
         if self._n_tests >= self.budget:
             raise BudgetExhausted
-        metric = self.sut.test(config)
-        self._n_tests += 1
-        self._cache[key] = metric
-        if self._higher_is_better is None:
-            self._higher_is_better = metric.higher_is_better
-        if self.verbose:
-            print(
-                f"[tuner] test {self._n_tests}/{self.budget}: "
-                f"value={metric.value:.6g} config={config}"
-            )
-        return metric
+        self._record([key], self._run_sut([config]))
+        return self._cache[key]
+
+    def _test_many(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        """Budgeted, cached test of a candidate round.
+
+        Returns metrics for the longest *prefix* of ``configs`` the resource
+        limit allows (cache hits are free; only distinct new configs count).
+        A short return signals budget exhaustion to the optimizer, matching
+        what a per-config loop would have evaluated before stopping.
+        """
+        plan: List[Tuple] = []  # key per prefix config, in order
+        miss_keys: List[Tuple] = []
+        miss_cfgs: List[Config] = []
+        pending = set()
+        for cfg in configs:
+            key = self.space.config_key(cfg)
+            if key not in self._cache and key not in pending:
+                if self._n_tests + len(miss_cfgs) >= self.budget:
+                    break  # this config would exceed the resource limit
+                pending.add(key)
+                miss_keys.append(key)
+                miss_cfgs.append(cfg)  # SUTs must not mutate configs
+            plan.append(key)
+        if miss_cfgs:
+            self._record(miss_keys, self._run_sut(miss_cfgs))
+        return [self._cache[k] for k in plan]
 
     def run(self) -> TuningReport:
         t0 = time.time()
@@ -269,21 +357,24 @@ class Tuner:
 
         # 3. Optimizer consumes the remaining budget (RRS by default).
         def objective(cfg: Config) -> float:
-            metric = self._test(cfg)
-            return metric.objective()
+            return self._test(cfg).objective()
+
+        def batch_objective(cfgs: Sequence[Config]) -> List[float]:
+            return [m.objective() for m in self._test_many(cfgs)]
 
         opt = get_optimizer(self.optimizer_name, **self.optimizer_kwargs)
         remaining = self.budget - self._n_tests
         if remaining > 0:
             # The optimizer gets head-room over the real limit because cached
             # (duplicate) configs don't consume SUT tests; the tuner's own
-            # BudgetExhausted is what actually stops the run.
+            # short-prefix/BudgetExhausted signal is what stops the run.
             result = opt.optimize(
                 self.space,
                 objective,
                 budget=remaining * 4,
                 rng=rng,
                 init_unit_points=init_points,
+                batch_objective=batch_objective,
             )
             # Re-index trials to global test counters (optimizer counts its own).
             offset = len(history)

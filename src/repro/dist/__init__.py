@@ -1,0 +1,20 @@
+"""Distributed-execution substrate: logical-axis sharding rules."""
+from .sharding import (
+    DEFAULT_RULES,
+    DP_ALL_RULES,
+    RULE_PRESETS,
+    AxisRules,
+    axis_rules,
+    constrain,
+    spec_for_shape,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "DP_ALL_RULES",
+    "RULE_PRESETS",
+    "axis_rules",
+    "constrain",
+    "spec_for_shape",
+]

@@ -4,11 +4,19 @@ On CPU (this container) the kernels execute in interpret mode — the kernel
 *body* runs in Python/XLA per grid step, which validates semantics; on a real
 TPU the same calls compile through Mosaic.  ``interpret`` is resolved from
 the backend unless forced.
+
+Block sizes are no longer hard-coded: when a caller does not pass an
+explicit override, the wrapper resolves the tiling through the kernel
+autotune cache (``repro.autotune``) keyed by (kernel, problem signature,
+dtype, backend), falling back to the builtin defaults below.  Resolution
+happens at Python/trace time (block sizes are static arguments), so a
+tuned cache entry re-specializes the jitted kernel exactly like passing
+the blocks by hand.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 
@@ -18,45 +26,109 @@ from .gla import gla_pallas
 from .rmsnorm import rmsnorm_pallas
 
 __all__ = ["flash_attention", "flash_decode", "rmsnorm", "gla",
-           "default_interpret"]
+           "default_interpret", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
+    "flash_attention": {"block_q": 128, "block_kv": 128},
+    "decode_attention": {"block_kv": 256},
+    "gla": {"chunk": 128},
+    "rmsnorm": {"block_rows": 256},
+}
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve(kernel: str, dims: Dict[str, int], dtype: Any,
+             overrides: Dict[str, Optional[int]]) -> Dict[str, int]:
+    """Explicit override > autotune cache > builtin default, per knob."""
+    blocks = dict(DEFAULT_BLOCKS[kernel])
+    if any(v is None for v in overrides.values()):
+        from repro.autotune import resolve_blocks
+
+        blocks = resolve_blocks(kernel, dims, str(dtype), blocks)
+    blocks.update({k: v for k, v in overrides.items() if v is not None})
+    return blocks
+
+
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
                                              "block_q", "block_kv",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    q_offset: int = 0, block_q: int = 128,
-                    block_kv: int = 128,
-                    interpret: Optional[bool] = None):
-    interp = default_interpret() if interpret is None else interpret
+def _flash_attention(q, k, v, *, causal, window, q_offset, block_q, block_kv,
+                     interpret):
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        block_q=block_q, block_kv=block_kv, interpret=interp)
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    interp = default_interpret() if interpret is None else interpret
+    B, S, H, D = q.shape
+    blocks = _resolve(
+        "flash_attention",
+        {"B": B, "S": S, "H": H, "KV": k.shape[2], "D": D}, q.dtype,
+        {"block_q": block_q, "block_kv": block_kv})
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, block_q=blocks["block_q"],
+                            block_kv=blocks["block_kv"], interpret=interp)
+
+
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",
                                              "interpret"))
-def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+def _rmsnorm(x, scale, *, eps, block_rows, interpret):
+    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            block_rows: Optional[int] = None,
             interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
-    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
-                          interpret=interp)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    blocks = _resolve("rmsnorm", {"ROWS": rows, "D": x.shape[-1]}, x.dtype,
+                      {"block_rows": block_rows})
+    return _rmsnorm(x, scale, eps=eps, block_rows=blocks["block_rows"],
+                    interpret=interp)
 
 
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def gla(q, k, v, log_g, *, chunk: int = 128,
+def _gla(q, k, v, log_g, *, chunk, interpret):
+    return gla_pallas(q, k, v, log_g, chunk=chunk, interpret=interpret)
+
+
+def gla(q, k, v, log_g, *, chunk: Optional[int] = None,
         interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
-    return gla_pallas(q, k, v, log_g, chunk=chunk, interpret=interp)
+    B, S, H, dk = q.shape
+    blocks = _resolve("gla",
+                      {"B": B, "S": S, "H": H, "DK": dk,
+                       "DV": v.shape[-1]}, q.dtype, {"chunk": chunk})
+    return _gla(q, k, v, log_g, chunk=blocks["chunk"], interpret=interp)
 
 
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
-def flash_decode(q, k, v, kv_len, *, block_kv: int = 256,
+def _flash_decode(q, k, v, kv_len, *, block_kv, interpret):
+    return flash_decode_pallas(q, k, v, kv_len, block_kv=block_kv,
+                               interpret=interpret)
+
+
+def flash_decode(q, k, v, kv_len, *, block_kv: Optional[int] = None,
                  interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
-    return flash_decode_pallas(q, k, v, kv_len, block_kv=block_kv,
-                               interpret=interp)
+    B, H, D = q.shape
+    blocks = _resolve(
+        "decode_attention",
+        {"B": B, "S": k.shape[1], "H": H, "KV": k.shape[2], "D": D},
+        q.dtype, {"block_kv": block_kv})
+    return _flash_decode(q, k, v, kv_len, block_kv=blocks["block_kv"],
+                         interpret=interp)

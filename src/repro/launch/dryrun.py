@@ -88,18 +88,20 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              verbose: bool = True) -> Dict[str, Any]:
     """Lower + compile one cell; returns the roofline-input record."""
     cfg = get_config(arch)
+    shape = SHAPES[shape_name]
     cfg_updates: Dict[str, Any] = {}
     if knobs.attn_impl:
         cfg_updates["attn_impl"] = knobs.attn_impl
-    if knobs.attn_block_q:
-        cfg_updates["attn_block_q"] = knobs.attn_block_q
-    if knobs.attn_block_kv:
-        cfg_updates["attn_block_kv"] = knobs.attn_block_kv
+    # explicit knob > autotune cache (if enabled) > ModelConfig default
+    bq, bkv = knobs.resolved_attn_blocks(cfg, shape.seq_len)
+    if bq != cfg.attn_block_q:
+        cfg_updates["attn_block_q"] = bq
+    if bkv != cfg.attn_block_kv:
+        cfg_updates["attn_block_kv"] = bkv
     if knobs.pad_heads:
         cfg_updates["pad_heads_to_multiple"] = 16
     if cfg_updates:
         cfg = dataclasses.replace(cfg, **cfg_updates)
-    shape = SHAPES[shape_name]
     ok, reason = shape_applicable(cfg, shape)
     record: Dict[str, Any] = {
         "arch": arch,

@@ -3,17 +3,23 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 # Must precede any jax import: the tuner compiles against the production mesh.
 """ACTS over the JAX runtime (the paper's technique applied to this system).
 
-Two modes:
+Three modes:
 
 * ``--probe knob=v[,knob=v...]`` — one manual hypothesis test: compile the
   cell under the given knobs, print the roofline terms (the
   hypothesis→change→measure loop of EXPERIMENTS.md §Perf).
+* ``--tune-kernels`` — ACTS over the *Pallas kernels* of the given cell:
+  tune block configs for the cell's attention/rmsnorm shapes and persist
+  them in the autotune cache, which later runs (``--kernel-autotune``,
+  the serve engine, and bare ``repro.kernels.ops`` calls) consult.
 * default — full ACTS run: LHS + RRS over the knob space within ``--budget``
   tests (each test = one AOT compile of the real system on the production
   mesh), reporting default vs. best and writing the full history.
 
 Examples:
   python -m repro.launch.tune --arch qwen2.5-32b --shape train_4k --budget 24
+  python -m repro.launch.tune --arch qwen2.5-32b --shape train_4k \
+      --tune-kernels
   python -m repro.launch.tune --arch grok-1-314b --shape train_4k \
       --probe expert_tp=true,rules_preset=dp
 """
@@ -46,6 +52,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--probe", default=None,
                     help="knob=v[,knob=v...]: single manual hypothesis test")
+    ap.add_argument("--tune-kernels", action="store_true",
+                    help="ACTS over the cell's Pallas kernel block configs; "
+                         "winners persist in the autotune cache")
+    ap.add_argument("--kernel-budget", type=int, default=16)
     ap.add_argument("--out-dir", default="results/tune")
     args = ap.parse_args(argv)
 
@@ -53,6 +63,31 @@ def main(argv=None) -> int:
     from repro.core.tuner import Tuner
 
     kind = SHAPES[args.shape].kind
+
+    if args.tune_kernels:
+        from repro import autotune
+        from repro.configs import get_config
+
+        cfg = get_config(args.arch)
+        shape = SHAPES[args.shape]
+        attn_dims = {"B": 1, "S": shape.seq_len, "H": cfg.padded_heads,
+                     "KV": cfg.n_kv_heads, "D": cfg.head_dim_}
+        rn_dims = {"ROWS": shape.seq_len, "D": cfg.d_model}
+        results = []
+        for kernel, dims in (("flash_attention", attn_dims),
+                             ("decode_attention", attn_dims),
+                             ("rmsnorm", rn_dims)):
+            res = autotune.autotune_kernel(kernel, dims,
+                                           dtype=cfg.compute_dtype,
+                                           budget=args.kernel_budget,
+                                           seed=args.seed)
+            results.append(res)
+            print(f"[autotune] {kernel} {res['sig']}: {res['config']} "
+                  f"({res['mode']}, {res['n_tests']} tests, "
+                  f"value {res['value']:.3g})")
+        print(json.dumps({"cache": autotune.default_cache().path,
+                          "entries": results}, indent=2))
+        return 0
     sut = JaxDryRunSUT(args.arch, args.shape, multi_pod=args.multi_pod,
                        verbose=True)
     space = knob_space(kind)

@@ -29,6 +29,11 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     eos_token: Optional[int] = None
     seed: int = 0
+    # Tune/load Pallas block configs for this engine's decode shapes before
+    # serving (persisted in the repro.autotune cache, so the compile-time
+    # cost is paid once per (shape, dtype, backend)).
+    autotune_kernels: bool = False
+    autotune_budget: int = 12
 
 
 @dataclass
@@ -49,8 +54,42 @@ class ServeEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # tuned block configs for this engine's kernel shapes (filled when
+        # cfg.autotune_kernels; consulted implicitly by repro.kernels.ops)
+        self.kernel_blocks: Dict[str, Dict[str, int]] = {}
+        if cfg.autotune_kernels:
+            # the decode cache buffer is always max_seq long; prompt-length
+            # dependent shapes are warmed lazily per wave in generate()
+            mcfg = model.cfg
+            self.kernel_blocks["decode_attention"] = self._ensure(
+                "decode_attention",
+                {"B": cfg.batch_slots, "S": cfg.max_seq,
+                 "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
+                 "D": mcfg.head_dim_})
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+
+    def _ensure(self, kernel: str, dims: Dict[str, int]) -> Dict[str, int]:
+        from repro import autotune
+
+        return autotune.ensure_tuned(kernel, dims,
+                                     dtype=self.model.cfg.compute_dtype,
+                                     budget=self.cfg.autotune_budget)
+
+    def _warm_prefill_blocks(self, prompt_len: int) -> None:
+        """Tune/load block configs for the shapes this wave actually runs:
+        prefill attention at S=prompt_len, rmsnorm at the prefill and
+        decode row counts.  Idempotent per shape (cache hits are free)."""
+        mcfg = self.model.cfg
+        B = self.cfg.batch_slots
+        self.kernel_blocks["flash_attention"] = self._ensure(
+            "flash_attention",
+            {"B": B, "S": prompt_len, "H": mcfg.padded_heads,
+             "KV": mcfg.n_kv_heads, "D": mcfg.head_dim_})
+        self.kernel_blocks["rmsnorm_prefill"] = self._ensure(
+            "rmsnorm", {"ROWS": B * prompt_len, "D": mcfg.d_model})
+        self.kernel_blocks["rmsnorm_decode"] = self._ensure(
+            "rmsnorm", {"ROWS": B, "D": mcfg.d_model})
 
     def generate(
         self,
@@ -70,6 +109,8 @@ class ServeEngine:
         (plen,) = lens
         if plen + max_new_tokens > self.cfg.max_seq:
             raise ValueError("prompt + generation exceeds max_seq")
+        if self.cfg.autotune_kernels:
+            self._warm_prefill_blocks(plen)
 
         slots = self.cfg.batch_slots
         outputs: List[List[int]] = []

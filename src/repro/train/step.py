@@ -46,6 +46,26 @@ class RunKnobs:
     attn_block_q: int = 0  # 0 = keep ModelConfig default
     attn_block_kv: int = 0
     scan_unroll: int = 1
+    # consult the kernel-autotune cache (repro.autotune) for attention
+    # block sizes when no explicit attn_block_* override is given
+    kernel_autotune: bool = False
+
+    def resolved_attn_blocks(self, cfg, seq_len: int) -> Tuple[int, int]:
+        """(block_q, block_kv) for this cell: explicit knob > autotune
+        cache (when ``kernel_autotune``) > ModelConfig default."""
+        bq, bkv = self.attn_block_q, self.attn_block_kv
+        if self.kernel_autotune and (not bq or not bkv):
+            from repro.autotune import cached_blocks
+
+            tuned = cached_blocks(
+                "flash_attention",
+                {"B": 1, "S": seq_len, "H": cfg.padded_heads,
+                 "KV": cfg.n_kv_heads, "D": cfg.head_dim_},
+                cfg.compute_dtype)
+            if tuned:
+                bq = bq or int(tuned.get("block_q", 0))
+                bkv = bkv or int(tuned.get("block_kv", 0))
+        return bq or cfg.attn_block_q, bkv or cfg.attn_block_kv
 
     def axis_rules(self):
         from repro.dist.sharding import RULE_PRESETS

@@ -1,0 +1,112 @@
+"""Minimal deterministic stand-in for `hypothesis` (used when the real
+package is not installed — this container cannot pip install).
+
+Implements exactly the surface the test-suite uses: ``given``/``settings``
+and the ``integers``/``floats``/``sampled_from``/``lists`` strategies.
+Examples are drawn from a fixed-seed RNG so runs are reproducible; there is
+no shrinking — a failing example is reported as-is by pytest.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 - 1 if max_value is None else int(max_value)
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def floats(min_value=None, max_value=None, exclude_max=False, **_kw):
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+
+    def draw(rng):
+        v = lo + rng.random() * (hi - lo)
+        if exclude_max and v >= hi:
+            v = np.nextafter(hi, lo)
+        return float(v)
+
+    return Strategy(draw)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elements: Strategy, min_size=0, max_size=10, **_kw):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = max_examples or getattr(wrapper, "_stub_max_examples",
+                                        DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(abs(hash(fn.__qualname__)) % 2**32)
+            for _ in range(n):
+                drawn_args = tuple(s.example(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng) for k, s in
+                            kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+        # pytest must not see the strategy-filled parameters as fixtures:
+        # hide the original signature and expose only what remains (self).
+        wrapper.__dict__.pop("__wrapped__", None)
+        params = list(inspect.signature(fn).parameters.values())
+        kept, skipped_positional = [], 0
+        for p in params:
+            if p.name in kw_strategies:
+                continue
+            if p.name != "self" and skipped_positional < len(arg_strategies):
+                skipped_positional += 1
+                continue
+            kept.append(p)
+        wrapper.__signature__ = inspect.Signature(kept)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists"):
+        setattr(strat, name, globals()[name])
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,11 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - prefer the real package when present
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
