@@ -1,0 +1,172 @@
+"""Co-tuning benchmark: joint (CompositeSpace) vs independent tuning.
+
+The experiment behind the co-tuning subsystem's acceptance criterion: on
+the co-deployment surrogate (a serve-throughput model whose optimum depends
+on the decode kernel's block choice — ``repro.serve.space``), compare at
+EQUAL total test budget:
+
+* ``independent`` — each system tuned in isolation, unaware of the other:
+  the kernel on its microbenchmark shape (half the budget), the serve
+  engine against stock kernel blocks (the other half); the two winners are
+  then deployed together and measured end to end.
+* ``sequential`` — the handoff baseline: kernel first (half budget), then
+  the serve engine tuned against the *tuned* kernel (half budget).
+* ``joint`` — one ``CompositeSUT`` over the merged space, full budget,
+  BestConfig-style subspace round-robin.
+
+All three arms are scored by the same end-to-end measurement
+(``coupled_serve_metrics``), so the comparison is apples to apples.  The
+JSON at ``BENCH_cotune.json`` is the cross-PR perf artifact; ``--check``
+exits non-zero if joint underperforms independent (mean over seeds) —
+wired into CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.autotune.space import KERNELS
+from repro.autotune.sut import KernelSUT
+from repro.core.tuner import Tuner
+from repro.serve.space import (
+    CotuneParams,
+    ServeSurrogate,
+    coupled_serve_metrics,
+    make_cotune_sut,
+    serve_knob_space,
+)
+
+from .common import Row
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cotune.json")
+
+DEFAULT_BUDGET = 96
+DEFAULT_SEEDS = (0, 1, 2)
+
+
+def _tune_kernel_alone(p: CotuneParams, budget: int, seed: int):
+    """The kernel team's view: microbenchmark shape, no co-residency."""
+    default_batch = serve_knob_space(p.max_seq)["max_batch"].default
+    sut = KernelSUT("decode_attention", p.decode_dims(default_batch),
+                    dtype=p.dtype, mode="model")
+    return Tuner(sut.space(), sut, budget=budget, seed=seed).run()
+
+
+def _tune_serve_alone(p: CotuneParams, budget: int, seed: int,
+                      kernel_cfg=None):
+    """The serve team's view: the kernel is whatever config they deploy
+    against (stock blocks unless a tuned config is handed over)."""
+    sut = ServeSurrogate(p, kernel_cfg=kernel_cfg)
+    return Tuner(sut.space(), sut, budget=budget, seed=seed).run()
+
+
+def one_seed(p: CotuneParams, budget: int, seed: int) -> Dict[str, Any]:
+    half = budget // 2
+
+    krep = _tune_kernel_alone(p, half, seed)
+    srep = _tune_serve_alone(p, budget - half, seed)
+    indep = coupled_serve_metrics(srep.best_config, krep.best_config, p)
+
+    srep_seq = _tune_serve_alone(p, budget - half, seed,
+                                 kernel_cfg=krep.best_config)
+    seq = coupled_serve_metrics(srep_seq.best_config, krep.best_config, p)
+
+    sut = make_cotune_sut(p)
+    jtuner = Tuner(sut.space(), sut, budget=budget, seed=seed,
+                   optimizer="subspace_rr")
+    jrep = jtuner.run()
+    parts = sut.space().split(jrep.best_config)
+    joint = coupled_serve_metrics(parts["serve"], parts["kernel"], p)
+
+    return {
+        "seed": seed,
+        "independent": {"tput": indep.value,
+                        "objective": indep.objective(),
+                        "serve": srep.best_config,
+                        "kernel": krep.best_config},
+        "sequential": {"tput": seq.value, "objective": seq.objective(),
+                       "serve": srep_seq.best_config,
+                       "kernel": krep.best_config},
+        # evaluator_calls << n_tests: batched composite rounds dispatch as
+        # single test_batch calls through the CompositeSUT
+        "joint": {"tput": joint.value, "objective": joint.objective(),
+                  "serve": parts["serve"], "kernel": parts["kernel"],
+                  "n_tests": jrep.n_tests,
+                  "evaluator_calls": jtuner.n_evaluator_calls},
+    }
+
+
+def bench(budget: int = DEFAULT_BUDGET,
+          seeds=DEFAULT_SEEDS) -> Dict[str, Any]:
+    p = CotuneParams()
+    per_seed = [one_seed(p, budget, s) for s in seeds]
+    means = {arm: float(np.mean([r[arm]["tput"] for r in per_seed]))
+             for arm in ("independent", "sequential", "joint")}
+    out = {
+        "budget": budget,
+        "seeds": list(seeds),
+        "params": {"max_seq": p.max_seq, "n_layers": p.n_layers,
+                   "sla_s": p.sla_s, "dtype": p.dtype},
+        "per_seed": per_seed,
+        "mean_tput": means,
+        "joint_over_independent": means["joint"] / max(means["independent"],
+                                                       1e-12),
+        "joint_wins": sum(r["joint"]["tput"] >= r["independent"]["tput"]
+                          for r in per_seed),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    return out
+
+
+def rows_from(result: Dict[str, Any]) -> List[Row]:
+    m = result["mean_tput"]
+    return [
+        ("cotune_independent_tput", 0.0, f"{m['independent']:.0f} tok/s"),
+        ("cotune_sequential_tput", 0.0, f"{m['sequential']:.0f} tok/s"),
+        ("cotune_joint_tput", 0.0, f"{m['joint']:.0f} tok/s"),
+        ("cotune_joint_over_independent", 0.0,
+         f"{result['joint_over_independent']:.2f}x "
+         f"({result['joint_wins']}/{len(result['seeds'])} seeds)"),
+    ]
+
+
+def run() -> List[Row]:
+    """benchmarks.run entry point."""
+    return rows_from(bench())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=DEFAULT_BUDGET)
+    ap.add_argument("--seeds", type=int, nargs="+",
+                    default=list(DEFAULT_SEEDS))
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if joint tuning underperforms "
+                         "independent tuning at equal budget")
+    args = ap.parse_args(argv)
+    result = bench(budget=args.budget, seeds=tuple(args.seeds))
+    for name, _, derived in rows_from(result):
+        print(f"{name},{derived}")
+    print(f"wrote {JSON_PATH}")
+    if args.check:
+        joint = result["mean_tput"]["joint"]
+        indep = result["mean_tput"]["independent"]
+        if joint < indep:
+            print(f"CHECK FAILED: joint ({joint:.0f} tok/s) underperforms "
+                  f"independent ({indep:.0f} tok/s) at equal budget",
+                  file=sys.stderr)
+            return 1
+        print(f"check OK: joint {joint:.0f} >= independent {indep:.0f} "
+              f"tok/s at budget {result['budget']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

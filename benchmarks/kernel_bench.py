@@ -40,7 +40,7 @@ def _sweep_flash(rng, record) -> List[Row]:
     k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
     ref = attention_ref(q, k, v)
-    dims = {"B": B, "S": S, "H": H, "KV": KV, "D": D}
+    dims = {"B": B, "S": S, "SK": S, "H": H, "KV": KV, "D": D}
     model = KERNELS["flash_attention"].model_cost
     for bq, bk in ((32, 32), (64, 64), (128, 128), (64, 128)):
         t0 = time.time()

@@ -11,6 +11,7 @@
   lhs_coverage     §4.3        LHS coverage scalability
   tune_real        §4          measured ACTS on the live JAX runtime
   kernel_bench     kernels     Pallas kernels vs jnp oracles
+  cotune_bench     §2.1/§5.5   joint vs independent co-deployment tuning
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only mysql_11x``
@@ -32,6 +33,7 @@ MODULES = [
     "lhs_coverage",
     "tune_real",
     "kernel_bench",
+    "cotune_bench",
 ]
 
 

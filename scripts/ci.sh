@@ -31,4 +31,15 @@ speedup = float(rows[2][2].rstrip("x"))
 assert speedup > 1.0, f"batched engine slower than sequential ({speedup}x)"
 EOF
 
+echo "=== smoke: joint co-tuning (--joint, tiny budget, surrogate) ==="
+CI_TMP="$(mktemp -d)"
+trap 'rm -rf "$CI_TMP"' EXIT
+REPRO_AUTOTUNE_CACHE="$CI_TMP/autotune.json" timeout 30 \
+    python -m repro.launch.tune --arch xlstm-350m --shape decode_32k \
+    --joint --surrogate --budget 16 --out-dir "$CI_TMP/tune" > /dev/null
+echo "joint smoke OK"
+
+echo "=== check: joint >= independent tuning at equal budget ==="
+timeout 120 python -m benchmarks.cotune_bench --check
+
 echo "CI OK"

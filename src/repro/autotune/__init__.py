@@ -5,7 +5,8 @@ version:
 
     from repro import autotune
     autotune.autotune_kernel("flash_attention",
-                             {"B": 1, "S": 2048, "H": 16, "KV": 4, "D": 128},
+                             {"B": 1, "S": 2048, "SK": 2048, "H": 16,
+                              "KV": 4, "D": 128},
                              dtype="bfloat16", budget=16)
 
 tunes the kernel's tiling with the ordinary ACTS tuner and persists the
@@ -13,13 +14,17 @@ winner; afterwards every ``repro.kernels.ops`` call with that problem shape
 picks the tuned blocks up automatically.
 """
 from .api import (
+    SERVE_SYSTEM,
     autotune_kernel,
     backend_name,
     cached_blocks,
+    cached_serve_config,
     ensure_tuned,
+    put_serve_config,
     resolve_blocks,
 )
-from .cache import AutotuneCache, default_cache, reset_default_cache
+from .cache import AutotuneCache, SCHEMA_VERSION, default_cache, \
+    reset_default_cache
 from .space import KERNELS, KernelSpace, shape_sig
 from .sut import KernelSUT
 
@@ -28,11 +33,15 @@ __all__ = [
     "KERNELS",
     "KernelSUT",
     "KernelSpace",
+    "SCHEMA_VERSION",
+    "SERVE_SYSTEM",
     "autotune_kernel",
     "backend_name",
     "cached_blocks",
+    "cached_serve_config",
     "default_cache",
     "ensure_tuned",
+    "put_serve_config",
     "reset_default_cache",
     "resolve_blocks",
     "shape_sig",

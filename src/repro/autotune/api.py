@@ -14,6 +14,7 @@ The flow mirrors the paper's architecture end to end:
 """
 from __future__ import annotations
 
+import logging
 from typing import Any, Dict, Optional
 
 from .cache import AutotuneCache, default_cache
@@ -21,7 +22,18 @@ from .space import KERNELS, KernelSpace, shape_sig
 from .sut import KernelSUT
 
 __all__ = ["autotune_kernel", "ensure_tuned", "resolve_blocks",
-           "cached_blocks", "backend_name"]
+           "cached_blocks", "backend_name", "put_serve_config",
+           "cached_serve_config", "SERVE_SYSTEM"]
+
+logger = logging.getLogger("repro.autotune")
+
+# The serve engine's tuned knobs persist in the same AutotuneCache under
+# this pseudo-kernel name (the "serve-config cache entry" of the joint
+# co-tuning mode) — one file keeps every tuned co-deployment artifact.
+SERVE_SYSTEM = "serve_engine"
+
+# cache paths already warned about (resolve_blocks warns once per path)
+_warned_cache_paths: set = set()
 
 
 def backend_name() -> str:
@@ -46,16 +58,62 @@ def cached_blocks(kernel: str, dims: Dict[str, int], dtype: str,
 def resolve_blocks(kernel: str, dims: Dict[str, int], dtype: str,
                    defaults: Dict[str, Any],
                    cache: Optional[AutotuneCache] = None) -> Dict[str, Any]:
-    """Tuned config if the cache has one, else the builtin defaults."""
+    """Tuned config if the cache has one, else the builtin defaults.
+
+    A failed *lookup* (unreadable or structurally corrupt cache entry)
+    falls back to the defaults — but loudly, once per cache path: a bare
+    ``except`` here used to mask cache corruption and programming errors
+    as silent default tilings.  Caller errors (unknown kernel, missing
+    signature dims) are validated up front and propagate, as does anything
+    outside the expected lookup-failure set.
+    """
+    # surface call-site programming errors before touching the cache
+    KernelSpace(kernel).validate_dims(dims)
+    cache = cache or default_cache()
     try:
         tuned = cached_blocks(kernel, dims, dtype, cache=cache)
-    except Exception:
+    except (OSError, KeyError, ValueError, TypeError) as exc:
+        if cache.path not in _warned_cache_paths:
+            _warned_cache_paths.add(cache.path)
+            logger.warning(
+                "autotune cache lookup failed for kernel %r (%s: %s); "
+                "falling back to builtin block defaults — check the cache "
+                "file at %s", kernel, type(exc).__name__, exc, cache.path)
         return dict(defaults)
     if tuned:
         out = dict(defaults)
         out.update({k: tuned[k] for k in defaults if k in tuned})
         return out
     return dict(defaults)
+
+
+def put_serve_config(sig_dims: Dict[str, int], dtype: str,
+                     config: Dict[str, Any], value: float,
+                     cache: Optional[AutotuneCache] = None,
+                     backend: Optional[str] = None,
+                     meta: Optional[Dict[str, Any]] = None) -> str:
+    """Persist a tuned serve-engine knob config (the joint mode's winner).
+
+    Keyed like a kernel entry — (``SERVE_SYSTEM``, model-shape signature,
+    dtype, backend) — so serve knobs and kernel blocks live in one cache
+    file.  Returns the signature used.
+    """
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = cache or default_cache()
+    cache.put(SERVE_SYSTEM, sig, dtype, backend or backend_name(),
+              dict(config), value, meta=meta)
+    return sig
+
+
+def cached_serve_config(sig_dims: Dict[str, int], dtype: str,
+                        cache: Optional[AutotuneCache] = None,
+                        backend: Optional[str] = None
+                        ) -> Optional[Dict[str, Any]]:
+    """The tuned serve-engine knobs for this model shape, or None."""
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = cache or default_cache()
+    return cache.get_config(SERVE_SYSTEM, sig, dtype,
+                            backend or backend_name())
 
 
 def autotune_kernel(

@@ -20,7 +20,16 @@ import threading
 import time
 from typing import Any, Dict, Optional
 
-__all__ = ["AutotuneCache", "default_cache", "reset_default_cache"]
+__all__ = ["AutotuneCache", "SCHEMA_VERSION", "default_cache",
+           "reset_default_cache"]
+
+# Bump whenever the key schema changes meaning.  v2: flash_attention
+# signatures gained the SK (KV sequence length) dim — v1 entries were keyed
+# without it, so cross-attention / cache-prefill problems with different KV
+# lengths collided on one entry.  Keys carry the version, so stale entries
+# can never be resolved; ``_load`` additionally drops them from the
+# in-memory view and the next write rewrites the file without them.
+SCHEMA_VERSION = 2
 
 
 def _default_path() -> str:
@@ -42,15 +51,35 @@ class AutotuneCache:
     # ------------------------------------------------------------------
     @staticmethod
     def key(kernel: str, sig: str, dtype: str, backend: str) -> str:
-        return f"{kernel}|{sig}|{dtype}|{backend}"
+        return f"v{SCHEMA_VERSION}|{kernel}|{sig}|{dtype}|{backend}"
+
+    @staticmethod
+    def _stale(key: str) -> bool:
+        """True for keys from an OLDER schema (unversioned v1 included).
+
+        Newer-schema keys are preserved: a shared cache file touched by
+        binaries of different versions must not lose the newer entries
+        (they are inert here — lookups only ever use the current prefix).
+        """
+        head = key.split("|", 1)[0]
+        if not head.startswith("v"):
+            return True  # v1 keys carried no version
+        try:
+            return int(head[1:]) < SCHEMA_VERSION
+        except ValueError:
+            return True
 
     def _load(self) -> Dict[str, Any]:
         if self._data is None:
             try:
                 with open(self.path) as f:
-                    self._data = json.load(f)
+                    raw = json.load(f)
             except (FileNotFoundError, json.JSONDecodeError):
-                self._data = {}
+                raw = {}
+            # Invalidate entries from older key schemas: they drop here
+            # and physically disappear from the file on the next _save.
+            self._data = {k: v for k, v in raw.items()
+                          if not self._stale(k)}
         return self._data
 
     def reload(self) -> None:

@@ -95,8 +95,8 @@ def _fa_space() -> ParameterSpace:
 
 def _fa_inputs(d, dtype, rng):
     q = _rand(rng, (d["B"], d["S"], d["H"], d["D"]), dtype)
-    k = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
-    v = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    k = _rand(rng, (d["B"], d["SK"], d["KV"], d["D"]), dtype)
+    v = _rand(rng, (d["B"], d["SK"], d["KV"], d["D"]), dtype)
     return q, k, v
 
 
@@ -104,26 +104,38 @@ def _fa_call(inputs, config, interpret):
     from repro.kernels.flash_attention import flash_attention_pallas
 
     q, k, v = inputs
-    return flash_attention_pallas(q, k, v, causal=True,
+    # SK >= S: queries sit at the end of the KV stream (cache-prefill
+    # semantics).  SK < S is encoder-decoder cross-attention — no causal
+    # structure exists there, so time it unmasked rather than handing the
+    # kernel a negative offset.
+    causal = k.shape[1] >= q.shape[1]
+    q_offset = k.shape[1] - q.shape[1] if causal else 0
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  q_offset=q_offset,
                                   block_q=config["block_q"],
                                   block_kv=config["block_kv"],
                                   interpret=interpret)
 
 
 def _fa_cost(config, d, dtype):
-    B, S, H, D = d["B"], d["S"], d["H"], d["D"]
+    B, S, SK, H, D = d["B"], d["S"], d["SK"], d["H"], d["D"]
     bq = min(config["block_q"], S)
-    bk = min(config["block_kv"], S)
-    nq, nk = math.ceil(S / bq), math.ceil(S / bk)
+    bk = min(config["block_kv"], SK)
+    nq, nk = math.ceil(S / bq), math.ceil(SK / bk)
     n_steps = B * H * nq * nk
-    # causal: roughly half the (q, kv) tile pairs are reachable
-    live = 0.55 * n_steps
+    # causal reachability: with the queries at the end of the KV stream
+    # (q_offset = SK - S), row i of S sees SK - S + i + 1 keys; averaging
+    # gives the live tile-pair fraction below (0.55 at SK == S, -> 1 as the
+    # cached prefix dominates).  SK < S is cross-attention: unmasked, so
+    # every tile pair is live (matches _fa_call's causal choice).
+    frac = max(0.15, 1.0 - 0.45 * S / SK) if SK >= S else 1.0
+    live = frac * n_steps
     pad = _align_penalty(bq, dtype) * _align_penalty(bk, dtype)
     flops = live * (4.0 * bq * bk * D) * pad
     ib = _dtype_bytes(dtype)
     hbm = (B * H * nq * bq * D * ib          # q tiles
            + 2.0 * live * bk * D * ib        # streamed k/v tiles
-           + B * H * S * D * ib)             # output
+           + B * H * S * D * ib)             # output (S query rows)
     vmem = (bq * D + 2 * bk * D) * ib + bq * (2 + D) * 4
     return _roofline_s(flops, hbm, n_steps, vmem)
 
@@ -242,8 +254,11 @@ def _rn_cost(config, d, dtype):
 
 
 KERNELS: Dict[str, KernelDef] = {
+    # SK = KV sequence length; distinct from S so cross-attention and
+    # cache-prefill problems (different KV lengths, same query length) key
+    # separate autotune entries.
     "flash_attention": KernelDef(
-        "flash_attention", ("B", "S", "H", "KV", "D"),
+        "flash_attention", ("B", "S", "SK", "H", "KV", "D"),
         ("block_q", "block_kv"),
         _fa_space, _fa_inputs, _fa_call, _fa_cost),
     "decode_attention": KernelDef(

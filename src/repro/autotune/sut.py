@@ -94,3 +94,12 @@ class KernelSUT:
             best = min(best, time.perf_counter() - t0)
         return PerfMetric(value=best, higher_is_better=False,
                           metrics={"mode": "time", "config": dict(config)})
+
+    def test_batch(self, configs) -> list:
+        """One evaluator call per candidate round (BatchEvaluator protocol).
+
+        The cost model is scalar math, so the batch is a plain loop —
+        value-identical to per-config ``test`` — but a composite/batched
+        tuner still dispatches the whole round in a single call.
+        """
+        return [self.test(c) for c in configs]

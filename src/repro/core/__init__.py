@@ -9,6 +9,13 @@ in this repo is itself a first-class SUT (``repro.core.sut_jax``).
 from .base import BatchObjective, BudgetedRun, BudgetExhausted, Trial, \
     TuningResult
 from .bottleneck import BottleneckReport, identify_bottleneck
+from .composite import (
+    CompositeSpace,
+    CompositeSUT,
+    SubspaceRoundRobinOptimizer,
+    throughput_under_sla,
+    weighted_objective,
+)
 from .optimizers import (
     OPTIMIZERS,
     CoordinateSearchOptimizer,

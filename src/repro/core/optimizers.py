@@ -11,6 +11,10 @@ here are the methods the paper positions against:
 * ``coordinate``  — cyclic one-knob-at-a-time line search (the "tuning guide"
                     strategy humans follow, §5.3).
 
+``subspace_rr`` (BestConfig-style divide-and-diverge over a composite
+space's subspaces) lives in ``repro.core.composite`` and registers itself
+into ``OPTIMIZERS`` on import — keeping the registry here import-cycle-free.
+
 All optimizers minimize, operate on the unit hypercube, and respect a strict
 test budget — the resource limit of the ACTS problem definition (§3).
 

@@ -114,6 +114,13 @@ class RRSOptimizer:
 
             while True:
                 # ---------------- exploration ----------------
+                # Snapshot the promise threshold BEFORE this batch extends
+                # the exploration evidence (§4.3 running-quantile): a batch
+                # minimum may only seed exploitation if it beats the
+                # r-quantile of *prior* exploration values.  Testing against
+                # a batch-inclusive quantile lets a batch min self-qualify
+                # even when it beats no earlier evidence.
+                y_r = threshold()
                 batch = sampler(self.n_explore, dim, rng)
                 vals = run.evaluate_batch(batch, "explore")
                 explore_values.extend(float(v) for v in vals)
@@ -122,7 +129,7 @@ class RRSOptimizer:
                 promising_val = float(vals[i_best])
                 # Only exploit points that beat the running r-quantile
                 # threshold (the "promising" test of the original paper).
-                if promising_val > threshold():
+                if promising_val > y_r:
                     continue
 
                 # ---------------- exploitation ----------------

@@ -69,9 +69,13 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     interpret: Optional[bool] = None):
     interp = default_interpret() if interpret is None else interpret
     B, S, H, D = q.shape
+    # SK (the KV sequence length) must enter the signature: cross-attention
+    # and cache-prefill calls share S but differ in k.shape[1], and an
+    # SK-less key would collide them onto one cache entry.
     blocks = _resolve(
         "flash_attention",
-        {"B": B, "S": S, "H": H, "KV": k.shape[2], "D": D}, q.dtype,
+        {"B": B, "S": S, "SK": k.shape[1], "H": H, "KV": k.shape[2],
+         "D": D}, q.dtype,
         {"block_q": block_q, "block_kv": block_kv})
     return _flash_attention(q, k, v, causal=causal, window=window,
                             q_offset=q_offset, block_q=blocks["block_q"],

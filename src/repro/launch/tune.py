@@ -3,7 +3,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 # Must precede any jax import: the tuner compiles against the production mesh.
 """ACTS over the JAX runtime (the paper's technique applied to this system).
 
-Three modes:
+Four modes:
 
 * ``--probe knob=v[,knob=v...]`` — one manual hypothesis test: compile the
   cell under the given knobs, print the roofline terms (the
@@ -12,6 +12,13 @@ Three modes:
   tune block configs for the cell's attention/rmsnorm shapes and persist
   them in the autotune cache, which later runs (``--kernel-autotune``,
   the serve engine, and bare ``repro.kernels.ops`` calls) consult.
+* ``--joint`` — cross-system co-tuning: the serve engine's knobs AND the
+  decode kernel's block config as ONE ``CompositeSUT`` under one budget
+  (BestConfig-style subspace round-robin by default).  On this CPU
+  container the SUT is the analytic co-deployment surrogate
+  (``repro.serve.space``); winners persist to the autotune cache — kernel
+  blocks under the tuned decode shape, serve knobs as a serve-config
+  entry.
 * default — full ACTS run: LHS + RRS over the knob space within ``--budget``
   tests (each test = one AOT compile of the real system on the production
   mesh), reporting default vs. best and writing the full history.
@@ -20,6 +27,8 @@ Examples:
   python -m repro.launch.tune --arch qwen2.5-32b --shape train_4k --budget 24
   python -m repro.launch.tune --arch qwen2.5-32b --shape train_4k \
       --tune-kernels
+  python -m repro.launch.tune --arch xlstm-350m --shape decode_32k \
+      --joint --surrogate --budget 96
   python -m repro.launch.tune --arch grok-1-314b --shape train_4k \
       --probe expert_tp=true,rules_preset=dp
 """
@@ -42,22 +51,100 @@ def _parse_value(v: str):
         return v
 
 
+def _joint_main(args) -> int:
+    """--joint: serve knobs + decode kernel blocks as one SUT."""
+    from repro.configs import get_config
+    from repro.core.tuner import Tuner
+    from repro.serve.space import CotuneParams, make_cotune_sut
+
+    if not args.surrogate:
+        # There is no real-engine joint scorer yet (wall-clocking the live
+        # engine per trial is future work), so every run uses the analytic
+        # surrogate; say so rather than silently implying a measurement.
+        print("[joint] scoring on the analytic co-deployment surrogate "
+              "(currently the only joint scorer; pass --surrogate to "
+              "silence this note)")
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    params = CotuneParams.from_model(cfg, max_seq=min(shape.seq_len, 32768))
+    sut = make_cotune_sut(params)
+    space = sut.space()
+    tuner = Tuner(space, sut, budget=args.budget, optimizer=args.optimizer,
+                  seed=args.seed, verbose=True)
+    rep = tuner.run()
+
+    parts = space.split(rep.best_config)
+    serve_cfg, kernel_cfg = parts["serve"], parts["kernel"]
+
+    # Persist both winners: kernel blocks under the decode shape the tuned
+    # engine will actually run, serve knobs as the serve-config entry.
+    from repro import autotune
+
+    cache = autotune.default_cache()
+    kernel_dims = params.decode_dims(serve_cfg["max_batch"])
+    cache.put("decode_attention", autotune.shape_sig(kernel_dims),
+              params.dtype, autotune.backend_name(), kernel_cfg,
+              rep.best_metric.value,
+              meta={"mode": "joint-surrogate", "n_tests": rep.n_tests})
+    serve_sig_dims = {"S": params.max_seq, "H": params.heads,
+                      "KV": params.kv_heads, "D": params.head_dim}
+    autotune.put_serve_config(serve_sig_dims, params.dtype, serve_cfg,
+                              rep.best_metric.value, cache=cache,
+                              meta={"mode": "joint-surrogate",
+                                    "n_tests": rep.n_tests})
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    tag = f"joint_{args.arch}_{args.shape}"
+    with open(os.path.join(args.out_dir, f"{tag}.json"), "w") as f:
+        f.write(rep.to_json())
+
+    d, b = rep.default_metric, rep.best_metric
+    print("\n=== ACTS joint co-tuning result ===")
+    print(f"cell: {args.arch} × {args.shape} (surrogate, "
+          f"optimizer={args.optimizer})")
+    print(f"default: {d.value:.0f} tok/s  (serve+kernel defaults)")
+    print(f"best:    {b.value:.0f} tok/s  "
+          f"latency={b.metrics.get('latency_s', float('nan')):.3f}s")
+    print(f"improvement: {rep.improvement:.2f}x in {rep.n_tests} tests "
+          f"({rep.wall_seconds:.1f}s wall)")
+    print(f"serve knobs:   {serve_cfg}")
+    print(f"kernel blocks: {kernel_cfg}")
+    print(f"persisted to {cache.path}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
     ap.add_argument("--budget", type=int, default=24)
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--optimizer", default="rrs")
+    ap.add_argument("--optimizer", default=None,
+                    help="optimizer name (default: rrs; subspace_rr "
+                         "for --joint)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--probe", default=None,
                     help="knob=v[,knob=v...]: single manual hypothesis test")
     ap.add_argument("--tune-kernels", action="store_true",
                     help="ACTS over the cell's Pallas kernel block configs; "
                          "winners persist in the autotune cache")
+    ap.add_argument("--joint", action="store_true",
+                    help="co-tune serve-engine knobs + decode kernel blocks "
+                         "as one SUT (CompositeSpace, shared budget)")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="with --joint: score on the analytic co-deployment "
+                         "surrogate — currently the ONLY joint scorer "
+                         "(real-engine wall-clock co-tuning is future "
+                         "work); the flag just records intent")
     ap.add_argument("--kernel-budget", type=int, default=16)
     ap.add_argument("--out-dir", default="results/tune")
     args = ap.parse_args(argv)
+    if args.optimizer is None:
+        args.optimizer = "subspace_rr" if args.joint else "rrs"
+
+    if args.joint:
+        return _joint_main(args)
 
     from repro.core.sut_jax import JaxDryRunSUT, knob_space
     from repro.core.tuner import Tuner
@@ -72,9 +159,10 @@ def main(argv=None) -> int:
         shape = SHAPES[args.shape]
         attn_dims = {"B": 1, "S": shape.seq_len, "H": cfg.padded_heads,
                      "KV": cfg.n_kv_heads, "D": cfg.head_dim_}
+        fa_dims = dict(attn_dims, SK=shape.seq_len)
         rn_dims = {"ROWS": shape.seq_len, "D": cfg.d_model}
         results = []
-        for kernel, dims in (("flash_attention", attn_dims),
+        for kernel, dims in (("flash_attention", fa_dims),
                              ("decode_attention", attn_dims),
                              ("rmsnorm", rn_dims)):
             res = autotune.autotune_kernel(kernel, dims,

@@ -1,4 +1,35 @@
-"""Serving substrate: batched prefill + KV-cache decode engine."""
-from .engine import GenerationResult, ServeConfig, ServeEngine
+"""Serving substrate: batched prefill + KV-cache decode engine.
 
-__all__ = ["GenerationResult", "ServeConfig", "ServeEngine"]
+``repro.serve.space`` (knob space + co-deployment surrogate) is numpy-only;
+the engine pulls in jax and the model stack.  Attribute access is lazy so
+the tuning path (``--joint``, benchmarks, tests of the knob space) never
+pays the jax import for touching the package.
+"""
+from typing import Any
+
+_ENGINE_NAMES = ("GenerationResult", "ServeConfig", "ServeEngine")
+_SPACE_NAMES = (
+    "PAGE_TOKENS",
+    "SCHEDULES",
+    "CotuneParams",
+    "ServeKernelCoupling",
+    "ServeSurrogate",
+    "apply_serve_knobs",
+    "coupled_serve_metrics",
+    "make_cotune_sut",
+    "serve_knob_space",
+)
+
+__all__ = list(_ENGINE_NAMES + _SPACE_NAMES)
+
+
+def __getattr__(name: str) -> Any:
+    if name in _ENGINE_NAMES:
+        from . import engine
+
+        return getattr(engine, name)
+    if name in _SPACE_NAMES:
+        from . import space
+
+        return getattr(space, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -19,6 +19,8 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.models import Model
 
+from .space import PAGE_TOKENS, SCHEDULES
+
 __all__ = ["ServeConfig", "ServeEngine", "GenerationResult"]
 
 
@@ -29,11 +31,44 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     eos_token: Optional[int] = None
     seed: int = 0
+    # Tunable serving knobs (see repro.serve.space.serve_knob_space; the
+    # joint co-tuning mode persists winners for them).  prefill_chunk is
+    # the target prefill split size — the engine currently prefills whole
+    # equal-length prompts in one call, so it only feeds the tuning
+    # surface; chunked prefill lands with paged attention.
+    prefill_chunk: int = 512
+    # KV capacity in PAGE_TOKENS-token pages; batch_slots*max_seq must fit
+    # (enforced at construction — the admission constraint).  None
+    # auto-sizes to exactly that footprint, so configs that never touch
+    # the knob keep working at any max_seq/batch_slots combination.
+    kv_cache_pages: Optional[int] = None
+    # Wave admission order: fifo | sjf | interleave.  Validated and
+    # modelled by the co-tuning surrogate; the engine's equal-length-wave
+    # scheduler runs fifo today — runtime sjf/interleave land with
+    # continuous batching.
+    schedule: str = "fifo"
     # Tune/load Pallas block configs for this engine's decode shapes before
     # serving (persisted in the repro.autotune cache, so the compile-time
     # cost is paid once per (shape, dtype, backend)).
     autotune_kernels: bool = False
     autotune_budget: int = 12
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             f"have {SCHEDULES}")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        needed = self.batch_slots * self.max_seq
+        if self.kv_cache_pages is None:
+            self.kv_cache_pages = -(-needed // PAGE_TOKENS)
+        capacity = self.kv_cache_pages * PAGE_TOKENS
+        if needed > capacity:
+            raise ValueError(
+                f"KV cache too small: {self.batch_slots} slots x "
+                f"{self.max_seq} tokens needs {needed} tokens but "
+                f"kv_cache_pages={self.kv_cache_pages} holds only "
+                f"{capacity}")
 
 
 @dataclass
@@ -84,8 +119,9 @@ class ServeEngine:
         B = self.cfg.batch_slots
         self.kernel_blocks["flash_attention"] = self._ensure(
             "flash_attention",
-            {"B": B, "S": prompt_len, "H": mcfg.padded_heads,
-             "KV": mcfg.n_kv_heads, "D": mcfg.head_dim_})
+            {"B": B, "S": prompt_len, "SK": prompt_len,
+             "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
+             "D": mcfg.head_dim_})
         self.kernel_blocks["rmsnorm_prefill"] = self._ensure(
             "rmsnorm", {"ROWS": B * prompt_len, "D": mcfg.d_model})
         self.kernel_blocks["rmsnorm_decode"] = self._ensure(

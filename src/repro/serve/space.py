@@ -1,0 +1,285 @@
+"""Serve-engine knobs as an ACTS ``ParameterSpace`` + the co-tuning surface.
+
+``serve_knob_space`` exposes the engine's config surface — batch slots,
+prefill chunk, KV-cache pages, scheduling policy — to the ordinary tuner
+stack, and ``apply_serve_knobs`` maps a tuned config back onto a
+``ServeConfig``.  Today ``batch_slots`` and the KV-page capacity act in the
+engine at runtime; ``prefill_chunk`` and ``schedule`` are validated,
+modelled by the surrogate below, and get their runtime wiring with paged
+attention / continuous batching (see the field notes on ``ServeConfig``).
+
+The rest of the module is the CPU-side **co-deployment surrogate** behind
+``python -m repro.launch.tune --joint``, ``benchmarks/cotune_bench.py`` and
+the composite tests: an analytic serve-throughput model whose optimum
+depends on the decode kernel's block configuration.  The coupling is the
+paper's §2.1 phenomenon made concrete, twice over:
+
+* the latency SLA ties them — a slower attention kernel inflates the decode
+  step, so the SLA binds at a smaller batch; tuning the serve engine
+  against stock kernel blocks therefore lands on a batch size that wastes
+  the tuned kernel's headroom;
+* co-residency ties them — engine slot state and kernel KV tiles share
+  VMEM, so large ``block_kv`` choices that win a kernel-only microbenchmark
+  start thrashing at the batch sizes joint tuning wants.
+
+Numbers (weight-stream time, per-token costs, slot bytes) are calibrated to
+be *plausible*, not measured — on a real TPU the same ``CompositeSUT``
+wiring wall-clocks the live engine instead.  This module stays numpy-only
+(no jax import) so the tuning path is cheap to spin up.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.autotune.space import KERNELS, VMEM_BYTES, _dtype_bytes
+from repro.core.composite import CompositeSUT
+from repro.core.params import Config, EnumParam, IntParam, ParameterSpace
+from repro.core.surrogates import Surrogate
+from repro.core.tuner import PerfMetric
+
+__all__ = [
+    "PAGE_TOKENS",
+    "SCHEDULES",
+    "serve_knob_space",
+    "apply_serve_knobs",
+    "CotuneParams",
+    "coupled_serve_metrics",
+    "ServeSurrogate",
+    "ServeKernelCoupling",
+    "make_cotune_sut",
+]
+
+PAGE_TOKENS = 16  # KV-cache page granularity (tokens per page)
+SCHEDULES = ("fifo", "sjf", "interleave")
+
+
+def serve_knob_space(max_seq: int = 2048) -> ParameterSpace:
+    """The serve engine's tunable knobs (``ServeConfig`` fields).
+
+    The KV-page range scales with ``max_seq`` so the knob always spans
+    "one resident sequence" .. "all 64 slots resident" — at the default
+    2048-token serving window it matches ``ServeConfig``'s defaults.
+    """
+    page_per_seq = max(1, max_seq // PAGE_TOKENS)
+    return ParameterSpace([
+        # engine batch slots (ServeConfig.batch_slots)
+        IntParam("max_batch", 1, 64, default=8, log=True),
+        # prefill split size: scheduler granularity vs per-chunk overhead
+        EnumParam("prefill_chunk", (128, 256, 512, 1024, 2048), 512),
+        # KV capacity in PAGE_TOKENS-token pages (must cover batch x seq)
+        IntParam("kv_cache_pages", page_per_seq, 64 * page_per_seq,
+                 default=8 * page_per_seq, log=True),
+        # wave admission order
+        EnumParam("schedule", SCHEDULES, "fifo"),
+    ])
+
+
+def apply_serve_knobs(config: Config, base: Optional[Any] = None):
+    """Tuned serve knobs -> a ``ServeConfig`` (lazy engine import: the
+    tuning path itself never needs jax).
+
+    The tuned page count was chosen for the *tuning* serving window; the
+    deployment's ``max_seq`` may differ (and the tuner legitimately
+    explores undersized caches, which it scores as thrash).  Pages are
+    therefore raised to the floor the deployed batch actually requires, so
+    a persisted winner always produces a constructible config.
+    """
+    from .engine import ServeConfig
+
+    base = base or ServeConfig()
+    slots = int(config["max_batch"])
+    min_pages = -(-slots * base.max_seq // PAGE_TOKENS)
+    return replace(
+        base,
+        batch_slots=slots,
+        prefill_chunk=int(config["prefill_chunk"]),
+        kv_cache_pages=max(int(config["kv_cache_pages"]), min_pages),
+        schedule=str(config["schedule"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the co-deployment surrogate
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CotuneParams:
+    """Model shape + serving workload behind the co-deployment surrogate."""
+
+    heads: int = 16
+    kv_heads: int = 4
+    head_dim: int = 64
+    n_layers: int = 8
+    max_seq: int = 2048
+    prompt_len: int = 512
+    gen_len: int = 64
+    dtype: str = "float32"
+    sla_s: float = 0.55          # per-request latency SLA
+    sla_penalty: float = 2.0     # soft-penalty exponent past the SLA
+    weight_stream_s: float = 2e-3   # weights read once per decode step
+    per_token_s: float = 5e-5       # non-attention compute per token
+    prefill_tok_s: float = 2e-6
+    prefill_chunk_overhead_s: float = 1e-3
+    page_table_s: float = 2e-8      # per page per step (table walk)
+    slot_vmem_bytes: int = 460 * 1024  # engine dispatch state per slot
+    kv_buffer_factor: int = 4          # double-buffered k and v tiles
+
+    @classmethod
+    def from_model(cls, cfg, max_seq: int = 2048, **kw) -> "CotuneParams":
+        """Derive the shape fields from a ``ModelConfig``.
+
+        The SLA scales with the serving window (longer contexts mean
+        proportionally slower decode steps) unless given explicitly.
+        """
+        kw.setdefault("sla_s", 0.55 * max_seq / 2048.0)
+        return cls(heads=cfg.padded_heads, kv_heads=cfg.n_kv_heads,
+                   head_dim=cfg.head_dim_, n_layers=cfg.n_layers,
+                   max_seq=max_seq, dtype=cfg.compute_dtype, **kw)
+
+    def decode_dims(self, batch: int) -> Dict[str, int]:
+        return {"B": int(batch), "S": self.max_seq, "H": self.heads,
+                "KV": self.kv_heads, "D": self.head_dim}
+
+    def default_kernel_config(self) -> Config:
+        return KERNELS["decode_attention"].make_space().default_config()
+
+    def kernel_space(self) -> ParameterSpace:
+        return KERNELS["decode_attention"].make_space()
+
+
+def _attn_step_seconds(kernel_cfg: Config, batch: int,
+                       p: CotuneParams) -> float:
+    """Per-decode-step attention time at this batch, with co-residency.
+
+    The roofline cost model gives the kernel-alone time; on top of it the
+    serve engine's per-slot dispatch state competes for VMEM with the
+    kernel's (buffered) KV tiles, so oversized ``block_kv`` tilings start
+    spilling to HBM exactly at the batch sizes joint tuning cares about.
+    """
+    base = float(KERNELS["decode_attention"].model_cost(
+        kernel_cfg, p.decode_dims(batch), p.dtype))
+    ib = _dtype_bytes(p.dtype)
+    bk = min(int(kernel_cfg["block_kv"]), p.max_seq)
+    tile = p.kv_buffer_factor * bk * p.head_dim * ib
+    overflow = (tile + batch * p.slot_vmem_bytes - VMEM_BYTES) / VMEM_BYTES
+    if overflow > 0:  # spill: steeper than linear, still smooth
+        base *= 1.0 + 16.0 * overflow + 64.0 * overflow * overflow
+    return base
+
+
+def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
+                          p: CotuneParams) -> PerfMetric:
+    """End-to-end serve throughput (tokens/s) for one co-deployment config.
+
+    value = decode throughput under the latency SLA (soft penalty past it);
+    metrics carry the raw throughput, per-request latency and the step
+    breakdown.  Deterministic, so batched/sequential tuner parity is exact.
+    """
+    B = int(serve_cfg["max_batch"])
+    chunk = int(serve_cfg["prefill_chunk"])
+    pages = int(serve_cfg["kv_cache_pages"])
+    schedule = str(serve_cfg["schedule"])
+
+    attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, B, p)
+    step_s = (p.weight_stream_s + B * p.per_token_s + attn_s
+              + pages * p.page_table_s)
+
+    # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead
+    chunk = min(chunk, p.prompt_len)
+    n_chunks = math.ceil(p.prompt_len / chunk)
+    prefill_s = n_chunks * (p.prefill_chunk_overhead_s
+                            + chunk * p.prefill_tok_s)
+    if schedule == "interleave":  # prefill overlapped with decode
+        prefill_s *= 0.4
+        step_s *= 1.03
+
+    # KV pages must cover the live batch; undersizing thrashes on eviction
+    needed = B * p.max_seq
+    capacity = pages * PAGE_TOKENS
+    util = min(1.0, capacity / needed) ** 2
+
+    tput = B * p.gen_len * util / (prefill_s + p.gen_len * step_s)
+    latency = prefill_s + p.gen_len * step_s
+    if schedule == "sjf":  # shortest-job-first trims mean request latency
+        latency *= 0.9
+
+    value = tput
+    if latency > p.sla_s > 0:
+        value = tput * (p.sla_s / latency) ** p.sla_penalty
+    return PerfMetric(
+        value=float(value), higher_is_better=True,
+        metrics={"raw_throughput": float(tput), "latency_s": float(latency),
+                 "step_s": float(step_s), "attn_s": float(attn_s),
+                 "prefill_s": float(prefill_s), "kv_util": float(util),
+                 "sla_met": bool(latency <= p.sla_s)})
+
+
+class ServeSurrogate(Surrogate):
+    """The serve engine tuned *in isolation*: the kernel is whatever config
+    the serve team deploys against (stock blocks by default) — the
+    independent-tuning arm of the co-tuning comparison, and the "serve"
+    member of the joint ``CompositeSUT``."""
+
+    name = "serve"
+
+    def __init__(self, params: Optional[CotuneParams] = None,
+                 kernel_cfg: Optional[Config] = None):
+        self.params = params or CotuneParams()
+        self.kernel_cfg = dict(kernel_cfg) if kernel_cfg \
+            else self.params.default_kernel_config()
+
+    def space(self) -> ParameterSpace:
+        return serve_knob_space(self.params.max_seq)
+
+    def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
+        return [coupled_serve_metrics(c, self.kernel_cfg, self.params)
+                for c in configs]
+
+
+class ServeKernelCoupling:
+    """Scalarizer for the joint SUT: the end-to-end measurement.
+
+    Receives every member's subconfig, so the serve throughput is computed
+    at the *actual* kernel blocks under test — the interaction the member
+    metrics alone cannot express.  The kernel member's standalone cost is
+    kept in the metrics for reporting.
+    """
+
+    def __init__(self, params: Optional[CotuneParams] = None):
+        self.params = params or CotuneParams()
+
+    def __call__(self, metrics: Dict[str, PerfMetric],
+                 configs: Dict[str, Config]) -> PerfMetric:
+        out = coupled_serve_metrics(configs["serve"], configs["kernel"],
+                                    self.params)
+        if "kernel" in metrics:
+            out.metrics["kernel_alone_s"] = float(metrics["kernel"].value)
+        return out
+
+
+def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
+    """Serve engine + decode kernel as one SUT under one budget.
+
+    The serve subsystem is config-only: its end-to-end measurement IS the
+    scalarizer (which needs the kernel blocks), so a standalone serve
+    evaluation would be recomputed-and-discarded work.  The kernel member
+    still runs — its microbenchmark cost is the ``kernel_alone_s``
+    provenance in every joint metric.
+    """
+    from repro.autotune.sut import KernelSUT
+
+    params = params or CotuneParams()
+    default_batch = int(serve_knob_space(params.max_seq)["max_batch"].default)
+    return CompositeSUT(
+        {
+            "serve": serve_knob_space(params.max_seq),
+            # the kernel team's microbenchmark shape: stock serve batch,
+            # no co-residency — exactly what tuning it in isolation sees
+            "kernel": KernelSUT("decode_attention",
+                                params.decode_dims(default_batch),
+                                dtype=params.dtype, mode="model"),
+        },
+        scalarize=ServeKernelCoupling(params),
+        name="serve+kernel",
+    )

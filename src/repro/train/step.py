@@ -59,8 +59,9 @@ class RunKnobs:
 
             tuned = cached_blocks(
                 "flash_attention",
-                {"B": 1, "S": seq_len, "H": cfg.padded_heads,
-                 "KV": cfg.n_kv_heads, "D": cfg.head_dim_},
+                {"B": 1, "S": seq_len, "SK": seq_len,
+                 "H": cfg.padded_heads, "KV": cfg.n_kv_heads,
+                 "D": cfg.head_dim_},
                 cfg.compute_dtype)
             if tuned:
                 bq = bq or int(tuned.get("block_q", 0))

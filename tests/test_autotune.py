@@ -1,5 +1,6 @@
 """Kernel autotune subsystem: spaces, cost model, cache, kernel threading."""
 import json
+import logging
 import os
 
 import jax.numpy as jnp
@@ -15,7 +16,7 @@ from repro.autotune import (
     shape_sig,
 )
 
-FA_DIMS = {"B": 1, "S": 256, "H": 4, "KV": 2, "D": 32}
+FA_DIMS = {"B": 1, "S": 256, "SK": 256, "H": 4, "KV": 2, "D": 32}
 
 
 @pytest.fixture
@@ -52,6 +53,8 @@ class TestKernelSpace:
 class TestCostModel:
     @pytest.mark.parametrize("kernel,dims", [
         ("flash_attention", FA_DIMS),
+        ("flash_attention", dict(FA_DIMS, SK=1024)),  # cache-prefill shape
+        ("flash_attention", dict(FA_DIMS, SK=64)),    # cross-attn, SK < S
         ("decode_attention", FA_DIMS),
         ("gla", {"B": 1, "S": 256, "H": 2, "DK": 32, "DV": 32}),
         ("rmsnorm", {"ROWS": 1024, "D": 512}),
@@ -67,7 +70,8 @@ class TestCostModel:
 
     def test_vmem_overflow_is_infeasible(self):
         d = KERNELS["flash_attention"]
-        big = {"B": 1, "S": 1 << 20, "H": 1, "KV": 1, "D": 4096}
+        big = {"B": 1, "S": 1 << 20, "SK": 1 << 20, "H": 1, "KV": 1,
+               "D": 4096}
         cost = d.model_cost({"block_q": 512, "block_kv": 512}, big,
                             "float32")
         assert cost == float("inf")
@@ -131,7 +135,7 @@ class TestKernelThreading:
         cache = autotune.default_cache()
         cache.put("rmsnorm", shape_sig({"ROWS": 8, "D": 32}), "float32",
                   autotune.backend_name(), {"block_rows": 8}, 1.0)
-        dims = {"B": 1, "S": 64, "H": 2, "KV": 2, "D": 16}
+        dims = {"B": 1, "S": 64, "SK": 64, "H": 2, "KV": 2, "D": 16}
         cache.put("flash_attention", shape_sig(dims), "float32",
                   autotune.backend_name(),
                   {"block_q": 16, "block_kv": 32}, 1.0)
@@ -184,3 +188,176 @@ class TestKernelThreading:
             yr, _ = gla_ref(gq, gq, gq, gg)
             np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                        rtol=5e-5, atol=5e-5)
+
+
+class TestKVSeqLenInSignature:
+    """Regression: the flash_attention cache key must include the KV
+    sequence length (SK).  Before the fix the key used only the KV *head
+    count*, so cross-attention / cache-prefill problems with different KV
+    lengths collided on one entry."""
+
+    def test_distinct_keys_for_differing_kv_lengths(self, tmp_cache):
+        cache = autotune.default_cache()
+        cache.put("flash_attention", shape_sig(FA_DIMS), "float32",
+                  autotune.backend_name(), {"block_q": 32, "block_kv": 32},
+                  1.0)
+        same = autotune.cached_blocks("flash_attention", FA_DIMS, "float32")
+        assert same == {"block_q": 32, "block_kv": 32}
+        # same query length, longer KV stream: a DIFFERENT problem
+        longer = dict(FA_DIMS, SK=512)
+        assert autotune.cached_blocks("flash_attention", longer,
+                                      "float32") is None
+        assert shape_sig(FA_DIMS) != shape_sig(longer)
+
+    def test_ops_resolve_keys_on_kv_length(self, tmp_cache):
+        from repro.kernels import ops
+
+        cache = autotune.default_cache()
+        self_attn = {"B": 1, "S": 64, "SK": 64, "H": 2, "KV": 2, "D": 16}
+        cache.put("flash_attention", shape_sig(self_attn), "float32",
+                  autotune.backend_name(), {"block_q": 16, "block_kv": 16},
+                  1.0)
+        hit = ops._resolve("flash_attention", self_attn, "float32",
+                           {"block_q": None, "block_kv": None})
+        assert hit == {"block_q": 16, "block_kv": 16}
+        # cache-prefill shape (same S, longer SK) must NOT inherit it;
+        # it falls back to the builtin defaults
+        prefill = dict(self_attn, SK=128)
+        miss = ops._resolve("flash_attention", prefill, "float32",
+                            {"block_q": None, "block_kv": None})
+        assert miss == ops.DEFAULT_BLOCKS["flash_attention"]
+
+    def test_sk_required_in_dims(self):
+        with pytest.raises(ValueError, match="missing dims"):
+            KernelSpace("flash_attention").validate_dims(
+                {"B": 1, "S": 256, "H": 4, "KV": 2, "D": 32})
+
+    def test_cost_model_distinguishes_kv_length(self):
+        d = KERNELS["flash_attention"]
+        cfg = {"block_q": 64, "block_kv": 64}
+        short = d.model_cost(cfg, FA_DIMS, "float32")
+        long_ = d.model_cost(cfg, dict(FA_DIMS, SK=4096), "float32")
+        assert long_ > short  # more KV to stream must cost more
+
+
+class TestCacheSchemaVersion:
+    """Regression: the SK fix invalidates pre-SK entries via a key schema
+    bump — old keys can never resolve and are dropped on rewrite."""
+
+    def test_keys_are_versioned(self):
+        key = AutotuneCache.key("flash_attention", "sig", "float32", "cpu")
+        assert key.startswith(f"v{autotune.SCHEMA_VERSION}|")
+
+    def test_old_schema_entries_invalidated(self, tmp_cache):
+        stale = {
+            # v1 (unversioned) key: flash_attention signature without SK
+            "flash_attention|B1_D32_H4_KV2_S256|float32|cpu": {
+                "config": {"block_q": 999, "block_kv": 999},
+                "value": 1.0, "meta": {}, "time": 0.0},
+        }
+        with open(tmp_cache, "w") as f:
+            json.dump(stale, f)
+        cache = AutotuneCache(tmp_cache)
+        assert autotune.cached_blocks("flash_attention", FA_DIMS,
+                                      "float32", cache=cache) is None
+        # a write rewrites the file without the stale entry
+        cache.put("rmsnorm", shape_sig({"ROWS": 8, "D": 32}), "float32",
+                  "cpu", {"block_rows": 8}, 1.0)
+        on_disk = json.load(open(tmp_cache))
+        assert all(k.startswith(f"v{autotune.SCHEMA_VERSION}|")
+                   for k in on_disk)
+
+    def test_newer_schema_entries_survive(self, tmp_cache):
+        """A shared cache file touched by a NEWER binary must not lose that
+        binary's entries when this version writes — only older schemas are
+        invalidated."""
+        future = f"v{autotune.SCHEMA_VERSION + 1}|rmsnorm|D32_ROWS8" \
+                 "|float32|tpu"
+        with open(tmp_cache, "w") as f:
+            json.dump({future: {"config": {"block_rows": 8}, "value": 1.0,
+                                "meta": {}, "time": 0.0}}, f)
+        cache = AutotuneCache(tmp_cache)
+        cache.put("rmsnorm", shape_sig({"ROWS": 8, "D": 32}), "float32",
+                  "cpu", {"block_rows": 16}, 1.0)
+        on_disk = json.load(open(tmp_cache))
+        assert future in on_disk  # preserved, not erased
+        assert len(on_disk) == 2
+
+
+class TestResolveBlocksErrorHandling:
+    """Regression: resolve_blocks used a bare ``except Exception`` that
+    silently masked cache corruption — now it warns once, names the cache
+    path, and only catches the expected failure set."""
+
+    def _corrupt_cache(self, path):
+        key = AutotuneCache.key("rmsnorm", shape_sig({"ROWS": 8, "D": 32}),
+                                "float32", autotune.backend_name())
+        with open(path, "w") as f:
+            json.dump({key: ["structurally", "corrupt"]}, f)
+        return AutotuneCache(path)
+
+    def test_corrupted_cache_warns_once_and_falls_back(self, tmp_cache,
+                                                       caplog):
+        from repro.autotune import api
+
+        api._warned_cache_paths.clear()
+        cache = self._corrupt_cache(tmp_cache)
+        defaults = {"block_rows": 256}
+        with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+            out = autotune.resolve_blocks("rmsnorm", {"ROWS": 8, "D": 32},
+                                          "float32", defaults, cache=cache)
+        assert out == defaults
+        warnings = [r for r in caplog.records
+                    if r.levelno == logging.WARNING]
+        assert len(warnings) == 1
+        assert tmp_cache in warnings[0].getMessage()  # names the path
+        # one-time: a second failing lookup does not warn again
+        caplog.clear()
+        with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+            out2 = autotune.resolve_blocks("rmsnorm", {"ROWS": 8, "D": 32},
+                                           "float32", defaults, cache=cache)
+        assert out2 == defaults
+        assert not [r for r in caplog.records
+                    if r.levelno == logging.WARNING]
+
+    def test_unexpected_errors_propagate(self, tmp_cache, monkeypatch):
+        from repro.autotune import api
+
+        def boom(*a, **kw):
+            raise RuntimeError("programming error")
+
+        monkeypatch.setattr(api, "cached_blocks", boom)
+        with pytest.raises(RuntimeError, match="programming error"):
+            api.resolve_blocks("rmsnorm", {"ROWS": 8, "D": 32}, "float32",
+                               {"block_rows": 256})
+
+    def test_caller_errors_propagate(self):
+        """Bad call-site arguments (unknown kernel, missing signature
+        dims — e.g. a site not migrated to SK) must raise, not silently
+        resolve to defaults."""
+        with pytest.raises(ValueError, match="missing dims"):
+            autotune.resolve_blocks(
+                "flash_attention",
+                {"B": 1, "S": 256, "H": 4, "KV": 2, "D": 32},  # no SK
+                "float32", {"block_q": 128, "block_kv": 128})
+        with pytest.raises(ValueError, match="unknown kernel"):
+            autotune.resolve_blocks("conv3d", {"B": 1}, "float32", {})
+
+
+class TestServeConfigCache:
+    """The joint mode's serve-config entry: persists + reloads alongside
+    kernel entries in the same cache file."""
+
+    def test_put_and_reload(self, tmp_cache):
+        sig_dims = {"S": 2048, "H": 16, "KV": 4, "D": 64}
+        knobs = {"max_batch": 32, "prefill_chunk": 512,
+                 "kv_cache_pages": 4096, "schedule": "fifo"}
+        autotune.put_serve_config(sig_dims, "float32", knobs, 3900.0)
+        assert autotune.cached_serve_config(sig_dims, "float32") == knobs
+        # keyed by shape: a different serving window misses
+        other = dict(sig_dims, S=4096)
+        assert autotune.cached_serve_config(other, "float32") is None
+        # fresh cache object re-reads from disk
+        fresh = AutotuneCache(tmp_cache)
+        assert autotune.cached_serve_config(sig_dims, "float32",
+                                            cache=fresh) == knobs

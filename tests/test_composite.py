@@ -1,0 +1,358 @@
+"""Cross-system co-tuning: CompositeSpace, CompositeSUT, subspace_rr.
+
+Contracts under test (core/composite.py + serve/space.py):
+
+* CompositeSpace prefixes member knobs, delegates conversion per subspace
+  (frozen views keep their fixed values, custom Parameter subclasses keep
+  their kernels) and its vectorized matrix path matches the scalar path.
+* CompositeSUT is one SUT under one budget: batched rounds dispatch as a
+  SINGLE test_batch call per member, and batched vs sequential runs of the
+  same seed evaluate the identical trial sequence.
+* SubspaceRoundRobinOptimizer (BestConfig divide-and-diverge) respects the
+  budget, improves over the default, and keeps batched/sequential parity.
+* The co-deployment surrogate rewards joint tuning: at equal total budget
+  the joint optimum is at least as good as independently tuned members.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompositeSpace,
+    CompositeSUT,
+    FloatParam,
+    FrontendSurrogate,
+    IntParam,
+    MySQLSurrogate,
+    ParameterSpace,
+    PerfMetric,
+    SubspaceRoundRobinOptimizer,
+    Tuner,
+    get_optimizer,
+    throughput_under_sla,
+    weighted_objective,
+)
+from repro.core.tuner import BatchEvaluator  # noqa: F401 (protocol exists)
+from repro.serve.space import (
+    CotuneParams,
+    ServeSurrogate,
+    coupled_serve_metrics,
+    make_cotune_sut,
+    serve_knob_space,
+)
+
+
+class OddIntParam(IntParam):
+    """Custom parameter: always lands on odd values (conversion-delegation
+    probe — the composite must route its columns through this kernel)."""
+
+    def from_unit(self, u: float) -> int:
+        v = super().from_unit(u)
+        return v if v % 2 == 1 else min(self.hi, v + 1)
+
+
+def _toy_spaces():
+    a = ParameterSpace([FloatParam("x", 0.0, 1.0, default=0.5),
+                        IntParam("n", 1, 10, default=2)])
+    b = ParameterSpace([OddIntParam("m", 1, 99, default=3)])
+    return a, b
+
+
+class TestCompositeSpace:
+    def test_prefixing_and_structure(self):
+        a, b = _toy_spaces()
+        cs = CompositeSpace({"a": a, "b": b})
+        assert cs.names == ["a.x", "a.n", "b.m"]
+        assert cs.dim == 3
+        assert cs.subspace_names == ["a", "b"]
+        assert cs.column_groups() == {"a": [0, 1], "b": [2]}
+        assert cs.subspace("b") is b
+
+    def test_split_join_roundtrip(self):
+        a, b = _toy_spaces()
+        cs = CompositeSpace({"a": a, "b": b})
+        cfg = cs.default_config()
+        parts = cs.split(cfg)
+        assert parts == {"a": {"x": 0.5, "n": 2}, "b": {"m": 3}}
+        assert cs.join(parts) == cfg
+        with pytest.raises(ValueError):
+            cs.split({"nosuch.k": 1})
+        with pytest.raises(ValueError):
+            cs.split({"unprefixed": 1})
+
+    def test_bad_member_names_rejected(self):
+        a, _ = _toy_spaces()
+        with pytest.raises(ValueError):
+            CompositeSpace({"with.dot": a})
+        with pytest.raises(ValueError):
+            CompositeSpace({"": a})
+        with pytest.raises(ValueError):
+            CompositeSpace({})
+
+    def test_matrix_matches_scalar_path_with_custom_param(self):
+        """Per-subspace conversion: the batch path must route each member's
+        columns through that member's own kernels (incl. subclasses)."""
+        a, b = _toy_spaces()
+        cs = CompositeSpace({"a": a, "b": b})
+        u = np.random.default_rng(0).random((64, cs.dim))
+        batch = cs.from_unit_matrix(u)
+        assert batch == [cs.from_unit_vector(row) for row in u]
+        assert all(cfg["b.m"] % 2 == 1 for cfg in batch)
+
+    def test_frozen_member_keeps_fixed_values(self):
+        a, b = _toy_spaces()
+        frozen = a.freeze({"n": 7})
+        cs = CompositeSpace({"a": frozen, "b": b})
+        assert cs.dim == 2  # a.x + b.m; a.n pinned
+        cfg = cs.default_config()
+        assert cfg["a.n"] == 7
+        for got in cs.from_unit_matrix(np.random.default_rng(1).random((5, 2))):
+            assert got["a.n"] == 7
+        cs.validate(cfg)
+
+    def test_to_unit_vector_roundtrip(self):
+        a, b = _toy_spaces()
+        cs = CompositeSpace({"a": a, "b": b})
+        cfg = cs.from_unit_vector(np.array([0.3, 0.6, 0.9]))
+        again = cs.from_unit_vector(cs.to_unit_vector(cfg))
+        assert again == cfg
+
+
+class TestScalarizers:
+    def test_weighted_objective(self):
+        sc = weighted_objective({"a": 1.0, "b": 2.0})
+        m = sc({"a": PerfMetric(10.0), "b": PerfMetric(3.0, False)}, {})
+        # a maximizes (objective -10), b minimizes (objective 3)
+        assert m.value == pytest.approx(-10.0 + 2.0 * 3.0)
+        assert not m.higher_is_better
+
+    def test_throughput_under_sla(self):
+        sc = throughput_under_sla("srv", sla_s=1.0, penalty=2.0)
+        ok = sc({"srv": PerfMetric(100.0, metrics={"latency_s": 0.5})}, {})
+        assert ok.value == 100.0 and ok.metrics["sla_met"]
+        slow = sc({"srv": PerfMetric(100.0, metrics={"latency_s": 2.0})}, {})
+        assert slow.value == pytest.approx(25.0)
+        assert not slow.metrics["sla_met"]
+
+    def test_throughput_under_sla_requires_latency_metric(self):
+        """A missing latency measurement must error, not silently drop the
+        SLA constraint from the whole search."""
+        sc = throughput_under_sla("srv", sla_s=1.0)
+        with pytest.raises(ValueError, match="latency"):
+            sc({"srv": PerfMetric(100.0)}, {})
+
+
+def _composed_sut():
+    return CompositeSUT(
+        {"db": MySQLSurrogate(), "fe": FrontendSurrogate()},
+        weighted_objective({"db": 1.0, "fe": 1.0}))
+
+
+class TestCompositeSUT:
+    def test_shared_budget_and_single_dispatch(self):
+        """Acceptance criterion: batched composite rounds dispatch as single
+        test_batch calls — one tuner evaluator call and one call per member
+        per round, never per config."""
+        sut = _composed_sut()
+        budget = 120
+        tuner = Tuner(sut.space(), sut, budget=budget, seed=0)
+        assert tuner.batch  # auto-detected BatchEvaluator
+        rep = tuner.run()
+        assert rep.n_tests == budget  # ONE shared resource limit
+        assert tuner.n_evaluator_calls < budget / 5
+        for name in sut.members:
+            assert sut.member_batch_calls[name] == tuner.n_evaluator_calls
+            assert sut.member_test_calls[name] == 0
+
+    @pytest.mark.parametrize("optimizer", ["rrs", "subspace_rr"])
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_batched_sequential_parity(self, optimizer, seed):
+        """Same seed => identical trial sequence through CompositeSUT in
+        both dispatch modes."""
+        runs = []
+        for batch in (True, False):
+            sut = _composed_sut()
+            tuner = Tuner(sut.space(), sut, budget=90, seed=seed,
+                          optimizer=optimizer, batch=batch)
+            runs.append(tuner.run())
+        rb, rs = runs
+        assert rb.best_config == rs.best_config
+        assert rb.best_metric.value == rs.best_metric.value
+        assert rb.n_tests == rs.n_tests
+        assert [t.config for t in rb.history] == \
+               [t.config for t in rs.history]
+        assert [t.value for t in rb.history] == \
+               [t.value for t in rs.history]
+
+    def test_member_values_reported(self):
+        sut = _composed_sut()
+        m = sut.test(sut.space().default_config())
+        assert set(m.metrics["member_values"]) == {"db", "fe"}
+
+    def test_config_only_member_never_evaluated(self):
+        """A bare ParameterSpace member contributes knobs + scalarizer
+        visibility but no standalone evaluation."""
+        knob_only = ParameterSpace([IntParam("k", 1, 9, default=5)])
+        seen = []
+
+        def scalarize(metrics, configs):
+            seen.append((set(metrics), configs["cfg"]["k"]))
+            return PerfMetric(metrics["db"].value * configs["cfg"]["k"])
+
+        sut = CompositeSUT({"db": MySQLSurrogate(), "cfg": knob_only},
+                           scalarize)
+        assert sut.space().dim == MySQLSurrogate().space().dim + 1
+        m = sut.test(sut.space().default_config())
+        assert seen[0][0] == {"db"}  # no metric for the config-only member
+        assert seen[0][1] == 5
+        assert set(m.metrics["member_values"]) == {"db"}
+        assert "cfg" not in sut.member_batch_calls
+
+
+class TestSubspaceRoundRobin:
+    def test_registered(self):
+        assert isinstance(get_optimizer("subspace_rr"),
+                          SubspaceRoundRobinOptimizer)
+
+    def test_budget_respected_and_monotone(self):
+        space = ParameterSpace(
+            [FloatParam(f"x{i}", -5.0, 5.0, default=4.0) for i in range(4)])
+        calls = []
+
+        def obj(cfg):
+            calls.append(1)
+            return sum(v * v for v in cfg.values())
+
+        res = SubspaceRoundRobinOptimizer().optimize(
+            space, obj, budget=80, rng=np.random.default_rng(0))
+        assert len(calls) == 80 == res.n_tests
+        trace = res.best_so_far()
+        assert all(a >= b for a, b in zip(trace, trace[1:]))
+        assert res.best_value < 4 * 16.0  # improved over the corner default
+
+    def test_round_robin_varies_one_subspace_per_round(self):
+        a, b = _toy_spaces()
+        cs = CompositeSpace({"a": a, "b": b})
+        seen_rounds = []
+
+        def batch_obj(cfgs):
+            seen_rounds.append(cfgs)
+            return [abs(c["a.x"] - 0.3) + abs(c["b.m"] - 51) / 50
+                    for c in cfgs]
+
+        SubspaceRoundRobinOptimizer(round_size=5).optimize(
+            cs, None, budget=60, rng=np.random.default_rng(0),
+            batch_objective=batch_obj)
+        # every exploit round (size round_size) pins all but one subspace
+        for cfgs in seen_rounds:
+            if len(cfgs) != 5:
+                continue  # explore/diverge round
+            varies_a = len({(c["a.x"], c["a.n"]) for c in cfgs}) > 1
+            varies_b = len({c["b.m"] for c in cfgs}) > 1
+            assert not (varies_a and varies_b)
+
+    def test_bad_params_rejected(self):
+        with pytest.raises(ValueError):
+            SubspaceRoundRobinOptimizer(round_size=0)
+        with pytest.raises(ValueError):
+            SubspaceRoundRobinOptimizer(shrink=1.0)
+
+
+class TestCotuneSurrogate:
+    def test_deterministic_and_coupled(self):
+        """The serve optimum must move with the kernel block choice — the
+        co-deployment interaction the joint mode exists for."""
+        p = CotuneParams()
+        space = serve_knob_space(p.max_seq)
+        base = space.default_config()
+
+        def best_batch(kernel_cfg):
+            vals = {}
+            for B in (4, 8, 12, 16, 24, 32):
+                cfg = dict(base, max_batch=B,
+                           kv_cache_pages=max(space["kv_cache_pages"].lo,
+                                              B * p.max_seq // 16))
+                vals[B] = coupled_serve_metrics(cfg, kernel_cfg, p).value
+            return max(vals, key=vals.get)
+
+        slow = best_batch({"block_kv": 64})
+        fast = best_batch({"block_kv": 1024})
+        assert fast > slow  # faster kernel => larger optimal batch
+        # determinism (batched parity depends on it)
+        m1 = coupled_serve_metrics(base, {"block_kv": 256}, p)
+        m2 = coupled_serve_metrics(dict(base), {"block_kv": 256}, p)
+        assert m1.value == m2.value
+
+    def test_joint_beats_independent_at_equal_budget(self):
+        """The tentpole claim, in miniature (single seed, small budget)."""
+        from repro.autotune.sut import KernelSUT
+
+        p = CotuneParams()
+        budget, seed = 60, 0
+        half = budget // 2
+        krep = Tuner(KernelSUT("decode_attention", p.decode_dims(8),
+                               dtype=p.dtype, mode="model").space(),
+                     KernelSUT("decode_attention", p.decode_dims(8),
+                               dtype=p.dtype, mode="model"),
+                     budget=half, seed=seed).run()
+        srep = Tuner(serve_knob_space(p.max_seq), ServeSurrogate(p),
+                     budget=budget - half, seed=seed).run()
+        indep = coupled_serve_metrics(srep.best_config, krep.best_config, p)
+
+        sut = make_cotune_sut(p)
+        jrep = Tuner(sut.space(), sut, budget=budget, seed=seed,
+                     optimizer="subspace_rr").run()
+        parts = sut.space().split(jrep.best_config)
+        joint = coupled_serve_metrics(parts["serve"], parts["kernel"], p)
+        # minimized objective: joint <= independent
+        assert joint.objective() <= indep.objective()
+
+    def test_cotune_parity_through_composite(self):
+        """Same seed => identical trial sequence batched vs sequential
+        through the full serve+kernel CompositeSUT."""
+        p = CotuneParams()
+        reps = []
+        for batch in (True, False):
+            sut = make_cotune_sut(p)
+            reps.append(Tuner(sut.space(), sut, budget=50, seed=2,
+                              optimizer="subspace_rr", batch=batch).run())
+        rb, rs = reps
+        assert [t.config for t in rb.history] == \
+               [t.config for t in rs.history]
+        assert rb.best_metric.value == rs.best_metric.value
+
+    def test_serve_config_knob_application(self):
+        from repro.serve.space import apply_serve_knobs
+
+        cfg = apply_serve_knobs({"max_batch": 4, "prefill_chunk": 256,
+                                 "kv_cache_pages": 2048,
+                                 "schedule": "sjf"})
+        assert cfg.batch_slots == 4
+        assert cfg.prefill_chunk == 256
+        assert cfg.kv_cache_pages == 2048
+        assert cfg.schedule == "sjf"
+
+    def test_tuned_knobs_always_deploy(self):
+        """The tuner legitimately explores undersized KV caches (scored as
+        thrash); applying such a winner must raise the pages to the floor
+        the deployed batch requires, not crash."""
+        from repro.serve.space import PAGE_TOKENS, apply_serve_knobs
+
+        cfg = apply_serve_knobs({"max_batch": 64, "prefill_chunk": 512,
+                                 "kv_cache_pages": 128,
+                                 "schedule": "fifo"})
+        assert cfg.kv_cache_pages * PAGE_TOKENS >= 64 * cfg.max_seq
+
+    def test_serve_config_validation(self):
+        from repro.serve import ServeConfig
+
+        with pytest.raises(ValueError, match="KV cache too small"):
+            ServeConfig(max_seq=2048, batch_slots=8, kv_cache_pages=512)
+        with pytest.raises(ValueError, match="unknown schedule"):
+            ServeConfig(schedule="lifo")
+        # unset pages auto-size to the slots x seq footprint at ANY shape
+        from repro.serve.space import PAGE_TOKENS
+
+        big = ServeConfig(max_seq=4096, batch_slots=32)
+        assert big.kv_cache_pages * PAGE_TOKENS >= 32 * 4096

@@ -111,6 +111,78 @@ class TestRRS:
             RRSOptimizer(c=0.0)
 
 
+class TestRRSPromiseThreshold:
+    """Regression (§4.3 running-quantile semantics): the promise threshold
+    must be snapshotted BEFORE the exploration batch extends the evidence.
+
+    The old order extended ``explore_values`` first and tested the batch
+    minimum against a quantile the batch itself had just shifted, so a
+    batch min could self-qualify for exploitation even when it beat no
+    prior exploration evidence."""
+
+    def test_batch_min_cannot_self_qualify(self, monkeypatch):
+        from repro.core import rrs as rrs_mod
+
+        space = ParameterSpace([FloatParam("x", 0.0, 4.0, default=0.0)])
+        # Scripted exploration so the trace is exact: warm start at 0.0
+        # (value 0), then a batch mapping to values {1, 2, 3}, then
+        # high-value filler until the budget runs out.
+        batches = [np.array([[0.25], [0.5], [0.75]])]
+
+        def scripted(n, dim, rng):
+            return batches.pop(0) if batches \
+                else np.array([[0.95], [0.96], [0.97]])
+
+        monkeypatch.setattr(rrs_mod, "get_sampler", lambda name: scripted)
+
+        res = RRSOptimizer(r=0.5).optimize(
+            space, lambda cfg: cfg["x"], budget=7,
+            rng=np.random.default_rng(0),
+            init_unit_points=np.array([[0.0]]))
+
+        # Counterfactual: the batch-inclusive quantile would have admitted
+        # the batch min (1.0 <= median([0,1,2,3]) = 1.5) ...
+        assert float(np.quantile([0.0, 1.0, 2.0, 3.0], 0.5)) >= 1.0
+        # ... but against the *prior* evidence (median([0.0]) = 0.0) the
+        # batch min 1.0 is not promising, so exploitation never starts.
+        assert res.n_tests == 7
+        assert all(t.phase == "explore" for t in res.history)
+
+    def test_prior_evidence_still_admits_genuine_improvers(self,
+                                                           monkeypatch):
+        """A batch min that DOES beat the prior quantile must exploit."""
+        from repro.core import rrs as rrs_mod
+
+        space = ParameterSpace([FloatParam("x", 0.0, 4.0, default=4.0)])
+        batches = [np.array([[0.05], [0.9], [0.95]])]
+
+        def scripted(n, dim, rng):
+            return batches.pop(0) if batches \
+                else np.array([[0.93], [0.94], [0.96]])
+
+        monkeypatch.setattr(rrs_mod, "get_sampler", lambda name: scripted)
+
+        res = RRSOptimizer(r=0.5).optimize(
+            space, lambda cfg: cfg["x"], budget=12,
+            rng=np.random.default_rng(0),
+            init_unit_points=np.array([[0.5], [0.75]]))
+        # prior median = 2.5; batch min 0.2 beats it => exploitation runs
+        assert any(t.phase == "exploit" for t in res.history)
+
+    def test_batched_sequential_parity_preserved(self):
+        """The fix changes WHICH rounds exploit, never how rounds are
+        scored: both dispatch modes still run identical trials."""
+        from repro.core import MySQLSurrogate, Tuner
+
+        sut_b, sut_s = MySQLSurrogate(), MySQLSurrogate()
+        rb = Tuner(sut_b.space(), sut_b, budget=150, seed=5,
+                   batch=True).run()
+        rs = Tuner(sut_s.space(), sut_s, budget=150, seed=5,
+                   batch=False).run()
+        assert [t.config for t in rb.history] == \
+               [t.config for t in rs.history]
+
+
 class TestBaselines:
     @pytest.mark.parametrize("name", sorted(OPTIMIZERS))
     def test_budget_respected_and_monotone(self, name):
