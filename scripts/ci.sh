@@ -17,8 +17,24 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
+# Post-PR3 baseline: CI fails if the collected count ever drops below it
+# (a silently skipped/broken test file must not read as green).
+MIN_COLLECTED=373
+echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
+COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
+COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
+echo "collected: ${COLLECTED:-<collection failed>}"
+if [[ -z "$COLLECTED" ]] || (( COLLECTED < MIN_COLLECTED )); then
+    echo "$COLLECT_OUT"
+    echo "FAIL: test collection below the ${MIN_COLLECTED} baseline (or broken)"
+    exit 1
+fi
+
 echo "=== tier-1: python -m pytest ${PYTEST_ARGS[*]} ==="
 python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "=== determinism matrix: every optimizer × dispatch mode × seed ==="
+python -m pytest -q tests/test_determinism_matrix.py
 
 echo "=== smoke: batched tuning engine (budget 500, ~seconds) ==="
 timeout 30 python - <<'EOF'
@@ -38,6 +54,23 @@ REPRO_AUTOTUNE_CACHE="$CI_TMP/autotune.json" timeout 30 \
     python -m repro.launch.tune --arch xlstm-350m --shape decode_32k \
     --joint --surrogate --budget 16 --out-dir "$CI_TMP/tune" > /dev/null
 echo "joint smoke OK"
+
+echo "=== smoke: LIVE joint co-tuning (--joint --real, tiny model, ~30s) ==="
+# Wall-clocks the real ServeEngine + train step per trial (reduced
+# gemma-7b, budget 4, single timed repeat) and must persist all three
+# winners — kernel, serve_engine, train_step — in one cache file.
+REPRO_AUTOTUNE_CACHE="$CI_TMP/autotune_real.json" timeout 90 \
+    python -m repro.launch.tune --arch gemma-7b --shape decode_32k \
+    --joint --real --budget 4 --real-repeats 1 \
+    --out-dir "$CI_TMP/tune_real" > /dev/null
+python - "$CI_TMP/autotune_real.json" <<'EOF'
+import json, sys
+
+systems = {k.split("|")[1] for k in json.load(open(sys.argv[1]))}
+missing = {"decode_attention", "serve_engine", "train_step"} - systems
+assert not missing, f"cache missing joint winners: {missing}"
+print("real joint smoke OK (kernel + serve_engine + train_step persisted)")
+EOF
 
 echo "=== check: joint >= independent tuning at equal budget ==="
 timeout 120 python -m benchmarks.cotune_bench --check

@@ -15,12 +15,15 @@ picks the tuned blocks up automatically.
 """
 from .api import (
     SERVE_SYSTEM,
+    TRAIN_SYSTEM,
     autotune_kernel,
     backend_name,
     cached_blocks,
     cached_serve_config,
+    cached_train_config,
     ensure_tuned,
     put_serve_config,
+    put_train_config,
     resolve_blocks,
 )
 from .cache import AutotuneCache, SCHEMA_VERSION, default_cache, \
@@ -35,13 +38,16 @@ __all__ = [
     "KernelSpace",
     "SCHEMA_VERSION",
     "SERVE_SYSTEM",
+    "TRAIN_SYSTEM",
     "autotune_kernel",
     "backend_name",
     "cached_blocks",
     "cached_serve_config",
+    "cached_train_config",
     "default_cache",
     "ensure_tuned",
     "put_serve_config",
+    "put_train_config",
     "reset_default_cache",
     "resolve_blocks",
     "shape_sig",

@@ -23,14 +23,16 @@ from .sut import KernelSUT
 
 __all__ = ["autotune_kernel", "ensure_tuned", "resolve_blocks",
            "cached_blocks", "backend_name", "put_serve_config",
-           "cached_serve_config", "SERVE_SYSTEM"]
+           "cached_serve_config", "SERVE_SYSTEM", "put_train_config",
+           "cached_train_config", "TRAIN_SYSTEM"]
 
 logger = logging.getLogger("repro.autotune")
 
-# The serve engine's tuned knobs persist in the same AutotuneCache under
-# this pseudo-kernel name (the "serve-config cache entry" of the joint
-# co-tuning mode) — one file keeps every tuned co-deployment artifact.
+# The serve engine's and train step's tuned knobs persist in the same
+# AutotuneCache under these pseudo-kernel names (the joint co-tuning
+# mode's winners) — one file keeps every tuned co-deployment artifact.
 SERVE_SYSTEM = "serve_engine"
+TRAIN_SYSTEM = "train_step"
 
 # cache paths already warned about (resolve_blocks warns once per path)
 _warned_cache_paths: set = set()
@@ -113,6 +115,35 @@ def cached_serve_config(sig_dims: Dict[str, int], dtype: str,
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
     cache = cache or default_cache()
     return cache.get_config(SERVE_SYSTEM, sig, dtype,
+                            backend or backend_name())
+
+
+def put_train_config(sig_dims: Dict[str, int], dtype: str,
+                     config: Dict[str, Any], value: float,
+                     cache: Optional[AutotuneCache] = None,
+                     backend: Optional[str] = None,
+                     meta: Optional[Dict[str, Any]] = None) -> str:
+    """Persist tuned train-step knobs (the live joint mode's third winner).
+
+    Keyed (``TRAIN_SYSTEM``, workload-shape signature, dtype, backend) —
+    train knobs live in the same cache file as kernel blocks and the
+    serve-config entry.  Returns the signature used.
+    """
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = cache or default_cache()
+    cache.put(TRAIN_SYSTEM, sig, dtype, backend or backend_name(),
+              dict(config), value, meta=meta)
+    return sig
+
+
+def cached_train_config(sig_dims: Dict[str, int], dtype: str,
+                        cache: Optional[AutotuneCache] = None,
+                        backend: Optional[str] = None
+                        ) -> Optional[Dict[str, Any]]:
+    """The tuned train-step knobs for this workload shape, or None."""
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = cache or default_cache()
+    return cache.get_config(TRAIN_SYSTEM, sig, dtype,
                             backend or backend_name())
 
 

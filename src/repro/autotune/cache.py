@@ -8,17 +8,30 @@ side (``repro.kernels.ops`` resolves block defaults through it; the serve
 engine and the dry-run's ``RunKnobs`` consult it for their shapes).
 
 Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
-``~/.cache/repro/autotune.json``.  Writes are atomic (tmp + rename) so
-concurrent tuning jobs cannot corrupt the file; last-writer-wins per key is
-acceptable because entries are deterministic for a given machine.
+``~/.cache/repro/autotune.json``.  Writes are atomic (tmp + ``os.replace``)
+so concurrent tuning jobs cannot corrupt the file, and every write
+merges-on-save: under an exclusive ``flock`` on a sidecar lock file, the
+cache file is re-read and unioned with the in-memory view before the
+replace — two processes tuning different systems into one cache file keep
+each other's entries (the lock serializes the read-merge-replace; on
+filesystems without working ``flock``, e.g. some NFS mounts, the merge
+still narrows the lost-update window to the replace itself).  Per-key
+conflicts stay last-writer-wins, acceptable because entries are
+deterministic for a given machine.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
 import time
 from typing import Any, Dict, Optional
+
+try:  # POSIX cross-process file locking; absent on some platforms
+    import fcntl
+except ImportError:  # pragma: no cover - linux container always has it
+    fcntl = None
 
 __all__ = ["AutotuneCache", "SCHEMA_VERSION", "default_cache",
            "reset_default_cache"]
@@ -104,23 +117,76 @@ class AutotuneCache:
             config: Dict[str, Any], value: float,
             meta: Optional[Dict[str, Any]] = None) -> None:
         with self._lock:
-            data = self._load()
-            data[self.key(kernel, sig, dtype, backend)] = {
+            key = self.key(kernel, sig, dtype, backend)
+            entry = {
                 "config": dict(config),
                 "value": float(value),
                 "meta": dict(meta or {}),
                 "time": time.time(),
             }
-            self._save(data)
+            # save only the modified key: overlaying the whole in-memory
+            # view would revert keys another process re-tuned since our
+            # load (value-level lost update, not just key-level); _save
+            # refreshes the in-memory view to the merged result.
+            self._save({key: entry})
 
-    def _save(self, data: Dict[str, Any]) -> None:
+    @contextlib.contextmanager
+    def _file_lock(self):
+        """Exclusive cross-process lock over the read-merge-replace window
+        (sidecar ``.lock`` file; the cache file itself is replaced, so it
+        cannot carry the lock)."""
+        if fcntl is None:  # pragma: no cover - non-POSIX fallback
+            yield
+            return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        fd = os.open(f"{self.path}.lock", os.O_CREAT | os.O_RDWR, 0o644)
+        locked = False
+        try:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_EX)
+                locked = True
+            except OSError:
+                # No working lock manager (e.g. some NFS mounts): proceed
+                # unlocked — the merge still narrows the lost-update
+                # window to the read-merge-replace itself.
+                pass
+            yield
+        finally:
+            if locked:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
+
+    def _save(self, delta: Dict[str, Any]) -> None:
+        """Write-temp-then-replace, merging concurrent writers' entries.
+
+        ``delta`` holds ONLY the keys this writer modified.  Another
+        process may have written the file since our in-memory view was
+        loaded; dumping that whole view would silently erase its new keys
+        (the classic lost update) or revert keys it re-tuned to our stale
+        values.  Under the cross-process file lock the file is re-read and
+        only the delta overlaid: our modified keys win, every other key
+        keeps whatever the file now holds, older-schema keys stay dropped,
+        and the in-memory view is refreshed to the merged state so
+        subsequent gets observe the file's reality.
+        """
+        with self._file_lock():
+            try:
+                with open(self.path) as f:
+                    disk = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                disk = {}
+            merged = {k: v for k, v in disk.items() if not self._stale(k)}
+            merged.update(delta)
+            self._data = merged
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
 
     def __len__(self) -> int:
         with self._lock:

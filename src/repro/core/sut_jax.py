@@ -33,7 +33,7 @@ from repro.core.params import (
 from repro.core.tuner import PerfMetric
 
 __all__ = ["JaxDryRunSUT", "knob_space", "knobs_from_config",
-           "JaxMeasuredSUT"]
+           "JaxMeasuredSUT", "TrainStepSUT", "median_wall_clock"]
 
 HBM_GIB = 16.0  # v5e
 
@@ -133,6 +133,122 @@ class JaxDryRunSUT:
             })
 
 
+def _measured_train_setup(cfg, knobs, seq_len: int, global_batch: int,
+                          n_batches: int, seed: int, donate: bool = False):
+    """Shared scaffolding for wall-clock train-step SUTs: build the model,
+    init state, jit the step under the knobs, and materialize the batch
+    list (synthetic frontend embeddings included for frontend/encoder
+    models).  Returns (step_fn, params, opt_state, batches)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data import DataConfig, SyntheticLMDataset
+    from repro.models import Model
+    from repro.optim import OptimizerConfig
+    from repro.train.step import init_train_state, make_train_step
+
+    model = Model(cfg)
+    params, opt_state = init_train_state(
+        model, jax.random.PRNGKey(seed), knobs)
+    data = SyntheticLMDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=seed))
+    step_fn = jax.jit(make_train_step(model, OptimizerConfig(), knobs),
+                      donate_argnums=(0, 1) if donate else ())
+    batches = [
+        {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        for i in range(n_batches)
+    ]
+    if cfg.frontend or cfg.encoder:
+        rng = np.random.default_rng(seed)
+        for b in batches:
+            b["frontend_embeds"] = jnp.asarray(rng.normal(
+                size=(global_batch, cfg.frontend_tokens,
+                      cfg.frontend_dim)).astype(np.float32))
+    return step_fn, params, opt_state, batches
+
+
+def median_wall_clock(fn, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall-clock seconds of ``fn()`` after trimming warmup runs.
+
+    The shared timing methodology of the live (``--real``) co-tuning path:
+    ``warmup`` untimed calls absorb compilation and cache effects, then the
+    median of ``repeats`` timed calls rejects scheduler-noise outliers that
+    a mean (or a single run) would leak into the tuner's objective.
+    ``fn`` must block until its work is done (e.g. ``block_until_ready``).
+    """
+    import time
+
+    for _ in range(max(0, warmup)):
+        fn()
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class TrainStepSUT:
+    """The REAL train step as a system-under-tune (live co-tuning member).
+
+    Each test applies the candidate knobs (``repro.train.space``) by
+    re-jitting ``make_train_step`` — the paper's apply-config-and-restart —
+    and wall-clocks a short microbatch training loop: ``warmup`` untimed
+    loops (compile included), then the median of ``repeats`` timed loops of
+    ``steps`` steps each.  The metric is training tokens/sec (higher is
+    better); step seconds and the final loss ride along as provenance.
+    """
+
+    def __init__(self, cfg, seq_len: int = 32, global_batch: int = 8,
+                 steps: int = 2, warmup: int = 1, repeats: int = 3,
+                 seed: int = 0, rules_preset: str = "dp"):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.steps = steps
+        self.warmup = warmup
+        self.repeats = repeats
+        self.seed = seed
+        self.rules_preset = rules_preset
+        self.name = f"train-step[{cfg.name}]"
+
+    def space(self) -> ParameterSpace:
+        from repro.train.space import train_knob_space
+
+        return train_knob_space(max_microbatches=self.global_batch)
+
+    def test(self, config: Config) -> PerfMetric:
+        import jax
+
+        from repro.train.space import apply_train_knobs
+        from repro.train.step import RunKnobs
+
+        knobs = apply_train_knobs(
+            config, RunKnobs(rules_preset=self.rules_preset))
+        step_fn, params, opt_state, batches = _measured_train_setup(
+            self.cfg, knobs, self.seq_len, self.global_batch, self.steps,
+            self.seed)
+        state = {"params": params, "opt": opt_state, "m": None}
+
+        def loop():
+            p, o = state["params"], state["opt"]
+            for b in batches:
+                p, o, m = step_fn(p, o, b)
+            jax.block_until_ready(m["loss"])
+            state.update(params=p, opt=o, m=m)
+
+        sec = median_wall_clock(loop, self.warmup, self.repeats) / self.steps
+        tput = self.seq_len * self.global_batch / sec
+        return PerfMetric(
+            value=tput, higher_is_better=True,
+            metrics={"step_seconds": sec, "tokens_per_sec": tput,
+                     "loss": float(state["m"]["loss"]),
+                     "warmup": self.warmup, "repeats": self.repeats})
+
+
 class JaxMeasuredSUT:
     """Real measured tuning for CPU-scale configs: config -> steps/sec.
 
@@ -163,30 +279,16 @@ class JaxMeasuredSUT:
         import time
 
         import jax
-        import jax.numpy as jnp
 
-        from repro.data import DataConfig, SyntheticLMDataset
-        from repro.models import Model
-        from repro.optim import OptimizerConfig
-        from repro.train.step import RunKnobs, init_train_state, \
-            make_train_step
+        from repro.train.step import RunKnobs
 
         knobs = RunKnobs(
             remat=config["remat"], microbatches=config["microbatches"],
             loss_chunk=config["loss_chunk"], donate=config["donate"],
             scan_unroll=config["scan_unroll"], rules_preset="dp")
-        model = Model(self.cfg)
-        params, opt_state = init_train_state(
-            model, jax.random.PRNGKey(self.seed), knobs)
-        data = SyntheticLMDataset(DataConfig(
-            vocab_size=self.cfg.vocab_size, seq_len=self.seq_len,
-            global_batch=self.global_batch, seed=self.seed))
-        step_fn = jax.jit(make_train_step(model, OptimizerConfig(), knobs),
-                          donate_argnums=(0, 1) if knobs.donate else ())
-        batches = [
-            {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
-            for i in range(self.warmup + self.steps)
-        ]
+        step_fn, params, opt_state, batches = _measured_train_setup(
+            self.cfg, knobs, self.seq_len, self.global_batch,
+            self.warmup + self.steps, self.seed, donate=knobs.donate)
         for i in range(self.warmup):  # includes compile
             params, opt_state, m = step_fn(params, opt_state, batches[i])
         jax.block_until_ready(m["loss"])

@@ -14,11 +14,14 @@ Four modes:
   the serve engine, and bare ``repro.kernels.ops`` calls) consult.
 * ``--joint`` — cross-system co-tuning: the serve engine's knobs AND the
   decode kernel's block config as ONE ``CompositeSUT`` under one budget
-  (BestConfig-style subspace round-robin by default).  On this CPU
-  container the SUT is the analytic co-deployment surrogate
-  (``repro.serve.space``); winners persist to the autotune cache — kernel
+  (BestConfig-style subspace round-robin by default).  The default scorer
+  is the analytic co-deployment surrogate (``repro.serve.space``; the
+  CI/benchmark path); ``--real`` instead wall-clocks the LIVE system per
+  trial — the real ``ServeEngine`` rebuilt and timed under each candidate
+  config, the real train step re-jitted and timed, train-step knobs
+  joining the composite.  Winners persist to the autotune cache — kernel
   blocks under the tuned decode shape, serve knobs as a serve-config
-  entry.
+  entry, and (``--real``) train knobs as a train-step entry.
 * default — full ACTS run: LHS + RRS over the knob space within ``--budget``
   tests (each test = one AOT compile of the real system on the production
   mesh), reporting default vs. best and writing the full history.
@@ -52,23 +55,59 @@ def _parse_value(v: str):
 
 
 def _joint_main(args) -> int:
-    """--joint: serve knobs + decode kernel blocks as one SUT."""
+    """--joint: serve knobs + decode kernel blocks (+ train-step knobs in
+    --real mode) co-tuned as one SUT under one budget."""
     from repro.configs import get_config
     from repro.core.tuner import Tuner
-    from repro.serve.space import CotuneParams, make_cotune_sut
-
-    if not args.surrogate:
-        # There is no real-engine joint scorer yet (wall-clocking the live
-        # engine per trial is future work), so every run uses the analytic
-        # surrogate; say so rather than silently implying a measurement.
-        print("[joint] scoring on the analytic co-deployment surrogate "
-              "(currently the only joint scorer; pass --surrogate to "
-              "silence this note)")
 
     cfg = get_config(args.arch)
     shape = SHAPES[args.shape]
-    params = CotuneParams.from_model(cfg, max_seq=min(shape.seq_len, 32768))
-    sut = make_cotune_sut(params)
+    train_seq, train_batch = 32, 8  # the live train-step workload
+
+    if args.real:
+        from repro.configs import reduced
+        from repro.serve.space import make_live_cotune_sut
+
+        # Live wall-clock co-tuning: every trial rebuilds the REAL serve
+        # engine and re-jits the REAL train step under the candidate knobs
+        # and times them (warmup trimmed, median of repeats).  On this
+        # host the model is the reduced same-family config so a budget-8
+        # run finishes in CI time; pointing the same code path at the full
+        # config on a TPU pod is a parameter change, not a port.
+        model_cfg = reduced(cfg)
+        max_seq = min(shape.seq_len, 128)
+        sut = make_live_cotune_sut(model_cfg, max_seq=max_seq,
+                                   train_seq=train_seq,
+                                   train_batch=train_batch, seed=args.seed,
+                                   repeats=args.real_repeats)
+        mode = "joint-real"
+        dtype = model_cfg.compute_dtype
+        # Honest provenance: the live kernel member scored every candidate
+        # at ONE fixed decode shape (the default batch), so the winner is
+        # keyed at those dims — not at the tuned serve batch it was never
+        # evaluated under.  (The surrogate path re-costs the kernel at the
+        # candidate batch inside its scalarizer, so it keys at the tuned
+        # batch; its dims are resolved after the run.)
+        kernel_sig_dims = dict(sut.members["kernel"].dims)
+        serve_sig_dims = {"S": max_seq, "H": model_cfg.padded_heads,
+                          "KV": model_cfg.n_kv_heads,
+                          "D": model_cfg.head_dim_}
+    else:
+        from repro.serve.space import CotuneParams, make_cotune_sut
+
+        if not args.surrogate:
+            print("[joint] scoring on the analytic co-deployment surrogate "
+                  "(pass --real to wall-clock the live engine + train "
+                  "step instead, or --surrogate to silence this note)")
+        params = CotuneParams.from_model(cfg,
+                                         max_seq=min(shape.seq_len, 32768))
+        sut = make_cotune_sut(params)
+        mode = "joint-surrogate"
+        dtype = params.dtype
+        kernel_sig_dims = None  # tuned-batch decode dims, known post-run
+        serve_sig_dims = {"S": params.max_seq, "H": params.heads,
+                          "KV": params.kv_heads, "D": params.head_dim}
+
     space = sut.space()
     tuner = Tuner(space, sut, budget=args.budget, optimizer=args.optimizer,
                   seed=args.seed, verbose=True)
@@ -76,40 +115,48 @@ def _joint_main(args) -> int:
 
     parts = space.split(rep.best_config)
     serve_cfg, kernel_cfg = parts["serve"], parts["kernel"]
+    train_cfg = parts.get("train")
 
-    # Persist both winners: kernel blocks under the decode shape the tuned
-    # engine will actually run, serve knobs as the serve-config entry.
+    # Persist every winner in ONE cache file: kernel blocks under the
+    # decode shape the tuned engine will actually run, serve knobs as the
+    # serve-config entry, train-step knobs (live mode) as the train entry.
     from repro import autotune
 
     cache = autotune.default_cache()
-    kernel_dims = params.decode_dims(serve_cfg["max_batch"])
-    cache.put("decode_attention", autotune.shape_sig(kernel_dims),
-              params.dtype, autotune.backend_name(), kernel_cfg,
-              rep.best_metric.value,
-              meta={"mode": "joint-surrogate", "n_tests": rep.n_tests})
-    serve_sig_dims = {"S": params.max_seq, "H": params.heads,
-                      "KV": params.kv_heads, "D": params.head_dim}
-    autotune.put_serve_config(serve_sig_dims, params.dtype, serve_cfg,
-                              rep.best_metric.value, cache=cache,
-                              meta={"mode": "joint-surrogate",
-                                    "n_tests": rep.n_tests})
+    meta = {"mode": mode, "n_tests": rep.n_tests}
+    if kernel_sig_dims is None:  # surrogate: key at the tuned serve batch
+        kernel_sig_dims = params.decode_dims(serve_cfg["max_batch"])
+    cache.put("decode_attention", autotune.shape_sig(kernel_sig_dims),
+              dtype, autotune.backend_name(), kernel_cfg,
+              rep.best_metric.value, meta=meta)
+    autotune.put_serve_config(serve_sig_dims, dtype, serve_cfg,
+                              rep.best_metric.value, cache=cache, meta=meta)
+    if train_cfg is not None:
+        train_sig_dims = dict(serve_sig_dims, S=train_seq, B=train_batch)
+        autotune.put_train_config(train_sig_dims, dtype, train_cfg,
+                                  rep.best_metric.value, cache=cache,
+                                  meta=meta)
 
     os.makedirs(args.out_dir, exist_ok=True)
-    tag = f"joint_{args.arch}_{args.shape}"
+    tag = f"joint_{args.arch}_{args.shape}" + \
+        ("_real" if args.real else "")
     with open(os.path.join(args.out_dir, f"{tag}.json"), "w") as f:
         f.write(rep.to_json())
 
     d, b = rep.default_metric, rep.best_metric
     print("\n=== ACTS joint co-tuning result ===")
-    print(f"cell: {args.arch} × {args.shape} (surrogate, "
+    print(f"cell: {args.arch} × {args.shape} "
+          f"({'live wall-clock' if args.real else 'surrogate'}, "
           f"optimizer={args.optimizer})")
-    print(f"default: {d.value:.0f} tok/s  (serve+kernel defaults)")
-    print(f"best:    {b.value:.0f} tok/s  "
+    print(f"default: {d.value:.1f} tok/s  (all-member defaults)")
+    print(f"best:    {b.value:.1f} tok/s  "
           f"latency={b.metrics.get('latency_s', float('nan')):.3f}s")
     print(f"improvement: {rep.improvement:.2f}x in {rep.n_tests} tests "
           f"({rep.wall_seconds:.1f}s wall)")
     print(f"serve knobs:   {serve_cfg}")
     print(f"kernel blocks: {kernel_cfg}")
+    if train_cfg is not None:
+        print(f"train knobs:   {train_cfg}")
     print(f"persisted to {cache.path}")
     return 0
 
@@ -134,14 +181,29 @@ def main(argv=None) -> int:
                          "as one SUT (CompositeSpace, shared budget)")
     ap.add_argument("--surrogate", action="store_true",
                     help="with --joint: score on the analytic co-deployment "
-                         "surrogate — currently the ONLY joint scorer "
-                         "(real-engine wall-clock co-tuning is future "
-                         "work); the flag just records intent")
+                         "surrogate (the default/CI path; the flag just "
+                         "silences the which-scorer note)")
+    ap.add_argument("--real", action="store_true",
+                    help="with --joint: wall-clock the LIVE system per "
+                         "trial — rebuild the real ServeEngine and re-jit "
+                         "the real train step under each candidate config "
+                         "(reduced model on CPU hosts; warmup-trimmed "
+                         "median timing); adds train-step knobs to the "
+                         "composite and persists their winner too")
+    ap.add_argument("--real-repeats", type=int, default=3,
+                    help="with --joint --real: timed repeats per trial "
+                         "(median taken); 1 = fastest smoke, 3 = default "
+                         "noise rejection")
     ap.add_argument("--kernel-budget", type=int, default=16)
     ap.add_argument("--out-dir", default="results/tune")
     args = ap.parse_args(argv)
     if args.optimizer is None:
         args.optimizer = "subspace_rr" if args.joint else "rrs"
+    if args.real and not args.joint:
+        ap.error("--real only applies to --joint (live co-tuning)")
+    if args.real and args.surrogate:
+        ap.error("--surrogate and --real are mutually exclusive joint "
+                 "scorers")
 
     if args.joint:
         return _joint_main(args)

@@ -553,6 +553,73 @@ class Model:
             new_cache["memory"] = memory.astype(cache["memory"].dtype)
         return logits, new_cache
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Whether the prompt can be prefilled in segments through the cache.
+
+        Chunked prefill appends multi-token segments via the cached-attention
+        path, which is exact for dense-cache attention blocks (attn / moe /
+        dec / cross / shared).  Sliding-window blocks write a ring buffer
+        whose multi-token append would wrap incorrectly, and recurrent
+        mixers (mamba2 / mlstm / slstm) recompute their state from the full
+        sequence — both prefill whole prompts instead.
+
+        MoE blocks are chunk-exact only with drop-free router capacity
+        (``capacity_factor * experts_per_token >= n_experts``): capacity-
+        bound routing drops tokens per routing *group*, and the grouping
+        differs between whole-prompt and per-chunk prefill, so a capacity-
+        bound MoE would generate different tokens under chunking.
+        """
+        kinds = set(self.cfg.superblock)
+        if not kinds <= {"attn", "moe", "dec", "cross", "shared"}:
+            return False
+        if "moe" in kinds:
+            moe = self.cfg.moe
+            if moe is None or (moe.capacity_factor * moe.experts_per_token
+                               < moe.n_experts):
+                return False
+        return True
+
+    def prefill_chunk(self, params, batch, cache):
+        """Append one prompt segment to the KV caches (chunked prefill).
+
+        ``batch["tokens"]``: (B, C) — the next C prompt tokens;
+        ``cache["index"]`` tokens are already resident.  For
+        frontend/encoder models, ``frontend_embeds`` MUST ride with the
+        FIRST chunk: the projected memory is computed once, carried in the
+        cache, and reused by later chunks — a first chunk without it would
+        silently attend to the cache's zero-initialized memory buffer
+        (``ServeEngine.generate`` validates this up front; direct callers
+        own the contract, since the chunk index is traced and cannot be
+        checked here).  Returns (last-token logits, cache) —
+        value-equivalent to whole-prompt ``prefill`` for stacks where
+        ``supports_chunked_prefill`` holds, so the serve engine's
+        ``prefill_chunk`` knob changes *timing*, not tokens.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, C = tokens.shape
+        index = cache["index"]
+        if "frontend_embeds" in batch:
+            memory = self._memory(params, batch)
+        else:
+            memory = cache.get("memory")
+        x = self._embed(params, tokens)
+        ctx = {
+            "positions": index + jnp.arange(C),
+            "index": index,
+            "memory": memory,
+            "shared_params": params.get("shared"),
+        }
+        x, new_blocks = _stack_decode(params["blocks"], cache["blocks"], x,
+                                      ctx, cfg)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:, :])
+        new_cache = dict(cache, blocks=new_blocks, index=index + C)
+        if memory is not None and "memory" in cache:
+            new_cache["memory"] = memory.astype(cache["memory"].dtype)
+        return logits, new_cache
+
     def decode_step(self, params, tokens, cache):
         """One decode step: tokens (B, 1) + cache -> (logits, new cache)."""
         cfg = self.cfg

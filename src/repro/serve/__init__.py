@@ -12,11 +12,14 @@ _SPACE_NAMES = (
     "PAGE_TOKENS",
     "SCHEDULES",
     "CotuneParams",
+    "LiveCotuneScalarizer",
+    "LiveServeSUT",
     "ServeKernelCoupling",
     "ServeSurrogate",
     "apply_serve_knobs",
     "coupled_serve_metrics",
     "make_cotune_sut",
+    "make_live_cotune_sut",
     "serve_knob_space",
 )
 

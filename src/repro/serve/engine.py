@@ -33,9 +33,12 @@ class ServeConfig:
     seed: int = 0
     # Tunable serving knobs (see repro.serve.space.serve_knob_space; the
     # joint co-tuning mode persists winners for them).  prefill_chunk is
-    # the target prefill split size — the engine currently prefills whole
-    # equal-length prompts in one call, so it only feeds the tuning
-    # surface; chunked prefill lands with paged attention.
+    # the prefill split size: prompts longer than this are prefilled in
+    # chunk-sized segments threaded through the KV cache (scheduler
+    # granularity vs per-chunk dispatch overhead — the knob moves measured
+    # prefill latency).  Models whose blocks cannot append multi-token
+    # segments exactly (sliding-window rings, recurrent mixers; see
+    # Model.supports_chunked_prefill) prefill whole prompts regardless.
     prefill_chunk: int = 512
     # KV capacity in PAGE_TOKENS-token pages; batch_slots*max_seq must fit
     # (enforced at construction — the admission constraint).  None
@@ -77,6 +80,9 @@ class GenerationResult:
     prefill_seconds: float
     decode_seconds: float
     steps: int
+    # prefill dispatches actually issued (> waves when chunked prefill
+    # split prompts) — the observable evidence the prefill_chunk knob acts
+    prefill_chunks: int = 0
 
     @property
     def decode_tokens_per_sec(self) -> float:
@@ -102,6 +108,7 @@ class ServeEngine:
                  "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
                  "D": mcfg.head_dim_})
         self._prefill = jax.jit(model.prefill)
+        self._prefill_chunk = jax.jit(model.prefill_chunk)
         self._decode = jax.jit(model.decode_step)
 
     def _ensure(self, kernel: str, dims: Dict[str, int]) -> Dict[str, int]:
@@ -138,6 +145,14 @@ class ServeEngine:
         Requests are packed into ``batch_slots``-sized waves; a short final
         wave is padded with dummy prompts (their outputs are discarded).
         """
+        mcfg = self.model.cfg
+        if (mcfg.frontend or mcfg.encoder) and frontend_embeds is None:
+            # Fail loudly on BOTH prefill paths: the whole-prompt path
+            # would KeyError deep in _memory, and the chunked path would
+            # silently attend to the cache's zero-initialized memory.
+            raise ValueError(
+                f"{mcfg.name} has a modality frontend/encoder; generate() "
+                "requires frontend_embeds")
         lens = {len(p) for p in prompts}
         if len(lens) != 1:
             raise ValueError("engine batches equal-length prompts; "
@@ -151,7 +166,7 @@ class ServeEngine:
         slots = self.cfg.batch_slots
         outputs: List[List[int]] = []
         prefill_s = decode_s = 0.0
-        steps = 0
+        steps = chunks = 0
         for wave_start in range(0, len(prompts), slots):
             wave = list(prompts[wave_start:wave_start + slots])
             n_real = len(wave)
@@ -163,24 +178,48 @@ class ServeEngine:
                 if fe.shape[0] < slots:
                     reps = np.repeat(fe[:1], slots - fe.shape[0], axis=0)
                     fe = np.concatenate([fe, reps], axis=0)
-            toks, pf, dc, st = self._generate_wave(
+            toks, pf, dc, st, nc = self._generate_wave(
                 np.asarray(wave, np.int32), max_new_tokens, fe)
             outputs.extend(toks[:n_real])
             prefill_s += pf
             decode_s += dc
             steps += st
-        return GenerationResult(outputs, prefill_s, decode_s, steps)
+            chunks += nc
+        return GenerationResult(outputs, prefill_s, decode_s, steps, chunks)
 
     def _generate_wave(self, prompt_arr: np.ndarray, max_new: int,
                        frontend_embeds) -> Any:
         B, P = prompt_arr.shape
         cache = self.model.init_cache(B, max_seq=self.cfg.max_seq)
-        batch = {"tokens": jnp.asarray(prompt_arr)}
-        if frontend_embeds is not None:
-            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
 
+        chunk = self.cfg.prefill_chunk
+        chunked = chunk < P and self.model.supports_chunked_prefill
+        # host->device conversion stays OUTSIDE the timed window, so
+        # prefill_seconds keeps measuring model time like it always has
+        tokens = jnp.asarray(prompt_arr)
+        fe = jnp.asarray(frontend_embeds) \
+            if frontend_embeds is not None else None
         t0 = time.time()
-        logits, cache = self._prefill(self.params, batch, cache)
+        if chunked:
+            # Chunked prefill: run the prompt through the model in
+            # chunk-sized segments, threading the KV cache between calls.
+            # Exact (same tokens, same cache) as whole-prompt prefill for
+            # the block kinds that support it; the knob trades scheduler
+            # granularity against per-chunk dispatch overhead.
+            n_chunks = 0
+            for start in range(0, P, chunk):
+                piece = {"tokens": tokens[:, start:start + chunk]}
+                if start == 0 and fe is not None:
+                    piece["frontend_embeds"] = fe
+                logits, cache = self._prefill_chunk(self.params, piece,
+                                                    cache)
+                n_chunks += 1
+        else:
+            batch = {"tokens": tokens}
+            if fe is not None:
+                batch["frontend_embeds"] = fe
+            logits, cache = self._prefill(self.params, batch, cache)
+            n_chunks = 1
         logits.block_until_ready()
         prefill_s = time.time() - t0
 
@@ -207,7 +246,7 @@ class ServeEngine:
             if self.cfg.eos_token is not None and self.cfg.eos_token in toks:
                 toks = toks[:toks.index(self.cfg.eos_token) + 1]
             results.append(toks)
-        return results, prefill_s, decode_s, produced
+        return results, prefill_s, decode_s, produced, n_chunks
 
     def _sample(self, logits, rng, step):
         lg = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)

@@ -3,10 +3,11 @@
 ``serve_knob_space`` exposes the engine's config surface — batch slots,
 prefill chunk, KV-cache pages, scheduling policy — to the ordinary tuner
 stack, and ``apply_serve_knobs`` maps a tuned config back onto a
-``ServeConfig``.  Today ``batch_slots`` and the KV-page capacity act in the
-engine at runtime; ``prefill_chunk`` and ``schedule`` are validated,
-modelled by the surrogate below, and get their runtime wiring with paged
-attention / continuous batching (see the field notes on ``ServeConfig``).
+``ServeConfig``.  ``batch_slots``, the KV-page capacity and
+``prefill_chunk`` (runtime chunked prefill) act in the engine at runtime;
+``schedule`` is validated, modelled by the surrogate below, and gets its
+runtime wiring with continuous batching (see the ``ServeConfig`` field
+notes).
 
 The rest of the module is the CPU-side **co-deployment surrogate** behind
 ``python -m repro.launch.tune --joint``, ``benchmarks/cotune_bench.py`` and
@@ -23,15 +24,21 @@ paper's §2.1 phenomenon made concrete, twice over:
   start thrashing at the batch sizes joint tuning wants.
 
 Numbers (weight-stream time, per-token costs, slot bytes) are calibrated to
-be *plausible*, not measured — on a real TPU the same ``CompositeSUT``
-wiring wall-clocks the live engine instead.  This module stays numpy-only
-(no jax import) so the tuning path is cheap to spin up.
+be *plausible*, not measured.  The **live** path is ``LiveServeSUT`` /
+``make_live_cotune_sut`` at the bottom of this module: the same
+``CompositeSUT`` wiring wall-clocking the real ``ServeEngine.generate``
+(plus the real train step and the decode kernel) — what
+``python -m repro.launch.tune --joint --real`` runs.  This module stays
+jax-free at import time (numpy only); the live classes import the engine
+lazily inside their methods.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.autotune.space import KERNELS, VMEM_BYTES, _dtype_bytes
 from repro.core.composite import CompositeSUT
@@ -49,28 +56,45 @@ __all__ = [
     "ServeSurrogate",
     "ServeKernelCoupling",
     "make_cotune_sut",
+    "LiveServeSUT",
+    "LiveCotuneScalarizer",
+    "make_live_cotune_sut",
 ]
 
 PAGE_TOKENS = 16  # KV-cache page granularity (tokens per page)
 SCHEDULES = ("fifo", "sjf", "interleave")
 
 
-def serve_knob_space(max_seq: int = 2048) -> ParameterSpace:
+def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
+                     ) -> ParameterSpace:
     """The serve engine's tunable knobs (``ServeConfig`` fields).
 
     The KV-page range scales with ``max_seq`` so the knob always spans
-    "one resident sequence" .. "all 64 slots resident" — at the default
-    2048-token serving window it matches ``ServeConfig``'s defaults.
+    "one resident sequence" .. "all ``max_slots`` slots resident" — at the
+    default 2048-token serving window it matches ``ServeConfig``'s
+    defaults.  The prefill-chunk choices scale DOWN with small windows
+    (powers of two, floor max(8, min(128, max_seq/16)), ceiling
+    min(max_seq, 2048)) so the knob stays live on the small serving
+    windows the wall-clock (``--real``) mode tunes; at ``max_seq`` ≥ 2048
+    they are the historical (128, ..., 2048) set.  ``max_slots`` bounds
+    the batch-slot knob — live tuning on small hosts caps it so candidate
+    engines stay buildable.
     """
     page_per_seq = max(1, max_seq // PAGE_TOKENS)
+    chunk_lo = max(8, min(128, max_seq // 16))
+    chunk_choices = tuple(
+        c for c in (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+        if chunk_lo <= c <= max_seq) or (max_seq,)
+    default_slots = min(8, max_slots)
     return ParameterSpace([
         # engine batch slots (ServeConfig.batch_slots)
-        IntParam("max_batch", 1, 64, default=8, log=True),
+        IntParam("max_batch", 1, max_slots, default=default_slots, log=True),
         # prefill split size: scheduler granularity vs per-chunk overhead
-        EnumParam("prefill_chunk", (128, 256, 512, 1024, 2048), 512),
+        EnumParam("prefill_chunk", chunk_choices,
+                  chunk_choices[len(chunk_choices) // 2]),
         # KV capacity in PAGE_TOKENS-token pages (must cover batch x seq)
-        IntParam("kv_cache_pages", page_per_seq, 64 * page_per_seq,
-                 default=8 * page_per_seq, log=True),
+        IntParam("kv_cache_pages", page_per_seq, max_slots * page_per_seq,
+                 default=default_slots * page_per_seq, log=True),
         # wave admission order
         EnumParam("schedule", SCHEDULES, "fifo"),
     ])
@@ -256,6 +280,186 @@ class ServeKernelCoupling:
         if "kernel" in metrics:
             out.metrics["kernel_alone_s"] = float(metrics["kernel"].value)
         return out
+
+
+# ---------------------------------------------------------------------------
+# the LIVE co-tuning path (wall-clock the real engine; --joint --real)
+# ---------------------------------------------------------------------------
+class LiveServeSUT:
+    """The real ``ServeEngine`` as a system-under-tune.
+
+    Each test maps the candidate knobs onto a ``ServeConfig``
+    (``apply_serve_knobs``), builds a fresh engine — the paper's
+    apply-config-and-restart loop; the restart cost here is the XLA
+    compile, which is exactly why the resource limit counts tests — and
+    wall-clocks ``generate`` over a fixed synthetic workload.  Timing uses
+    the shared live methodology (``repro.core.sut_jax.median_wall_clock``):
+    ``warmup`` untimed calls absorb compilation, then the median of
+    ``repeats`` timed calls scores the config.
+
+    The metric is generated tokens/sec; ``latency_s`` (the full-workload
+    wall time — every admitted request has finished by then) rides along
+    for SLA scalarizers, as do the prefill/decode split and the chunk
+    count, so a tuned ``prefill_chunk`` is visible in the provenance.
+    """
+
+    def __init__(self, model, params, base: Optional[Any] = None,
+                 prompt_len: int = 32, gen_len: int = 8,
+                 n_requests: int = 8, warmup: int = 1, repeats: int = 3,
+                 seed: int = 0, max_slots: int = 64):
+        from .engine import ServeConfig
+
+        self.model = model
+        self.params = params
+        self.base = base or ServeConfig(max_seq=128)
+        if prompt_len + gen_len > self.base.max_seq:
+            raise ValueError("prompt_len + gen_len exceeds the serving "
+                             f"window ({self.base.max_seq})")
+        self.prompt_len = prompt_len
+        self.gen_len = gen_len
+        self.warmup = warmup
+        self.repeats = repeats
+        self.max_slots = max_slots
+        rng = np.random.default_rng(seed)
+        self.prompts = rng.integers(
+            1, model.cfg.vocab_size, size=(n_requests, prompt_len)).tolist()
+        # frontend/encoder models need memory inputs; a fixed synthetic
+        # embedding batch keeps the workload deterministic across trials
+        self.frontend_embeds = None
+        if model.cfg.frontend or model.cfg.encoder:
+            self.frontend_embeds = rng.normal(
+                size=(n_requests, model.cfg.frontend_tokens,
+                      model.cfg.frontend_dim)).astype(np.float32)
+        self.name = f"serve-live[{model.cfg.name}]"
+
+    def space(self) -> ParameterSpace:
+        return serve_knob_space(self.base.max_seq, self.max_slots)
+
+    def test(self, config: Config) -> PerfMetric:
+        from repro.core.sut_jax import median_wall_clock
+
+        from .engine import ServeEngine
+
+        scfg = apply_serve_knobs(config, self.base)
+        engine = ServeEngine(self.model, self.params, scfg)
+        out: Dict[str, Any] = {}
+
+        def run():
+            out["res"] = engine.generate(
+                self.prompts, self.gen_len,
+                frontend_embeds=self.frontend_embeds)
+
+        wall = median_wall_clock(run, self.warmup, self.repeats)
+        res = out["res"]
+        n_tok = sum(len(t) for t in res.tokens)
+        tput = n_tok / max(wall, 1e-9)
+        return PerfMetric(
+            value=float(tput), higher_is_better=True,
+            metrics={"latency_s": float(wall),
+                     "prefill_s": float(res.prefill_seconds),
+                     "decode_s": float(res.decode_seconds),
+                     "prefill_chunks": int(res.prefill_chunks),
+                     "steps": int(res.steps), "tokens": int(n_tok),
+                     "warmup": self.warmup, "repeats": self.repeats})
+
+
+class LiveCotuneScalarizer:
+    """Joint objective for the live composite (serve + train + kernel).
+
+    value = serve tokens/s, SLA-penalized when ``sla_s > 0`` (smooth
+    ``(sla/lat)**penalty`` past the bound, like the surrogate), scaled by
+    the decode kernel's speedup over its default tiling raised to
+    ``kernel_coupling`` (the kernel member measures/models in isolation;
+    the exponent is roughly the attention share of a decode step), plus
+    train tokens/s at the ``train_weight`` exchange rate (co-located
+    training shares the host; its tokens are worth a fraction of a served
+    token).  Every member's raw value is kept in the metrics.
+    """
+
+    def __init__(self, sla_s: float = 0.0, penalty: float = 2.0,
+                 train_weight: float = 0.25,
+                 kernel_coupling: float = 0.25,
+                 kernel_ref: Optional[float] = None):
+        self.sla_s = sla_s
+        self.penalty = penalty
+        self.train_weight = train_weight
+        self.kernel_coupling = kernel_coupling
+        self.kernel_ref = kernel_ref
+
+    def __call__(self, metrics: Dict[str, PerfMetric],
+                 configs: Dict[str, Config]) -> PerfMetric:
+        serve = metrics["serve"]
+        lat = float(serve.metrics["latency_s"])
+        value = float(serve.value)
+        sla_met = True
+        if self.sla_s > 0 and lat > self.sla_s:
+            sla_met = False
+            value *= (self.sla_s / lat) ** self.penalty
+        kern = metrics.get("kernel")
+        kernel_speedup = 1.0
+        if kern is not None and self.kernel_ref:
+            kernel_speedup = self.kernel_ref / max(float(kern.value), 1e-12)
+            value *= kernel_speedup ** self.kernel_coupling
+        train = metrics.get("train")
+        train_tput = float(train.value) if train is not None else 0.0
+        value += self.train_weight * train_tput
+        return PerfMetric(
+            value=float(value), higher_is_better=True,
+            metrics={"serve_tput": float(serve.value),
+                     "latency_s": lat, "sla_met": bool(sla_met),
+                     "train_tput": train_tput,
+                     "kernel_speedup": float(kernel_speedup),
+                     "prefill_chunks": serve.metrics.get("prefill_chunks")})
+
+
+def make_live_cotune_sut(model_cfg, *, max_seq: int = 128,
+                         prompt_len: int = 32, gen_len: int = 8,
+                         n_requests: int = 8, max_slots: int = 8,
+                         train_seq: int = 32, train_batch: int = 8,
+                         warmup: int = 1, repeats: int = 3, seed: int = 0,
+                         sla_s: float = 0.0,
+                         train_weight: float = 0.25) -> CompositeSUT:
+    """Serve engine + train step + decode kernel as ONE live SUT.
+
+    Unlike ``make_cotune_sut`` (the analytic surrogate), every serve/train
+    test here wall-clocks the real system: the engine is rebuilt under the
+    candidate knobs and timed end to end, and the train step is re-jitted
+    and timed.  The kernel member stays the roofline model on CPU and
+    wall-clocks on real accelerator backends (``KernelSUT`` mode
+    auto-detect); its default-tiling cost is measured once up front as the
+    speedup reference the scalarizer couples through.
+    """
+    import jax
+
+    from repro.autotune.sut import KernelSUT
+    from repro.core.sut_jax import TrainStepSUT
+    from repro.models import Model
+
+    from .engine import ServeConfig
+
+    model = Model(model_cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    base = ServeConfig(max_seq=max_seq)
+    serve = LiveServeSUT(model, params, base=base, prompt_len=prompt_len,
+                         gen_len=gen_len, n_requests=n_requests,
+                         warmup=warmup, repeats=repeats, seed=seed,
+                         max_slots=max_slots)
+    train = TrainStepSUT(model_cfg, seq_len=train_seq,
+                         global_batch=train_batch, warmup=warmup,
+                         repeats=repeats, seed=seed)
+    default_batch = int(serve.space()["max_batch"].default)
+    dims = {"B": default_batch, "S": max_seq, "H": model_cfg.padded_heads,
+            "KV": model_cfg.n_kv_heads, "D": model_cfg.head_dim_}
+    kernel = KernelSUT("decode_attention", dims,
+                       dtype=model_cfg.compute_dtype)
+    kernel_ref = float(
+        kernel.test(kernel.space().default_config()).value)
+    return CompositeSUT(
+        {"serve": serve, "train": train, "kernel": kernel},
+        scalarize=LiveCotuneScalarizer(
+            sla_s=sla_s, train_weight=train_weight, kernel_ref=kernel_ref),
+        name="serve+train+kernel:live",
+    )
 
 
 def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:

@@ -1,5 +1,11 @@
-"""Training substrate: step factories, knobs, fault-tolerant loop."""
+"""Training substrate: step factories, knobs, fault-tolerant loop.
+
+The knob-space side (``repro.train.space``) is numpy-only — tuners that
+only need the space should import it directly and skip this package's
+eager jax imports.
+"""
 from .loop import SimulatedFailure, TrainLoopConfig, train
+from .space import apply_train_knobs, train_knob_space
 from .step import RunKnobs, init_train_state, make_serve_step, make_train_step
 
 __all__ = [n for n in dir() if not n.startswith("_")]

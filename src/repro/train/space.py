@@ -1,0 +1,64 @@
+"""Train-step knobs as an ACTS ``ParameterSpace``.
+
+The training runtime's execution knobs (``repro.train.step.RunKnobs``)
+exposed to the tuner stack: microbatch count, remat policy, the attention
+block pair, optimizer-state gradient compression.  This is the "train"
+member of the live co-tuning composite (``repro.serve.space.
+make_live_cotune_sut``) — the subset of ``RunKnobs`` that acts on a
+single-host measured train step, as opposed to the full dry-run knob space
+(``repro.core.sut_jax.knob_space``) whose sharding/mesh knobs only mean
+anything on the production mesh.
+
+Like ``repro.serve.space``, this module stays numpy-only — building the
+knob space must never pay the jax import.  ``apply_train_knobs`` (which
+produces a ``RunKnobs``) imports lazily.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.params import Config, EnumParam, ParameterSpace
+
+__all__ = ["train_knob_space", "apply_train_knobs"]
+
+
+def train_knob_space(max_microbatches: int = 8) -> ParameterSpace:
+    """The measured train step's tunable knobs (``RunKnobs`` fields).
+
+    ``max_microbatches`` is the workload's global batch: microbatch counts
+    must divide it, so only dividing powers of two up to it are offered.
+    ``attn_block_* = 0`` keeps the model-config default.
+    """
+    mb_choices = tuple(m for m in (1, 2, 4, 8, 16)
+                       if m <= max_microbatches and max_microbatches % m == 0)
+    return ParameterSpace([
+        # gradient-accumulation split of the global batch
+        EnumParam("microbatches", mb_choices, 1),
+        # activation rematerialization policy
+        EnumParam("remat", ("none", "full", "dots"), "none"),
+        # flash-attention tiling pair (0 = ModelConfig default)
+        EnumParam("attn_block_q", (0, 128, 256, 512), 0),
+        EnumParam("attn_block_kv", (0, 256, 512, 1024), 0),
+        # optimizer gradient compression (error-feedback variants)
+        EnumParam("compression", ("none", "int8", "topk"), "none"),
+    ])
+
+
+def apply_train_knobs(config: Config, base: Optional[Any] = None):
+    """Tuned train knobs -> a ``RunKnobs`` (lazy import: the tuning path
+    itself never needs jax).  ``base`` supplies the non-tuned fields; it
+    defaults to data-parallel single-host knobs, the measured-SUT setting.
+    """
+    import dataclasses
+
+    from repro.train.step import RunKnobs
+
+    base = base or RunKnobs(rules_preset="dp")
+    return dataclasses.replace(
+        base,
+        microbatches=int(config["microbatches"]),
+        remat=str(config["remat"]),
+        attn_block_q=int(config["attn_block_q"]),
+        attn_block_kv=int(config["attn_block_kv"]),
+        compression=str(config["compression"]),
+    )

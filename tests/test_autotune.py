@@ -344,6 +344,126 @@ class TestResolveBlocksErrorHandling:
             autotune.resolve_blocks("conv3d", {"B": 1}, "float32", {})
 
 
+class TestConcurrentWriters:
+    """Regression: two processes tuning into ONE cache file must not lose
+    entries.  Before the merge-on-save fix, each writer dumped its stale
+    in-memory view wholesale — writer B's put erased writer A's entry."""
+
+    @staticmethod
+    def _sig(rows):
+        return shape_sig({"ROWS": rows, "D": 32})
+
+    def test_interleaved_writers_keep_all_entries(self, tmp_cache):
+        a = AutotuneCache(tmp_cache)
+        b = AutotuneCache(tmp_cache)
+        # both load their (empty) in-memory views before either writes —
+        # the lost-update schedule
+        assert a.get("rmsnorm", self._sig(8), "float32", "cpu") is None
+        assert b.get("rmsnorm", self._sig(16), "float32", "cpu") is None
+        a.put("rmsnorm", self._sig(8), "float32", "cpu",
+              {"block_rows": 8}, 1.0)
+        b.put("rmsnorm", self._sig(16), "float32", "cpu",
+              {"block_rows": 16}, 2.0)  # b's view never saw a's entry
+        on_disk = json.load(open(tmp_cache))
+        assert len(on_disk) == 2
+        fresh = AutotuneCache(tmp_cache)
+        assert fresh.get_config("rmsnorm", self._sig(8), "float32",
+                                "cpu") == {"block_rows": 8}
+        assert fresh.get_config("rmsnorm", self._sig(16), "float32",
+                                "cpu") == {"block_rows": 16}
+
+    def test_many_interleavings_union(self, tmp_cache):
+        """N writers alternating puts: the file ends with all N*K keys."""
+        writers = [AutotuneCache(tmp_cache) for _ in range(3)]
+        for w in writers:  # load stale (empty) views up front
+            assert w.get("rmsnorm", self._sig(1), "float32", "cpu") is None
+        for k in range(4):
+            for i, w in enumerate(writers):
+                w.put("rmsnorm", self._sig(100 * (k + 1) + i), "float32",
+                      "cpu", {"block_rows": 8}, float(k))
+        assert len(json.load(open(tmp_cache))) == 12
+
+    def test_writers_see_merged_state_after_put(self, tmp_cache):
+        """After its own put, a writer's in-memory view includes entries
+        merged from disk — no reload needed to resolve them."""
+        a = AutotuneCache(tmp_cache)
+        b = AutotuneCache(tmp_cache)
+        assert b.get("rmsnorm", self._sig(8), "float32", "cpu") is None
+        a.put("rmsnorm", self._sig(8), "float32", "cpu",
+              {"block_rows": 8}, 1.0)
+        b.put("rmsnorm", self._sig(16), "float32", "cpu",
+              {"block_rows": 16}, 2.0)
+        # b merged a's entry during its save
+        assert b.get_config("rmsnorm", self._sig(8), "float32",
+                            "cpu") == {"block_rows": 8}
+
+    def test_stale_view_does_not_revert_other_writers_values(self,
+                                                             tmp_cache):
+        """Value-level lost update: writer A's stale in-memory copy of a
+        key another process re-tuned must NOT ride along when A writes an
+        unrelated key — only the keys a writer actually modified overlay
+        the file."""
+        a = AutotuneCache(tmp_cache)
+        a.put("rmsnorm", self._sig(8), "float32", "cpu",
+              {"block_rows": 8}, 1.0)  # a's view now holds the old entry
+        b = AutotuneCache(tmp_cache)
+        b.put("rmsnorm", self._sig(8), "float32", "cpu",
+              {"block_rows": 32}, 2.0)  # b re-tunes the SAME key
+        a.put("rmsnorm", self._sig(16), "float32", "cpu",
+              {"block_rows": 16}, 1.0)  # a writes something unrelated
+        fresh = AutotuneCache(tmp_cache)
+        assert fresh.get_config("rmsnorm", self._sig(8), "float32",
+                                "cpu") == {"block_rows": 32}  # b's survives
+
+    def test_merge_still_drops_stale_schemas(self, tmp_cache):
+        """Merge-on-save must not resurrect older-schema entries."""
+        stale_key = "flash_attention|B1|float32|cpu"  # v1 (unversioned)
+        with open(tmp_cache, "w") as f:
+            json.dump({stale_key: {"config": {}, "value": 1.0,
+                                   "meta": {}, "time": 0.0}}, f)
+        cache = AutotuneCache(tmp_cache)
+        cache.put("rmsnorm", self._sig(8), "float32", "cpu",
+                  {"block_rows": 8}, 1.0)
+        on_disk = json.load(open(tmp_cache))
+        assert stale_key not in on_disk
+        assert len(on_disk) == 1
+
+
+class TestTrainConfigCache:
+    """The live joint mode's train-step entry: persists + reloads alongside
+    kernel and serve-config entries in the same cache file."""
+
+    def test_put_and_reload(self, tmp_cache):
+        sig_dims = {"S": 32, "B": 8, "H": 4, "KV": 4, "D": 16}
+        knobs = {"microbatches": 2, "remat": "none", "attn_block_q": 0,
+                 "attn_block_kv": 0, "compression": "none"}
+        autotune.put_train_config(sig_dims, "float32", knobs, 1234.5)
+        assert autotune.cached_train_config(sig_dims, "float32") == knobs
+        # keyed by workload shape: a different microbatch seq misses
+        assert autotune.cached_train_config(dict(sig_dims, S=64),
+                                            "float32") is None
+        fresh = AutotuneCache(os.environ["REPRO_AUTOTUNE_CACHE"])
+        assert autotune.cached_train_config(sig_dims, "float32",
+                                            cache=fresh) == knobs
+
+    def test_three_system_entries_coexist(self, tmp_cache):
+        """Kernel + serve_engine + train_step winners in ONE file — what
+        --joint --real persists."""
+        autotune.default_cache().put(
+            "decode_attention", shape_sig({"B": 8, "S": 128, "H": 4,
+                                           "KV": 4, "D": 16}),
+            "float32", "cpu", {"block_kv": 128}, 100.0)
+        autotune.put_serve_config({"S": 128, "H": 4, "KV": 4, "D": 16},
+                                  "float32", {"max_batch": 8}, 100.0)
+        autotune.put_train_config({"S": 32, "B": 8, "H": 4, "KV": 4,
+                                   "D": 16}, "float32",
+                                  {"microbatches": 2}, 100.0)
+        on_disk = json.load(open(os.environ["REPRO_AUTOTUNE_CACHE"]))
+        systems = {k.split("|")[1] for k in on_disk}
+        assert systems == {"decode_attention", autotune.SERVE_SYSTEM,
+                           autotune.TRAIN_SYSTEM}
+
+
 class TestServeConfigCache:
     """The joint mode's serve-config entry: persists + reloads alongside
     kernel entries in the same cache file."""

@@ -1,0 +1,139 @@
+"""Property-based round-trips over randomly composed parameter spaces.
+
+The unit-hypercube contract every sampler/optimizer relies on, checked for
+arbitrary compositions (mixed parameter kinds, frozen views, composite
+prefixing) instead of the hand-picked spaces the unit tests use:
+
+* every config emitted from unit samples validates (stays in-domain),
+* ``to_unit_vector`` → ``from_unit_matrix`` is **idempotent**: one trip
+  through the cube canonicalizes a config, a second trip is exact,
+* the vectorized matrix path agrees with the scalar vector path row by row.
+
+Runs on the real ``hypothesis`` when installed, else the deterministic
+stub in ``tests/_hypothesis_stub.py`` (installed by conftest).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BoolParam,
+    CompositeSpace,
+    EnumParam,
+    FloatParam,
+    IntParam,
+    ParameterSpace,
+)
+
+MAX_EXAMPLES = 25
+
+
+def _random_param(rng, name):
+    kind = rng.integers(6)
+    if kind == 0:
+        return BoolParam(name, default=bool(rng.integers(2)))
+    if kind == 1:
+        n = int(rng.integers(2, 7))
+        choices = tuple(f"c{i}" for i in range(n))
+        return EnumParam(name, choices, choices[int(rng.integers(n))])
+    if kind == 2:
+        lo = int(rng.integers(-8, 8))
+        hi = lo + int(rng.integers(1, 100))
+        return IntParam(name, lo, hi, default=int(rng.integers(lo, hi + 1)))
+    if kind == 3:  # log-scale int (wide buffer-size-style range)
+        lo = int(rng.integers(1, 4))
+        hi = lo * int(rng.integers(2, 4096))
+        return IntParam(name, lo, hi, default=lo, log=True)
+    if kind == 4:
+        lo = float(rng.uniform(-10, 10))
+        hi = lo + float(rng.uniform(0.1, 100))
+        return FloatParam(name, lo, hi, default=lo)
+    lo = float(rng.uniform(1e-4, 1.0))
+    hi = lo * float(rng.uniform(10, 1e4))
+    return FloatParam(name, lo, hi, default=lo, log=True)
+
+
+def _random_space(rng, max_dim=6):
+    params = [_random_param(rng, f"p{i}")
+              for i in range(int(rng.integers(1, max_dim + 1)))]
+    space = ParameterSpace(params)
+    if rng.random() < 0.3 and space.dim > 1:
+        # freeze a random knob: the view must keep the contract too
+        victim = params[int(rng.integers(len(params)))]
+        space = space.freeze({victim.name: victim.default})
+    return space
+
+
+def _random_composite(rng):
+    n = int(rng.integers(1, 4))
+    return CompositeSpace(
+        {f"sys{i}": _random_space(rng) for i in range(n)})
+
+
+def _configs_equal(space, a, b):
+    for p in space:
+        va, vb = a[p.name], b[p.name]
+        if isinstance(p, FloatParam) or isinstance(va, float):
+            assert np.isclose(float(va), float(vb), rtol=1e-6, atol=1e-12), \
+                f"{p.name}: {va} != {vb}"
+        else:
+            assert va == vb, f"{p.name}: {va!r} != {vb!r}"
+
+
+def _check_roundtrip(space, rng):
+    m = 8
+    units = rng.random((m, space.dim))
+    configs = space.from_unit_matrix(units)
+    assert len(configs) == m
+    for i, cfg in enumerate(configs):
+        space.validate(cfg)  # in-domain
+        # matrix path == scalar path, row by row (floats may differ in the
+        # last ulp between the vectorized and scalar arithmetic)
+        _configs_equal(space, space.from_unit_vector(units[i]), cfg)
+    # one trip canonicalizes; the second trip is exact (idempotence)
+    back = np.stack([space.to_unit_vector(c) for c in configs]) \
+        if space.dim else np.zeros((m, 0))
+    again = space.from_unit_matrix(back)
+    for cfg, cfg2 in zip(configs, again):
+        _configs_equal(space, cfg, cfg2)
+
+
+class TestParameterSpaceRoundTrip:
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6))
+    def test_random_space_roundtrips(self, seed):
+        rng = np.random.default_rng(seed)
+        _check_roundtrip(_random_space(rng), rng)
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6))
+    def test_defaults_canonicalize(self, seed):
+        rng = np.random.default_rng(seed)
+        space = _random_space(rng)
+        cfg = space.default_config()
+        space.validate(cfg)
+        u = space.to_unit_vector(cfg)
+        assert u.shape == (space.dim,)
+        assert ((u >= 0) & (u < 1)).all()
+        _configs_equal(space, cfg, space.from_unit_vector(u))
+
+
+class TestCompositeSpaceRoundTrip:
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6))
+    def test_random_composite_roundtrips(self, seed):
+        rng = np.random.default_rng(seed)
+        _check_roundtrip(_random_composite(rng), rng)
+
+    @settings(max_examples=MAX_EXAMPLES, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6))
+    def test_split_join_inverse(self, seed):
+        rng = np.random.default_rng(seed)
+        space = _random_composite(rng)
+        cfg = space.from_unit_vector(rng.random(space.dim))
+        parts = space.split(cfg)
+        assert set(parts) == set(space.subspace_names)
+        for name, sub in parts.items():
+            space.subspace(name).validate(sub)
+        assert space.join(parts) == cfg

@@ -1,5 +1,6 @@
 """Integration: fault-tolerant training loop + batched serving engine."""
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -146,3 +147,169 @@ class TestServeEngine:
         res = eng.generate([[5, 6, 7]] * 4, max_new_tokens=4)
         assert res.decode_tokens_per_sec > 0
         assert res.prefill_seconds > 0
+
+
+class TestChunkedPrefill:
+    """Runtime chunked prefill: splitting the prompt into prefill_chunk
+    segments threaded through the KV cache must be value-exact vs
+    whole-prompt prefill — the knob moves *timing*, never tokens."""
+
+    # (prompt_len, prefill_chunk): dividing, non-dividing, chunk == prompt,
+    # chunk > prompt, and the degenerate one-token chunk
+    PAIRS = [(12, 4), (13, 5), (13, 4), (12, 12), (5, 64), (9, 1)]
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        model = Model(TINY)
+        params = model.init(jax.random.PRNGKey(0))
+        return model, params
+
+    def _prompts(self, plen, n=2):
+        rng = np.random.default_rng(plen)
+        return rng.integers(1, TINY.vocab_size, size=(n, plen)).tolist()
+
+    @pytest.mark.parametrize("plen,chunk", PAIRS)
+    def test_token_parity(self, engine, plen, chunk):
+        model, params = engine
+        assert model.supports_chunked_prefill
+        prompts = self._prompts(plen)
+        whole = ServeEngine(model, params, ServeConfig(
+            max_seq=64, batch_slots=2, prefill_chunk=2048))
+        chunked = ServeEngine(model, params, ServeConfig(
+            max_seq=64, batch_slots=2, prefill_chunk=chunk))
+        rw = whole.generate(prompts, max_new_tokens=6)
+        rc = chunked.generate(prompts, max_new_tokens=6)
+        assert rc.tokens == rw.tokens  # byte-identical continuations
+        expect = math.ceil(plen / chunk) if chunk < plen else 1
+        assert rc.prefill_chunks == expect  # the knob demonstrably acts
+        assert rw.prefill_chunks == 1
+
+    @pytest.mark.parametrize("plen,chunk", PAIRS)
+    def test_kv_cache_parity(self, engine, plen, chunk):
+        """Chunked and whole-prompt prefill leave identical KV caches and
+        last-token logits behind."""
+        model, params = engine
+        tok = jnp.asarray(self._prompts(plen), jnp.int32)
+        lg_w, cache_w = model.prefill(params, {"tokens": tok},
+                                      model.init_cache(2, max_seq=64))
+        cache_c = model.init_cache(2, max_seq=64)
+        for s in range(0, plen, chunk):
+            lg_c, cache_c = model.prefill_chunk(
+                params, {"tokens": tok[:, s:s + chunk]}, cache_c)
+        assert int(cache_w["index"]) == int(cache_c["index"]) == plen
+        np.testing.assert_allclose(np.asarray(lg_w), np.asarray(lg_c),
+                                   rtol=1e-5, atol=1e-6)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+            cache_w["blocks"], cache_c["blocks"])
+
+    def test_decode_continues_from_chunked_cache(self, engine):
+        """Greedy decode from a chunk-built cache matches the stepwise
+        full-forward oracle (chunking is invisible downstream)."""
+        model, params = engine
+        prompt = [3, 1, 4, 1, 5, 9, 2]
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=1, prefill_chunk=3))
+        res = eng.generate([prompt], max_new_tokens=4)
+        seq = list(prompt)
+        for _ in range(4):
+            batch = {"tokens": jnp.asarray([seq], jnp.int32)}
+            hidden, _ = model.forward(params, batch)
+            logits = model._logits(params, hidden)[0, -1, :TINY.vocab_size]
+            seq.append(int(jnp.argmax(logits)))
+        assert seq[len(prompt):] == res.tokens[0]
+
+    def test_live_serve_sut_measures_real_engine(self):
+        """LiveServeSUT: a test builds the real engine under the candidate
+        knobs and wall-clocks it — metrics carry the chunk count, so a
+        tuned prefill_chunk is visible in the provenance."""
+        from repro.serve.space import LiveServeSUT
+
+        model = Model(TINY)
+        params = model.init(jax.random.PRNGKey(0))
+        sut = LiveServeSUT(model, params,
+                           base=ServeConfig(max_seq=32),
+                           prompt_len=9, gen_len=4, n_requests=2,
+                           warmup=1, repeats=1, max_slots=2)
+        space = sut.space()
+        cfg = space.default_config()
+        cfg["prefill_chunk"] = 4  # non-dividing: 9 tokens -> 3 chunks
+        cfg["max_batch"] = 2
+        m = sut.test(cfg)
+        assert m.higher_is_better and m.value > 0
+        assert m.metrics["latency_s"] > 0
+        assert m.metrics["prefill_chunks"] == 3
+        assert m.metrics["prefill_s"] > 0
+
+    def test_train_step_sut_measures_real_step(self):
+        """TrainStepSUT: re-jits the real train step under the knobs and
+        wall-clocks the microbatch loop (median-of-repeats timing)."""
+        from repro.core.sut_jax import TrainStepSUT
+
+        sut = TrainStepSUT(TINY, seq_len=16, global_batch=4, steps=1,
+                           warmup=1, repeats=1)
+        space = sut.space()
+        cfg = space.default_config()
+        cfg["microbatches"] = 2
+        m = sut.test(cfg)
+        assert m.higher_is_better and m.value > 0
+        assert m.metrics["step_seconds"] > 0
+        assert np.isfinite(m.metrics["loss"])
+
+    def test_unsupported_stack_falls_back_to_whole_prefill(self):
+        """Models whose blocks cannot append multi-token segments exactly
+        (recurrent mixers) prefill whole prompts regardless of the knob."""
+        cfg = reduced(get_config("zamba2-1.2b"))
+        model = Model(cfg)
+        assert not model.supports_chunked_prefill
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=1, prefill_chunk=2))
+        res = eng.generate([[1, 2, 3, 4, 5]], max_new_tokens=2)
+        assert res.prefill_chunks == 1  # one whole-prompt dispatch
+        assert len(res.tokens[0]) == 2
+
+    def test_frontend_model_chunked_parity_and_validation(self):
+        """Frontend/encoder models: generate() without embeds fails loudly
+        on BOTH prefill paths (the chunked path would otherwise silently
+        attend to zero memory), and with embeds the first chunk carries
+        them so chunked == whole-prompt tokens."""
+        cfg = reduced(get_config("llama-3.2-vision-90b"))
+        model = Model(cfg)
+        assert model.supports_chunked_prefill
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(1, cfg.vocab_size, size=(2, 9)).tolist()
+        fe = rng.normal(size=(2, cfg.frontend_tokens,
+                              cfg.frontend_dim)).astype(np.float32)
+        chunked = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=2, prefill_chunk=4))
+        with pytest.raises(ValueError, match="frontend"):
+            chunked.generate(prompts, max_new_tokens=2)
+        whole = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=2, prefill_chunk=2048))
+        with pytest.raises(ValueError, match="frontend"):
+            whole.generate(prompts, max_new_tokens=2)
+        rw = whole.generate(prompts, max_new_tokens=3, frontend_embeds=fe)
+        rc = chunked.generate(prompts, max_new_tokens=3,
+                              frontend_embeds=fe)
+        assert rc.tokens == rw.tokens
+        assert rc.prefill_chunks == 3  # ceil(9 / 4)
+
+    def test_capacity_bound_moe_is_not_chunkable(self):
+        """Capacity-bound MoE routing drops tokens per routing GROUP, and
+        the grouping differs between whole-prompt and per-chunk prefill —
+        chunking such a stack would change generated tokens, so the gate
+        must refuse it.  Drop-free capacity (cf*K >= E, what ``reduced``
+        configs use) keeps MoE chunk-exact and allowed."""
+        base = reduced(get_config("grok-1-314b"))
+        assert base.moe is not None
+        # reduced() picks drop-free capacity: chunking is exact -> allowed
+        assert (base.moe.capacity_factor * base.moe.experts_per_token
+                >= base.moe.n_experts)
+        assert Model(base).supports_chunked_prefill
+        # a production-style capacity factor (tokens get dropped) -> gated
+        bound = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, capacity_factor=1.0))
+        assert not Model(bound).supports_chunked_prefill
