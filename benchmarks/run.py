@@ -12,6 +12,7 @@
   tune_real        §4          measured ACTS on the live JAX runtime
   kernel_bench     kernels     Pallas kernels vs jnp oracles
   cotune_bench     §2.1/§5.5   joint vs independent co-deployment tuning
+  serve_bench      serving     continuous-batching + paged KV vs wave loop
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only mysql_11x``
@@ -34,6 +35,7 @@ MODULES = [
     "tune_real",
     "kernel_bench",
     "cotune_bench",
+    "serve_bench",
 ]
 
 

@@ -1,0 +1,222 @@
+"""Continuous-batching serve benchmark: continuous (paged) vs wave.
+
+Mixed-length heavy-traffic workload — varied prompt AND generation
+lengths, more requests than decode slots — on the reduced surrogate model
+(CPU).  The wave runtime must bucket requests by prompt length and holds
+every slot until its wave's longest generation finishes; the continuous
+runtime admits pending requests into freed slots mid-generation under the
+tuned schedule, backed by the paged KV allocator.  Decode tokens/sec is
+the headline (slot occupancy is what continuous batching buys); p50/p95
+per-request latency rides along, as does the schedule-parity check (the
+tokens each request gets must be bit-identical across fifo/sjf/interleave
+and vs the wave baseline).
+
+``BENCH_serve.json`` is the cross-PR perf artifact; ``--check`` exits
+non-zero if continuous+paged underperforms wave at equal engine config —
+wired into CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from types import SimpleNamespace
+from typing import Any, Dict, List
+
+import numpy as np
+
+from .common import Row
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+N_REQUESTS = 24
+SLOTS = 4
+MAX_SEQ = 48
+PREFILL_CHUNK = 8
+SEED = 0
+
+
+def _tiny_model():
+    import jax
+
+    from repro.configs import ModelConfig
+    from repro.models import Model
+
+    cfg = ModelConfig(
+        name="tiny-serve-bench", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(SEED))
+
+
+def _workload(seed: int = SEED):
+    rng = np.random.default_rng(seed)
+    plens = rng.integers(3, 25, size=N_REQUESTS)
+    gens = rng.integers(2, 17, size=N_REQUESTS)
+    prompts = [rng.integers(1, 512, size=n).tolist() for n in plens]
+    return prompts, [int(g) for g in gens]
+
+
+def _engine(model, params, runtime: str, layout: str, schedule: str):
+    from repro.serve import ServeConfig, ServeEngine
+
+    return ServeEngine(model, params, ServeConfig(
+        max_seq=MAX_SEQ, batch_slots=SLOTS, prefill_chunk=PREFILL_CHUNK,
+        runtime=runtime, kv_layout=layout, schedule=schedule))
+
+
+def _run_continuous(model, params, layout: str, schedule: str,
+                    prompts, gens) -> Dict[str, Any]:
+    eng = _engine(model, params, "continuous", layout, schedule)
+    eng.generate(prompts, gens)  # warmup: absorb jit specialization
+    t0 = time.time()
+    res = eng.generate(prompts, gens)
+    wall = time.time() - t0
+    return _arm_stats(res.tokens, res, wall,
+                      [r["latency_s"] for r in res.per_request])
+
+
+def _run_wave(model, params, prompts, gens) -> Dict[str, Any]:
+    """The wave baseline on a mixed workload: bucket by prompt length
+    (its equal-length contract), run buckets back to back; per-request
+    latency counts the time until the request's bucket completed."""
+    eng = _engine(model, params, "wave", "dense", "fifo")
+    buckets: Dict[int, List[int]] = {}
+    for i, p in enumerate(prompts):
+        buckets.setdefault(len(p), []).append(i)
+
+    def run_all():
+        toks: List[Any] = [None] * len(prompts)
+        lats: List[float] = [0.0] * len(prompts)
+        pf = dc = 0.0
+        steps = 0
+        t0 = time.time()
+        for _, idxs in sorted(buckets.items()):
+            res = eng.generate([prompts[i] for i in idxs],
+                               [gens[i] for i in idxs])
+            done = time.time() - t0
+            for j, i in enumerate(idxs):
+                toks[i] = res.tokens[j]
+                lats[i] = done  # bucket-completion latency
+            pf += res.prefill_seconds
+            dc += res.decode_seconds
+            steps += res.steps
+        return toks, lats, pf, dc, steps, time.time() - t0
+
+    run_all()  # warmup
+    toks, lats, pf, dc, steps, wall = run_all()
+    shim = SimpleNamespace(prefill_seconds=pf, decode_seconds=dc,
+                           steps=steps)
+    return _arm_stats(toks, shim, wall, lats)
+
+
+def _arm_stats(tokens, res, wall: float, lats: List[float]) -> Dict[str, Any]:
+    n_tok = sum(len(t) for t in tokens)
+    return {
+        "tokens": tokens,
+        "generated": n_tok,
+        "decode_s": float(res.decode_seconds),
+        "prefill_s": float(res.prefill_seconds),
+        "decode_tok_per_s": n_tok / max(res.decode_seconds, 1e-9),
+        "wall_s": float(wall),
+        "wall_tok_per_s": n_tok / max(wall, 1e-9),
+        "steps": int(res.steps),
+        "occupancy": n_tok / max(res.steps * SLOTS, 1),
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p95_latency_s": float(np.percentile(lats, 95)),
+    }
+
+
+def bench() -> Dict[str, Any]:
+    model, params = _tiny_model()
+    prompts, gens = _workload()
+
+    arms: Dict[str, Dict[str, Any]] = {}
+    arms["wave_fifo"] = _run_wave(model, params, prompts, gens)
+    for sched in ("fifo", "sjf", "interleave"):
+        arms[f"continuous_paged_{sched}"] = _run_continuous(
+            model, params, "paged", sched, prompts, gens)
+    arms["continuous_dense_fifo"] = _run_continuous(
+        model, params, "dense", "fifo", prompts, gens)
+
+    # schedule/layout/runtime parity: identical per-request tokens
+    ref = arms["wave_fifo"]["tokens"]
+    parity = all(arms[a]["tokens"] == ref for a in arms)
+
+    headline = arms["continuous_paged_fifo"]
+    baseline = arms["wave_fifo"]
+    out = {
+        "workload": {"n_requests": N_REQUESTS, "slots": SLOTS,
+                     "max_seq": MAX_SEQ, "prefill_chunk": PREFILL_CHUNK,
+                     "prompt_lens": [len(p) for p in prompts],
+                     "gen_lens": gens, "seed": SEED},
+        "arms": {a: {k: v for k, v in s.items() if k != "tokens"}
+                 for a, s in arms.items()},
+        "token_parity": bool(parity),
+        "continuous_over_wave_decode": (headline["decode_tok_per_s"]
+                                        / baseline["decode_tok_per_s"]),
+        "continuous_over_wave_wall": (headline["wall_tok_per_s"]
+                                      / baseline["wall_tok_per_s"]),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    return out
+
+
+def rows_from(result: Dict[str, Any]) -> List[Row]:
+    arms = result["arms"]
+    rows: List[Row] = []
+    for a in ("wave_fifo", "continuous_paged_fifo", "continuous_paged_sjf",
+              "continuous_paged_interleave", "continuous_dense_fifo"):
+        s = arms[a]
+        rows.append((f"serve_{a}", 0.0,
+                     f"{s['decode_tok_per_s']:.0f} tok/s "
+                     f"p50={s['p50_latency_s']:.3f}s "
+                     f"p95={s['p95_latency_s']:.3f}s "
+                     f"occ={s['occupancy']:.2f}"))
+    rows.append(("serve_continuous_over_wave", 0.0,
+                 f"{result['continuous_over_wave_decode']:.2f}x decode "
+                 f"({result['continuous_over_wave_wall']:.2f}x wall)"))
+    rows.append(("serve_token_parity", 0.0,
+                 "ok" if result["token_parity"] else "MISMATCH"))
+    return rows
+
+
+def run() -> List[Row]:
+    """benchmarks.run entry point."""
+    return rows_from(bench())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if continuous+paged underperforms "
+                         "the wave baseline, or token parity breaks")
+    args = ap.parse_args(argv)
+    result = bench()
+    for name, _, derived in rows_from(result):
+        print(f"{name},{derived}")
+    print(f"wrote {JSON_PATH}")
+    if args.check:
+        if not result["token_parity"]:
+            print("CHECK FAILED: per-request tokens differ across "
+                  "runtimes/schedules", file=sys.stderr)
+            return 1
+        ratio = result["continuous_over_wave_decode"]
+        if ratio < 1.0:
+            print(f"CHECK FAILED: continuous+paged decode throughput "
+                  f"{ratio:.2f}x the wave baseline (< 1.0x)",
+                  file=sys.stderr)
+            return 1
+        print(f"check OK: continuous+paged = {ratio:.2f}x wave decode "
+              "throughput, token parity holds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

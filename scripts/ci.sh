@@ -17,9 +17,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
-# Post-PR3 baseline: CI fails if the collected count ever drops below it
+# Post-PR4 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=373
+MIN_COLLECTED=414
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -74,5 +74,46 @@ EOF
 
 echo "=== check: joint >= independent tuning at equal budget ==="
 timeout 120 python -m benchmarks.cotune_bench --check
+
+echo "=== smoke: continuous batching (3 schedules x paged+dense, ~30s) ==="
+# Mixed-length workload through the REAL continuous engine under every
+# schedule and both KV layouts; per-request tokens must be identical
+# everywhere (the schedule knob moves timing, never content) and the
+# paged allocator must end balanced.
+timeout 120 python - <<'EOF'
+import jax, numpy as np
+from repro.configs import ModelConfig
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = ModelConfig(
+    name="ci-tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", vocab_pad_multiple=64,
+    rope_theta=10_000.0)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, 512, size=n).tolist()
+           for n in rng.integers(2, 20, size=10)]
+gens = [int(g) for g in rng.integers(1, 9, size=10)]
+ref = None
+for layout in ("paged", "dense"):
+    for sched in ("fifo", "sjf", "interleave"):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=3, runtime="continuous",
+            kv_layout=layout, schedule=sched, prefill_chunk=4))
+        res = eng.generate(prompts, gens)
+        if ref is None:
+            ref = res.tokens
+        assert res.tokens == ref, f"{layout}/{sched} diverged"
+        if layout == "paged":
+            assert eng.last_alloc.groups_in_use == 0, "page leak"
+            eng.last_alloc.check_balanced()
+print("continuous smoke OK (6 runtime combos, identical tokens, no leaks)")
+EOF
+
+echo "=== check: continuous+paged >= wave at equal engine config ==="
+timeout 300 python -m benchmarks.serve_bench --check
 
 echo "CI OK"

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,19 +51,60 @@ def _align_penalty(block: int, dtype: str) -> float:
     return padded / max(block, 1)
 
 
+def _dispatch_s(config: Dict[str, Any], n_steps: float,
+                tile_elems: float) -> float:
+    """Grid-scheduling time under the shared launch knobs.
+
+    ``dim_semantics``: marking the non-reduction grid dims "parallel"
+    lets Mosaic split them across the two TPU cores (megacore), halving
+    the serialized step count.  ``num_warps`` is the GPU-lowering
+    occupancy hint: more warps amortize per-step dispatch ~sqrt(n) but
+    pay linear scheduling overhead, and a tile too small to feed them
+    (``tile_elems``) caps the effective count — so the optimum co-moves
+    with the block-size knobs instead of saturating at the rail.
+    """
+    steps = n_steps
+    if config.get("dim_semantics", "arbitrary") == "parallel":
+        steps = n_steps / 2.0
+    nw = int(config.get("num_warps", 4))
+    eff = min(nw, max(1.0, tile_elems / 2048.0))
+    per_step = GRID_STEP_OVERHEAD_S * (1.0 + 0.08 * nw) / math.sqrt(eff)
+    return steps * per_step
+
+
 def _roofline_s(flops: float, hbm_bytes: float, n_steps: float,
-                vmem_bytes: float) -> float:
+                vmem_bytes: float, config: Optional[Dict[str, Any]] = None,
+                tile_elems: float = 0.0) -> float:
     if vmem_bytes > VMEM_BYTES:
         return math.inf  # tile set does not fit on-chip
     compute = flops / MXU_FLOPS_PER_S
     stream = hbm_bytes / HBM_BYTES_PER_S
-    return max(compute, stream) + n_steps * GRID_STEP_OVERHEAD_S
+    if config is None:
+        dispatch = n_steps * GRID_STEP_OVERHEAD_S
+    else:
+        dispatch = _dispatch_s(config, n_steps, tile_elems)
+    return max(compute, stream) + dispatch
 
 
 # ---------------------------------------------------------------------------
 # per-kernel definitions
 # ---------------------------------------------------------------------------
 _POW2_BLOCKS = (16, 32, 64, 128, 256, 512)
+
+# Shared launch knobs (ROADMAP PR-1 open item): every kernel space carries
+# the Mosaic grid dimension-semantics choice, threaded to every kernel's
+# ``pltpu.TPUCompilerParams`` and through the cost model's ``_dispatch_s``
+# term, so ACTS tunes it jointly with the block sizes.  The GPU num_warps
+# occupancy hint is *plumbed* (every kernel and ``_dispatch_s`` accept
+# it) but joins a tune space only on backends whose lowering consumes it
+# — none today: on TPU it is inert, and an inert axis in ``mode="time"``
+# would spend wall-clock budget re-measuring identical kernels.
+def _with_launch_knobs(params: list, warps: bool = False) -> ParameterSpace:
+    params = params + [EnumParam("dim_semantics",
+                                 ("arbitrary", "parallel"), "parallel")]
+    if warps:
+        params.append(EnumParam("num_warps", (2, 4, 8), 4))
+    return ParameterSpace(params)
 
 
 @dataclass(frozen=True)
@@ -87,7 +128,7 @@ def _rand(rng, shape, dtype):
 
 # -- flash attention ---------------------------------------------------------
 def _fa_space() -> ParameterSpace:
-    return ParameterSpace([
+    return _with_launch_knobs([
         EnumParam("block_q", _POW2_BLOCKS, 128),
         EnumParam("block_kv", _POW2_BLOCKS, 128),
     ])
@@ -98,6 +139,13 @@ def _fa_inputs(d, dtype, rng):
     k = _rand(rng, (d["B"], d["SK"], d["KV"], d["D"]), dtype)
     v = _rand(rng, (d["B"], d["SK"], d["KV"], d["D"]), dtype)
     return q, k, v
+
+
+def _launch_kw(config) -> Dict[str, Any]:
+    """The shared launch knobs, passed through to every kernel call so
+    ``mode="time"`` wall-clocks what the knobs actually change on TPU."""
+    return {"dimension_semantics": config.get("dim_semantics"),
+            "num_warps": config.get("num_warps")}
 
 
 def _fa_call(inputs, config, interpret):
@@ -114,7 +162,8 @@ def _fa_call(inputs, config, interpret):
                                   q_offset=q_offset,
                                   block_q=config["block_q"],
                                   block_kv=config["block_kv"],
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  **_launch_kw(config))
 
 
 def _fa_cost(config, d, dtype):
@@ -137,12 +186,12 @@ def _fa_cost(config, d, dtype):
            + 2.0 * live * bk * D * ib        # streamed k/v tiles
            + B * H * S * D * ib)             # output (S query rows)
     vmem = (bq * D + 2 * bk * D) * ib + bq * (2 + D) * 4
-    return _roofline_s(flops, hbm, n_steps, vmem)
+    return _roofline_s(flops, hbm, n_steps, vmem, config, bq * bk)
 
 
 # -- decode attention --------------------------------------------------------
 def _fd_space() -> ParameterSpace:
-    return ParameterSpace([
+    return _with_launch_knobs([
         EnumParam("block_kv", (32, 64, 128, 256, 512, 1024), 256),
     ])
 
@@ -160,7 +209,8 @@ def _fd_call(inputs, config, interpret):
     q, k, v, kv_len = inputs
     return flash_decode_pallas(q, k, v, kv_len,
                                block_kv=config["block_kv"],
-                               interpret=interpret)
+                               interpret=interpret,
+                               **_launch_kw(config))
 
 
 def _fd_cost(config, d, dtype):
@@ -173,12 +223,12 @@ def _fd_cost(config, d, dtype):
     flops = n_steps * 4.0 * G * bk * D * _align_penalty(bk, dtype)
     hbm = 2.0 * B * KV * nk * bk * D * ib  # stream the cache once
     vmem = 2 * bk * D * ib + G * (2 + D) * 4 + G * D * ib
-    return _roofline_s(flops, hbm, n_steps, vmem)
+    return _roofline_s(flops, hbm, n_steps, vmem, config, bk * D)
 
 
 # -- gated linear attention --------------------------------------------------
 def _gla_space() -> ParameterSpace:
-    return ParameterSpace([
+    return _with_launch_knobs([
         EnumParam("chunk", (16, 32, 64, 128, 256), 128),
     ])
 
@@ -199,7 +249,7 @@ def _gla_call(inputs, config, interpret):
 
     q, k, v, g = inputs
     return gla_pallas(q, k, v, g, chunk=config["chunk"],
-                      interpret=interpret)[0]
+                      interpret=interpret, **_launch_kw(config))[0]
 
 
 def _gla_cost(config, d, dtype):
@@ -214,12 +264,12 @@ def _gla_cost(config, d, dtype):
                        + 4.0 * L * DK * DV) * pad
     hbm = n_steps * L * (2 * DK + 2 * DV + 1) * ib
     vmem = (L * (2 * DK + 2 * DV) + L) * ib + DK * DV * 4 + L * L * 4
-    return _roofline_s(flops, hbm, n_steps, vmem)
+    return _roofline_s(flops, hbm, n_steps, vmem, config, L * L)
 
 
 # -- rmsnorm -----------------------------------------------------------------
 def _rn_space() -> ParameterSpace:
-    return ParameterSpace([
+    return _with_launch_knobs([
         EnumParam("block_rows", (8, 16, 32, 64, 128, 256, 512, 1024), 256),
     ])
 
@@ -237,7 +287,7 @@ def _rn_call(inputs, config, interpret):
 
     x, s = inputs
     return rmsnorm_pallas(x, s, block_rows=config["block_rows"],
-                          interpret=interpret)
+                          interpret=interpret, **_launch_kw(config))
 
 
 def _rn_cost(config, d, dtype):
@@ -250,7 +300,70 @@ def _rn_cost(config, d, dtype):
     hbm = 2.0 * rows * D * ib + n * D * 4
     vmem = 2 * br * D * max(ib, 4) + D * 4
     # rmsnorm is pure VPU: scale compute down to VPU throughput (~1/8 MXU)
-    return _roofline_s(flops * 8.0, hbm, n, vmem)
+    return _roofline_s(flops * 8.0, hbm, n, vmem, config, br * D)
+
+
+# -- paged decode attention --------------------------------------------------
+# the authoritative page granularity (serve/paging.py is numpy-only, so
+# this import stays cheap and the two can never drift)
+from repro.serve.paging import PAGE_TOKENS  # noqa: E402
+
+
+def _pa_space() -> ParameterSpace:
+    # pages_per_block is the pool-layout granularity: tokens streamed per
+    # grid step = pages_per_block * PAGE_TOKENS.  The serve engine's paged
+    # allocator adopts the tuned value as its group size, so the knob
+    # couples kernel tiling with allocator fragmentation.
+    return _with_launch_knobs([
+        EnumParam("pages_per_block", (1, 2, 4, 8, 16, 32), 4),
+    ])
+
+
+def _pa_inputs(d, dtype, rng):
+    # Dense K/V + lengths; the call adapter lays the pool out at the
+    # candidate pages_per_block (layout is part of the config under test).
+    q = _rand(rng, (d["B"], d["H"], d["D"]), dtype)
+    k = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    v = _rand(rng, (d["B"], d["S"], d["KV"], d["D"]), dtype)
+    return q, k, v, d["S"]
+
+
+def _pa_call(inputs, config, interpret):
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import paged_flash_decode_pallas
+
+    q, k, v, kv_len = inputs
+    B, S, KV, D = k.shape
+    T = int(config["pages_per_block"]) * PAGE_TOKENS
+    pad = (-S) % T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    maxg = k.shape[1] // T
+    k_pages = k.reshape(B * maxg, T, KV, D)
+    v_pages = v.reshape(B * maxg, T, KV, D)
+    pt = jnp.arange(B * maxg, dtype=jnp.int32).reshape(B, maxg)
+    lengths = jnp.full((B,), kv_len, jnp.int32)
+    return paged_flash_decode_pallas(
+        q, k_pages, v_pages, pt, lengths,
+        dimension_semantics=config.get("dim_semantics"),
+        num_warps=config.get("num_warps"), interpret=interpret)
+
+
+def _pa_cost(config, d, dtype):
+    B, S, H, KV, D = d["B"], d["S"], d["H"], d["KV"], d["D"]
+    G = max(H // KV, 1)
+    T = min(int(config["pages_per_block"]) * PAGE_TOKENS, S)
+    ng = math.ceil(S / T)
+    n_steps = B * KV * ng
+    ib = _dtype_bytes(dtype)
+    flops = n_steps * 4.0 * G * T * D * _align_penalty(T, dtype)
+    # stream the pool once + the page-table walk (one SMEM-indexed DMA
+    # program per group — small but real, and it shrinks as T grows)
+    hbm = 2.0 * B * KV * ng * T * D * ib + n_steps * 64.0
+    vmem = 2 * T * D * ib + G * (2 + D) * 4 + G * D * ib
+    return _roofline_s(flops, hbm, n_steps, vmem, config, T * D)
 
 
 KERNELS: Dict[str, KernelDef] = {
@@ -259,16 +372,23 @@ KERNELS: Dict[str, KernelDef] = {
     # separate autotune entries.
     "flash_attention": KernelDef(
         "flash_attention", ("B", "S", "SK", "H", "KV", "D"),
-        ("block_q", "block_kv"),
+        ("block_q", "block_kv", "dim_semantics"),
         _fa_space, _fa_inputs, _fa_call, _fa_cost),
     "decode_attention": KernelDef(
-        "decode_attention", ("B", "S", "H", "KV", "D"), ("block_kv",),
+        "decode_attention", ("B", "S", "H", "KV", "D"),
+        ("block_kv", "dim_semantics"),
         _fd_space, _fd_inputs, _fd_call, _fd_cost),
+    "paged_attention": KernelDef(
+        "paged_attention", ("B", "S", "H", "KV", "D"),
+        ("pages_per_block", "dim_semantics"),
+        _pa_space, _pa_inputs, _pa_call, _pa_cost),
     "gla": KernelDef(
-        "gla", ("B", "S", "H", "DK", "DV"), ("chunk",),
+        "gla", ("B", "S", "H", "DK", "DV"),
+        ("chunk", "dim_semantics"),
         _gla_space, _gla_inputs, _gla_call, _gla_cost),
     "rmsnorm": KernelDef(
-        "rmsnorm", ("ROWS", "D"), ("block_rows",),
+        "rmsnorm", ("ROWS", "D"),
+        ("block_rows", "dim_semantics"),
         _rn_space, _rn_inputs, _rn_call, _rn_cost),
 }
 

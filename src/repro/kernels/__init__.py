@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the compute hot spots (flash attention, fused
-RMSNorm, chunked gated linear attention), each with a pure-jnp oracle in
-``ref.py`` and a jit'd wrapper in ``ops.py``."""
+RMSNorm, chunked gated linear attention, paged decode attention), each
+with a pure-jnp oracle in ``ref.py``/its module and a jit'd wrapper in
+``ops.py``."""
 from . import ops, ref
 from .decode_attention import flash_decode_pallas
 from .flash_attention import flash_attention_pallas
 from .gla import gla_pallas
+from .paged_attention import paged_attention_ref, paged_flash_decode_pallas
 from .rmsnorm import rmsnorm_pallas
 
 __all__ = ["ops", "ref", "flash_attention_pallas", "flash_decode_pallas",
-           "gla_pallas", "rmsnorm_pallas"]
+           "gla_pallas", "paged_attention_ref",
+           "paged_flash_decode_pallas", "rmsnorm_pallas"]

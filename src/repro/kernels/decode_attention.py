@@ -16,11 +16,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .launch import launch_params
 
 __all__ = ["flash_decode_pallas"]
 
@@ -72,6 +75,8 @@ def flash_decode_pallas(
     kv_len: jax.Array,  # scalar int32: valid cache entries
     *,
     block_kv: int = 256,
+    dimension_semantics: Optional[str] = None,
+    num_warps: Optional[int] = None,  # GPU-lowering hint; inert on TPU
     interpret: bool = False,
 ) -> jax.Array:
     B, H, D = q.shape
@@ -88,10 +93,14 @@ def flash_decode_pallas(
     qg = q.reshape(B, KV, G, D)
     kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
 
+    # the kv-block dim carries the online-softmax scratch; B/KV parallel
+    params = launch_params(dimension_semantics, 3, 1, interpret)
+    del num_warps
     out = pl.pallas_call(
         functools.partial(_kernel, block_kv=block_kv,
                           scale=1.0 / math.sqrt(D)),
         grid=(B, KV, nk),
+        **({"compiler_params": params} if params else {}),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_len scalar
             pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),

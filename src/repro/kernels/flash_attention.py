@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .launch import launch_params
+
 __all__ = ["flash_attention_pallas"]
 
 NEG_INF = -1e30
@@ -96,6 +98,8 @@ def flash_attention_pallas(
     q_offset: int = 0,
     block_q: int = 128,
     block_kv: int = 128,
+    dimension_semantics: Optional[str] = None,
+    num_warps: Optional[int] = None,  # GPU-lowering hint; inert on TPU
     interpret: bool = False,
 ) -> jax.Array:
     B, Sq, H, D = q.shape
@@ -121,9 +125,13 @@ def flash_attention_pallas(
         causal=causal, window=window, q_offset=q_offset,
         scale=1.0 / math.sqrt(D))
 
+    # the kv dim carries the online-softmax scratch; B/H/q-tiles parallel
+    params = launch_params(dimension_semantics, 4, 1, interpret)
+    del num_warps
     out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
+        **({"compiler_params": params} if params else {}),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, D),
                          lambda b, h, iq, ik: (b, iq, h, 0)),

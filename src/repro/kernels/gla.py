@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .launch import launch_params
+
 __all__ = ["gla_pallas"]
 
 
@@ -82,6 +84,8 @@ def gla_pallas(
     v: jax.Array,  # (B, S, H, dv)
     log_g: jax.Array,  # (B, S, H)
     chunk: int = 128,
+    dimension_semantics: Optional[str] = None,
+    num_warps: Optional[int] = None,  # GPU-lowering hint; inert on TPU
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (y, final_state (B,H,dk,dv) f32). Zero initial state."""
@@ -97,9 +101,13 @@ def gla_pallas(
         log_g = jnp.pad(log_g, ((0, 0), (0, pad), (0, 0)))
     nc = q.shape[1] // chunk
 
+    # the chunk dim carries the recurrent state scratch; B/H parallel
+    params = launch_params(dimension_semantics, 3, 1, interpret)
+    del num_warps
     y, state = pl.pallas_call(
         functools.partial(_kernel, chunk=chunk, seq=S),
         grid=(B, H, nc),
+        **({"compiler_params": params} if params else {}),
         in_specs=[
             pl.BlockSpec((1, chunk, 1, dk), lambda b, h, ic: (b, ic, h, 0)),
             pl.BlockSpec((1, chunk, 1, dk), lambda b, h, ic: (b, ic, h, 0)),

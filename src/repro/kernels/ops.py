@@ -23,16 +23,27 @@ import jax
 from .decode_attention import flash_decode_pallas
 from .flash_attention import flash_attention_pallas
 from .gla import gla_pallas
+from .paged_attention import paged_flash_decode_pallas
 from .rmsnorm import rmsnorm_pallas
 
-__all__ = ["flash_attention", "flash_decode", "rmsnorm", "gla",
-           "default_interpret", "DEFAULT_BLOCKS"]
+__all__ = ["flash_attention", "flash_decode", "paged_flash_decode",
+           "rmsnorm", "gla", "default_interpret", "DEFAULT_BLOCKS"]
 
-DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
-    "flash_attention": {"block_q": 128, "block_kv": 128},
-    "decode_attention": {"block_kv": 256},
-    "gla": {"chunk": 128},
-    "rmsnorm": {"block_rows": 256},
+# dim_semantics rides with every kernel's resolvable args so a tuned
+# winner (block sizes co-selected WITH its grid semantics) deploys as
+# measured; num_warps is TPU-inert, so only the paged kernel carries it
+# (GPU-lowering signature parity).
+DEFAULT_BLOCKS: Dict[str, Dict[str, Any]] = {
+    "flash_attention": {"block_q": 128, "block_kv": 128,
+                        "dim_semantics": "parallel"},
+    "decode_attention": {"block_kv": 256, "dim_semantics": "parallel"},
+    # pages_per_block is resolved by the ENGINE when it lays the pool out
+    # (the allocator group size IS the kernel tile); the launch knobs are
+    # resolved here at call time like any other block arg.
+    "paged_attention": {"pages_per_block": 4, "dim_semantics": "parallel",
+                        "num_warps": 4},
+    "gla": {"chunk": 128, "dim_semantics": "parallel"},
+    "rmsnorm": {"block_rows": 256, "dim_semantics": "parallel"},
 }
 
 
@@ -55,12 +66,14 @@ def _resolve(kernel: str, dims: Dict[str, int], dtype: Any,
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
                                              "block_q", "block_kv",
+                                             "dimension_semantics",
                                              "interpret"))
 def _flash_attention(q, k, v, *, causal, window, q_offset, block_q, block_kv,
-                     interpret):
+                     dimension_semantics, interpret):
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        block_q=block_q, block_kv=block_kv, interpret=interpret)
+        block_q=block_q, block_kv=block_kv,
+        dimension_semantics=dimension_semantics, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -76,17 +89,21 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         "flash_attention",
         {"B": B, "S": S, "SK": k.shape[1], "H": H, "KV": k.shape[2],
          "D": D}, q.dtype,
-        {"block_q": block_q, "block_kv": block_kv})
+        {"block_q": block_q, "block_kv": block_kv, "dim_semantics": None})
     return _flash_attention(q, k, v, causal=causal, window=window,
                             q_offset=q_offset, block_q=blocks["block_q"],
-                            block_kv=blocks["block_kv"], interpret=interp)
+                            block_kv=blocks["block_kv"],
+                            dimension_semantics=blocks["dim_semantics"],
+                            interpret=interp)
 
 
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "dimension_semantics",
                                              "interpret"))
-def _rmsnorm(x, scale, *, eps, block_rows, interpret):
+def _rmsnorm(x, scale, *, eps, block_rows, dimension_semantics, interpret):
     return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                          dimension_semantics=dimension_semantics,
                           interpret=interpret)
 
 
@@ -98,15 +115,19 @@ def rmsnorm(x, scale, *, eps: float = 1e-6,
     for s in x.shape[:-1]:
         rows *= s
     blocks = _resolve("rmsnorm", {"ROWS": rows, "D": x.shape[-1]}, x.dtype,
-                      {"block_rows": block_rows})
+                      {"block_rows": block_rows, "dim_semantics": None})
     return _rmsnorm(x, scale, eps=eps, block_rows=blocks["block_rows"],
+                    dimension_semantics=blocks["dim_semantics"],
                     interpret=interp)
 
 
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def _gla(q, k, v, log_g, *, chunk, interpret):
-    return gla_pallas(q, k, v, log_g, chunk=chunk, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=("chunk", "dimension_semantics",
+                                             "interpret"))
+def _gla(q, k, v, log_g, *, chunk, dimension_semantics, interpret):
+    return gla_pallas(q, k, v, log_g, chunk=chunk,
+                      dimension_semantics=dimension_semantics,
+                      interpret=interpret)
 
 
 def gla(q, k, v, log_g, *, chunk: Optional[int] = None,
@@ -115,14 +136,21 @@ def gla(q, k, v, log_g, *, chunk: Optional[int] = None,
     B, S, H, dk = q.shape
     blocks = _resolve("gla",
                       {"B": B, "S": S, "H": H, "DK": dk,
-                       "DV": v.shape[-1]}, q.dtype, {"chunk": chunk})
-    return _gla(q, k, v, log_g, chunk=blocks["chunk"], interpret=interp)
+                       "DV": v.shape[-1]}, q.dtype,
+                      {"chunk": chunk, "dim_semantics": None})
+    return _gla(q, k, v, log_g, chunk=blocks["chunk"],
+                dimension_semantics=blocks["dim_semantics"],
+                interpret=interp)
 
 
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
-def _flash_decode(q, k, v, kv_len, *, block_kv, interpret):
+@functools.partial(jax.jit, static_argnames=("block_kv",
+                                             "dimension_semantics",
+                                             "interpret"))
+def _flash_decode(q, k, v, kv_len, *, block_kv, dimension_semantics,
+                  interpret):
     return flash_decode_pallas(q, k, v, kv_len, block_kv=block_kv,
+                               dimension_semantics=dimension_semantics,
                                interpret=interpret)
 
 
@@ -133,6 +161,47 @@ def flash_decode(q, k, v, kv_len, *, block_kv: Optional[int] = None,
     blocks = _resolve(
         "decode_attention",
         {"B": B, "S": k.shape[1], "H": H, "KV": k.shape[2], "D": D},
-        q.dtype, {"block_kv": block_kv})
+        q.dtype, {"block_kv": block_kv, "dim_semantics": None})
     return _flash_decode(q, k, v, kv_len, block_kv=blocks["block_kv"],
+                         dimension_semantics=blocks["dim_semantics"],
                          interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("dimension_semantics",
+                                             "num_warps", "interpret"))
+def _paged_flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                        dimension_semantics, num_warps, interpret):
+    return paged_flash_decode_pallas(
+        q, k_pages, v_pages, page_table, lengths,
+        dimension_semantics=dimension_semantics, num_warps=num_warps,
+        interpret=interpret)
+
+
+def paged_flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                       dimension_semantics: Optional[str] = None,
+                       num_warps: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    """Paged decode attention over a (groups, tokens, KV, D) pool.
+
+    ``pages_per_block`` is baked into the pool layout by the caller (the
+    serve engine sizes its allocator groups from the tuned config); the
+    launch knobs resolve through the autotune cache here.  The signature
+    is keyed at the pool's *logical* sequence capacity so the engine's
+    tuning entry and this consult point agree.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    B, H, D = q.shape
+    T, KV = k_pages.shape[1], k_pages.shape[2]
+    blocks = _resolve(
+        "paged_attention",
+        {"B": B, "S": page_table.shape[1] * T, "H": H, "KV": KV, "D": D},
+        q.dtype,
+        {"pages_per_block": None, "dim_semantics": None,
+         "num_warps": num_warps})
+    ds = dimension_semantics if dimension_semantics is not None \
+        else blocks["dim_semantics"]
+    return _paged_flash_decode(
+        q, k_pages, v_pages, page_table, lengths,
+        dimension_semantics=ds, num_warps=blocks["num_warps"],
+        interpret=interp)

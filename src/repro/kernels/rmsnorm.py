@@ -7,10 +7,13 @@ the whole normalization in registers.  f32 statistics for any input dtype.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .launch import launch_params
 
 __all__ = ["rmsnorm_pallas"]
 
@@ -27,6 +30,8 @@ def rmsnorm_pallas(
     scale: jax.Array,  # (d,)
     eps: float = 1e-6,
     block_rows: int = 256,
+    dimension_semantics: Optional[str] = None,
+    num_warps: Optional[int] = None,  # GPU-lowering hint; inert on TPU
     interpret: bool = False,
 ) -> jax.Array:
     orig_shape = x.shape
@@ -41,9 +46,13 @@ def rmsnorm_pallas(
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
     n = x2.shape[0] // block_rows
 
+    # row tiles are fully independent: the whole grid may parallelize
+    params = launch_params(dimension_semantics, 1, 0, interpret)
+    del num_warps
     out = pl.pallas_call(
         functools.partial(_kernel, eps=eps),
         grid=(n,),
+        **({"compiler_params": params} if params else {}),
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
             pl.BlockSpec((d,), lambda i: (0,)),

@@ -1,7 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Runs the batched prefill+decode engine on this host (reduced configs by
-default).  This is the interactive counterpart of the decode dry-run cells.
+Runs the serve engine on this host (reduced configs by default) under
+either runtime: the continuous-batching scheduler (default; mixed prompt
+and generation lengths via ``--mixed``, tuned ``--schedule`` acting at
+admission time, ``--kv-layout paged`` for the real page allocator) or the
+legacy equal-length wave loop (``--runtime wave``).  This is the
+interactive counterpart of the decode dry-run cells.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import Model
 from repro.serve import ServeConfig, ServeEngine
+from repro.serve.scheduler import SCHEDULES
 
 __all__ = ["main"]
 
@@ -27,6 +32,19 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runtime", choices=("continuous", "wave"),
+                    default="continuous")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="KV pool size in 16-token pages (paged layout: "
+                         "bounds how many requests stay resident)")
+    ap.add_argument("--schedule", choices=SCHEDULES, default="fifo")
+    ap.add_argument("--prefill-chunk", type=int, default=512)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length workload: prompt lengths in "
+                         "[2, prompt-len], generation lengths in "
+                         "[1, max-new] (continuous runtime only)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -35,20 +53,37 @@ def main(argv=None) -> int:
     engine = ServeEngine(model, params, ServeConfig(
         max_seq=args.prompt_len + args.max_new + 8,
         batch_slots=args.batch_slots, temperature=args.temperature,
-        seed=args.seed))
+        seed=args.seed, runtime=args.runtime, kv_layout=args.kv_layout,
+        kv_cache_pages=args.kv_pages, schedule=args.schedule,
+        prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(1, cfg.vocab_size,
-                           size=(args.requests, args.prompt_len)).tolist()
+    if args.mixed and engine._continuous:
+        plens = rng.integers(2, args.prompt_len + 1, size=args.requests)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+                   for n in plens]
+        max_new = [int(m) for m in
+                   rng.integers(1, args.max_new + 1, size=args.requests)]
+    else:
+        prompts = rng.integers(1, cfg.vocab_size,
+                               size=(args.requests,
+                                     args.prompt_len)).tolist()
+        max_new = args.max_new
     fe = None
     if cfg.frontend or cfg.encoder:
         fe = rng.normal(size=(args.requests, cfg.frontend_tokens,
                               cfg.frontend_dim)).astype(np.float32)
-    res = engine.generate(prompts, max_new_tokens=args.max_new,
-                          frontend_embeds=fe)
-    print(f"{cfg.name}: {args.requests} requests, "
+    res = engine.generate(prompts, max_new, frontend_embeds=fe)
+    mode = f"{args.runtime}/{args.kv_layout}/{args.schedule}" \
+        if engine._continuous else "wave"
+    print(f"{cfg.name} [{mode}]: {args.requests} requests, "
           f"prefill {res.prefill_seconds:.2f}s, "
           f"decode {res.decode_seconds:.2f}s "
-          f"({res.decode_tokens_per_sec:.1f} tok/s)")
+          f"({res.decode_tokens_per_sec:.1f} tok/s, {res.steps} steps, "
+          f"p50 {res.p50_latency_s:.3f}s, p95 {res.p95_latency_s:.3f}s)")
+    if getattr(engine, "last_alloc", None) is not None:
+        a = engine.last_alloc
+        print(f"  kv pool: {a.n_groups} groups x {a.group_tokens} tokens, "
+              f"high water {a.high_water} groups")
     for i, toks in enumerate(res.tokens[:3]):
         print(f"  req {i}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
     return 0

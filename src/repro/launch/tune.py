@@ -224,8 +224,11 @@ def main(argv=None) -> int:
         fa_dims = dict(attn_dims, SK=shape.seq_len)
         rn_dims = {"ROWS": shape.seq_len, "D": cfg.d_model}
         results = []
+        # paged_attention shares the decode signature: its winner seeds the
+        # continuous engine's pool layout (pages_per_block -> group size)
         for kernel, dims in (("flash_attention", fa_dims),
                              ("decode_attention", attn_dims),
+                             ("paged_attention", attn_dims),
                              ("rmsnorm", rn_dims)):
             res = autotune.autotune_kernel(kernel, dims,
                                            dtype=cfg.compute_dtype,

@@ -144,19 +144,24 @@ def _gqa_out(weights: jax.Array, v: jax.Array) -> jax.Array:
 def _dense_attend(
     q, k, v, *, causal: bool, window: int, q_offset, kv_len: Optional[jax.Array],
 ) -> jax.Array:
+    """``q_offset`` and ``kv_len`` may be scalars (the classic paths) or
+    (B,)-vectors — the continuous-batching engine decodes slots sitting at
+    *different* cache lengths in one dispatch.  The mask is built in a
+    (B-or-1, Sq, Sk) frame so both shapes share one code path."""
     B, Sq, H, D = q.shape
     Sk = k.shape[1]
     logits = _gqa_logits(q, k) / math.sqrt(D)
-    qpos = q_offset + jnp.arange(Sq)
-    kpos = jnp.arange(Sk)
-    mask = jnp.ones((Sq, Sk), bool)
+    qoff = jnp.asarray(q_offset)
+    qpos = qoff.reshape(-1, 1, 1) + jnp.arange(Sq)[None, :, None]
+    kpos = jnp.arange(Sk)[None, None, :]
+    mask = jnp.ones((1, Sq, Sk), bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask = mask & (kpos <= qpos)
     if window:
-        mask &= kpos[None, :] > qpos[:, None] - window
+        mask = mask & (kpos > qpos - window)
     if kv_len is not None:
-        mask &= kpos[None, :] < kv_len
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+        mask = mask & (kpos < jnp.asarray(kv_len).reshape(-1, 1, 1))
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
     weights = jax.nn.softmax(logits, axis=-1)
     return _gqa_out(weights, v).astype(v.dtype)
 
@@ -341,15 +346,20 @@ def self_attention(
     positions: jax.Array,  # (B, S) absolute positions of x tokens
     window: int = 0,
     cache: Optional[Dict[str, jax.Array]] = None,
-    cache_index: Optional[jax.Array] = None,  # scalar: tokens already cached
+    cache_index: Optional[jax.Array] = None,  # scalar or (B,): cached tokens
     impl: Optional[str] = None,
     causal: bool = True,
+    page_table: Optional[jax.Array] = None,  # (B, MAXG): paged KV layout
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Causal self-attention; updates the KV cache when one is given.
 
     Without a cache: full-sequence training/prefill-style attention.
     With a cache: ``x`` holds new token(s); K/V are appended (ring-buffer
     writes for sliding-window blocks) and attention runs against the buffer.
+    A (B,)-vector ``cache_index`` is the continuous-batching decode path:
+    every slot appends its single token at its *own* position.  With
+    ``page_table`` the cache is a (groups, group_tokens, KV, D) pool and
+    the append/attend go through the table (``repro.serve.paging``).
     """
     q, k, v = _project_qkv(params, x, None, cfg)
     cos, sin = rope_freqs(positions, cfg.head_dim_, cfg.rope_theta)
@@ -360,27 +370,51 @@ def self_attention(
     v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and page_table is not None:
+        # Paged pool: single-token decode append through the page table.
+        B = x.shape[0]
+        T = cache["k"].shape[1]
+        pos = jnp.asarray(cache_index, jnp.int32).reshape(B)
+        gid = page_table[jnp.arange(B), pos // T]
+        off = pos % T
+        ck = cache["k"].at[gid, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[gid, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        y = _paged_decode_attend(q, ck, cv, page_table, pos + 1)
+    elif cache is not None:
         Sbuf = cache["k"].shape[1]
         S_new = k.shape[1]
-        if window and Sbuf == window:
-            write_pos = (cache_index % window).astype(jnp.int32)
-        else:
-            write_pos = cache_index.astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
-        new_cache = {"k": ck, "v": cv}
-        total = cache_index + S_new
-        if window and Sbuf == window:
-            # Ring buffer (sliding window): single-step decode writes only.
-            y = _ring_decode_attend(q, ck, cv, cache_index, window)
-        else:
-            # Causal over the buffer: new tokens sit at q_offset=cache_index,
-            # and only the first `total` slots are valid.
+        if jnp.ndim(cache_index) == 1:
+            # Continuous batching: each slot appends one token at its own
+            # cache length (scatter write; per-slot masks in the attend).
+            B = x.shape[0]
+            idx = cache_index.astype(jnp.int32)
+            ck = cache["k"].at[jnp.arange(B), idx].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[jnp.arange(B), idx].set(
+                v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
             y = attend(q, ck, cv, cfg=cfg, causal=True, window=0,
-                       impl="dense", kv_len=total, q_offset=cache_index)
+                       impl="dense", kv_len=idx + S_new, q_offset=idx)
+        else:
+            if window and Sbuf == window:
+                write_pos = (cache_index % window).astype(jnp.int32)
+            else:
+                write_pos = cache_index.astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            total = cache_index + S_new
+            if window and Sbuf == window:
+                # Ring buffer (sliding window): single-step decode writes.
+                y = _ring_decode_attend(q, ck, cv, cache_index, window)
+            else:
+                # Causal over the buffer: new tokens sit at
+                # q_offset=cache_index; only the first `total` slots valid.
+                y = attend(q, ck, cv, cfg=cfg, causal=True, window=0,
+                           impl="dense", kv_len=total, q_offset=cache_index)
     else:
         y = attend(q, k, v, cfg=cfg, causal=causal, window=window, impl=impl)
 
@@ -389,6 +423,25 @@ def self_attention(
     cdt = _dt(cfg.compute_dtype)
     out = jnp.einsum("bshk,hkd->bsd", y.astype(cdt), params["wo"].astype(cdt))
     return constrain(out, "batch", "seq_res", "embed"), new_cache
+
+
+def _paged_decode_attend(q, k_pages, v_pages, page_table, lengths):
+    """Decode attention over a paged pool (single-step q).
+
+    On accelerator backends this is the Pallas paged kernel (the page
+    table rides in as a scalar-prefetch operand, so K/V stream straight
+    from their physical groups); on CPU the pure-jnp gather reference —
+    interpret-mode Pallas times the Python emulator, not the hardware,
+    exactly like the other kernel entry points."""
+    from repro.kernels.ops import default_interpret, paged_flash_decode
+    from repro.kernels.paged_attention import paged_attention_ref
+
+    qs = q[:, 0]
+    if default_interpret():
+        out = paged_attention_ref(qs, k_pages, v_pages, page_table, lengths)
+    else:
+        out = paged_flash_decode(qs, k_pages, v_pages, page_table, lengths)
+    return out[:, None].astype(v_pages.dtype)
 
 
 def _ring_decode_attend(q, ck, cv, cache_index, window):

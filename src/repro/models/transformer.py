@@ -160,6 +160,38 @@ def cache_block_defs(cfg: ModelConfig, kind: str, batch: int,
     raise ValueError(f"unknown block kind {kind!r}")
 
 
+def paged_cache_block_defs(cfg: ModelConfig, kind: str, n_groups: int,
+                           group_tokens: int) -> Dict[str, Any]:
+    """KV pool shapes for one block under the paged layout: requests own
+    page *groups* instead of dense per-slot buffers.  Only dense-cache
+    attention kinds are pageable (``Model.supports_continuous_batching``
+    gates the rest to the wave runtime)."""
+    if kind in ("attn", "moe", "dec", "shared"):
+        from repro.models.common import zeros_init
+
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim_
+        dt = dtype_of(cfg.compute_dtype)
+        return {
+            "k": ParamDef((n_groups, group_tokens, KV, Dh),
+                          (None, None, "kv_heads", "head_dim"),
+                          zeros_init(), dt),
+            "v": ParamDef((n_groups, group_tokens, KV, Dh),
+                          (None, None, "kv_heads", "head_dim"),
+                          zeros_init(), dt),
+        }
+    if kind == "cross":
+        return {}  # cross K/V recomputed from cached memory
+    raise ValueError(f"block kind {kind!r} has no paged cache layout")
+
+
+def paged_cache_defs(cfg: ModelConfig, n_groups: int,
+                     group_tokens: int) -> Dict[str, Any]:
+    sb = {f"{i}_{kind}": paged_cache_block_defs(cfg, kind, n_groups,
+                                                group_tokens)
+          for i, kind in enumerate(cfg.superblock)}
+    return {"blocks": stack_defs(sb, cfg.n_superblocks)}
+
+
 def cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     sb = {f"{i}_{kind}": cache_block_defs(cfg, kind, batch, max_seq)
           for i, kind in enumerate(cfg.superblock)}
@@ -247,7 +279,8 @@ def _apply_block_decode(kind: str, p: Dict[str, Any], x: jax.Array,
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         y, new_kv = attn_mod.self_attention(
             p["attn"], h, cfg=cfg, positions=positions, window=window,
-            cache=cache, cache_index=index)
+            cache=cache, cache_index=index,
+            page_table=ctx.get("page_table"))
         x = x + y
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
         if kind in ("moe", "moe_swa"):
@@ -267,7 +300,7 @@ def _apply_block_decode(kind: str, p: Dict[str, Any], x: jax.Array,
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         y, new_kv = attn_mod.self_attention(
             p["attn"], h, cfg=cfg, positions=positions, cache=cache,
-            cache_index=index)
+            cache_index=index, page_table=ctx.get("page_table"))
         x = x + y
         h = rms_norm(x, p["ln_x"], cfg.norm_eps)
         y, _ = attn_mod.cross_attention(p["xattn"], h, ctx["memory"], cfg=cfg)
@@ -638,6 +671,127 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._logits(params, x)
         new_cache = dict(cache, blocks=new_blocks, index=index + 1)
+        return logits, new_cache
+
+    # --- continuous batching ----------------------------------------------
+    @property
+    def supports_continuous_batching(self) -> bool:
+        """Continuous batching decodes slots at per-slot cache lengths and
+        prefills admitted requests through the chunked-append path, so it
+        is exact for precisely the stacks chunked prefill is exact for
+        (sliding-window rings and recurrent mixers keep the wave loop)."""
+        return self.supports_chunked_prefill
+
+    def init_paged_cache(self, n_groups: int, group_tokens: int):
+        """KV pools for the paged layout: ``{"blocks": ...}`` with
+        (n_groups, group_tokens, KV, D) pools per attention block.  The
+        page table and per-slot lengths live with the engine — group 0 is
+        the allocator's scratch group (idle decode lanes write there)."""
+        return init_params(paged_cache_defs(self.cfg, n_groups,
+                                            group_tokens),
+                           jax.random.PRNGKey(0))
+
+    def decode_step_multi(self, params, tokens, cache, lengths,
+                          page_table=None):
+        """Continuous-batching decode: one token per slot, each slot at
+        its OWN cache length.
+
+        ``tokens``: (B, 1); ``lengths``: (B,) tokens already resident per
+        slot.  Dense layout (``page_table=None``): ``cache["blocks"]``
+        are the usual per-slot buffers, appended by scatter.  Paged
+        layout: the blocks are pools and ``page_table`` (B, MAXG) maps
+        each slot's logical groups to physical ones.  Idle/masked slots
+        are decoded too (their outputs are discarded by the engine) —
+        slot math is row-independent, so live slots' tokens are identical
+        whatever the rest of the batch is doing.
+        """
+        cfg = self.cfg
+        lengths = jnp.asarray(lengths, jnp.int32)
+        x = self._embed(params, tokens)
+        ctx = {
+            "positions": lengths[:, None],
+            "index": lengths,
+            "memory": cache.get("memory"),
+            "shared_params": params.get("shared"),
+            "page_table": page_table,
+        }
+        x, new_blocks = _stack_decode(params["blocks"], cache["blocks"], x,
+                                      ctx, cfg)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, dict(cache, blocks=new_blocks)
+
+    def prefill_chunk_slot(self, params, batch, cache, slot, length):
+        """Append one prompt chunk for ONE slot of a batched dense cache.
+
+        ``batch["tokens"]``: (1, C).  Slices the slot's view out of every
+        per-slot buffer, runs the exact ``prefill_chunk`` path on it, and
+        writes the view back — so admission-time prefill reuses the
+        chunked-prefill math byte for byte while the other slots keep
+        decoding between chunks.  Returns (last-token logits, cache).
+        """
+        view = {"blocks": jax.tree_util.tree_map(
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+            cache["blocks"]),
+            "index": jnp.asarray(length, jnp.int32)}
+        if "memory" in cache:
+            view["memory"] = jax.lax.dynamic_slice_in_dim(
+                cache["memory"], slot, 1, axis=0)
+        logits, new_view = self.prefill_chunk(params, batch, view)
+        new_cache = dict(cache, blocks=jax.tree_util.tree_map(
+            lambda l, nv: jax.lax.dynamic_update_slice_in_dim(
+                l, nv.astype(l.dtype), slot, axis=1),
+            cache["blocks"], new_view["blocks"]))
+        if "memory" in cache:
+            new_cache["memory"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["memory"],
+                new_view["memory"].astype(cache["memory"].dtype),
+                slot, axis=0)
+        return logits, new_cache
+
+    def prefill_chunk_slot_paged(self, params, batch, cache, page_row,
+                                 length, slot=None):
+        """Paged-layout slot prefill: gather, exact chunk, scatter back.
+
+        The slot's pages are gathered (through ``page_row``, its page-
+        table row) into a dense single-request view, the ordinary
+        ``prefill_chunk`` runs on that view, and the C freshly-appended
+        positions are scattered back into the pools.  Unallocated logical
+        groups point at the scratch group; their garbage is masked by the
+        chunk path's length-based attention mask, so the gathered tail is
+        inert.  ``slot`` addresses the engine's dense memory buffer for
+        frontend/encoder models.
+        """
+        length = jnp.asarray(length, jnp.int32)
+        C = batch["tokens"].shape[1]
+
+        def gather(l):
+            g = l[:, page_row]  # (n_sb, MAXG, T, KV, D)
+            n_sb, maxg, T = g.shape[:3]
+            return g.reshape(n_sb, 1, maxg * T, *g.shape[3:])
+
+        view = {"blocks": jax.tree_util.tree_map(gather, cache["blocks"]),
+                "index": length}
+        if "memory" in cache:
+            view["memory"] = jax.lax.dynamic_slice_in_dim(
+                cache["memory"], slot, 1, axis=0)
+        logits, new_view = self.prefill_chunk(params, batch, view)
+
+        pos = length + jnp.arange(C)
+
+        def scatter(l, nv):
+            T = l.shape[2]
+            seg = jax.lax.dynamic_slice_in_dim(nv, length, C, axis=2)[:, 0]
+            return l.at[:, page_row[pos // T], pos % T].set(
+                seg.astype(l.dtype))
+
+        new_cache = dict(cache, blocks=jax.tree_util.tree_map(
+            scatter, cache["blocks"], new_view["blocks"]))
+        if "memory" in cache:
+            new_cache["memory"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["memory"],
+                new_view["memory"].astype(cache["memory"].dtype),
+                slot, axis=0)
         return logits, new_cache
 
 

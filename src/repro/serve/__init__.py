@@ -1,16 +1,19 @@
-"""Serving substrate: batched prefill + KV-cache decode engine.
+"""Serving substrate: continuous-batching engine over a paged KV cache.
 
-``repro.serve.space`` (knob space + co-deployment surrogate) is numpy-only;
-the engine pulls in jax and the model stack.  Attribute access is lazy so
-the tuning path (``--joint``, benchmarks, tests of the knob space) never
-pays the jax import for touching the package.
+``repro.serve.space`` (knob space + co-deployment surrogate) and the
+runtime bookkeeping modules (``paging``: page-group allocator;
+``scheduler``: fifo/sjf/interleave admission) are numpy-only; the engine
+pulls in jax and the model stack.  Attribute access is lazy so the tuning
+path (``--joint``, benchmarks, tests of the knob space) never pays the
+jax import for touching the package.
 """
 from typing import Any
 
-_ENGINE_NAMES = ("GenerationResult", "ServeConfig", "ServeEngine")
+_ENGINE_NAMES = ("GenerationResult", "OversubscriptionError", "ServeConfig",
+                 "ServeEngine")
+_PAGING_NAMES = ("PAGE_TOKENS", "PageAllocator")
+_SCHED_NAMES = ("Request", "SCHEDULES", "SlotScheduler")
 _SPACE_NAMES = (
-    "PAGE_TOKENS",
-    "SCHEDULES",
     "CotuneParams",
     "LiveCotuneScalarizer",
     "LiveServeSUT",
@@ -23,7 +26,7 @@ _SPACE_NAMES = (
     "serve_knob_space",
 )
 
-__all__ = list(_ENGINE_NAMES + _SPACE_NAMES)
+__all__ = list(_ENGINE_NAMES + _PAGING_NAMES + _SCHED_NAMES + _SPACE_NAMES)
 
 
 def __getattr__(name: str) -> Any:
@@ -31,6 +34,14 @@ def __getattr__(name: str) -> Any:
         from . import engine
 
         return getattr(engine, name)
+    if name in _PAGING_NAMES:
+        from . import paging
+
+        return getattr(paging, name)
+    if name in _SCHED_NAMES:
+        from . import scheduler
+
+        return getattr(scheduler, name)
     if name in _SPACE_NAMES:
         from . import space
 

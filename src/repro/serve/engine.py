@@ -1,27 +1,46 @@
-"""Batched serving engine: prefill + KV-cache decode with slot admission.
+"""Serving engine: continuous-batching runtime over a paged KV cache.
 
-Scope: fixed-capacity batch slots, greedy or temperature sampling, EOS
-early-exit, equal-length prompt batching (the paged-attention/continuous-
-batching generalization is out of scope for this repro; the restriction is
-documented in DESIGN.md).  The decode step is the same ``serve_step`` the
-dry-run lowers for the decode_32k / long_500k cells.
+Two runtimes share one engine:
+
+* ``continuous`` (default) — a slot-based scheduler admits requests into
+  decode slots *as they free up mid-generation* (``repro.serve.scheduler``:
+  fifo | sjf | interleave — the tuned ``schedule`` knob acts here), backed
+  by either dense per-slot KV buffers or a real paged allocator
+  (``repro.serve.paging``; ``kv_cache_pages`` bounds how many requests can
+  be resident, which is the memory/throughput trade-off the tuner
+  explores).  Decode is one batched dispatch per step at per-slot cache
+  lengths; admission-time prefill reuses the exact chunked-prefill path,
+  so generated tokens are identical to the wave runtime's and identical
+  across schedules (slot math is row-independent).
+* ``wave`` — the legacy static loop (equal-length prompts packed into
+  ``batch_slots``-sized waves), kept as the exact-parity fallback and the
+  only runtime for stacks without ``supports_continuous_batching``
+  (sliding-window rings, recurrent mixers).
+
+The decode step is the same ``serve_step`` the dry-run lowers for the
+decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ModelConfig
 from repro.models import Model
 
-from .space import PAGE_TOKENS, SCHEDULES
+from .paging import (PAGE_TOKENS, OversubscriptionError, PageAllocator,
+                     min_pages_for)
+from .scheduler import SCHEDULES, Request, SlotScheduler
 
-__all__ = ["ServeConfig", "ServeEngine", "GenerationResult"]
+__all__ = ["ServeConfig", "ServeEngine", "GenerationResult",
+           "OversubscriptionError"]
+
+RUNTIMES = ("continuous", "wave")
+KV_LAYOUTS = ("dense", "paged")
 
 
 @dataclass
@@ -35,21 +54,35 @@ class ServeConfig:
     # joint co-tuning mode persists winners for them).  prefill_chunk is
     # the prefill split size: prompts longer than this are prefilled in
     # chunk-sized segments threaded through the KV cache (scheduler
-    # granularity vs per-chunk dispatch overhead — the knob moves measured
-    # prefill latency).  Models whose blocks cannot append multi-token
-    # segments exactly (sliding-window rings, recurrent mixers; see
-    # Model.supports_chunked_prefill) prefill whole prompts regardless.
+    # granularity vs per-chunk dispatch overhead — under the continuous
+    # runtime it is also the interleave quantum).  Models whose blocks
+    # cannot append multi-token segments exactly (sliding-window rings,
+    # recurrent mixers; see Model.supports_chunked_prefill) prefill whole
+    # prompts regardless.
     prefill_chunk: int = 512
-    # KV capacity in PAGE_TOKENS-token pages; batch_slots*max_seq must fit
-    # (enforced at construction — the admission constraint).  None
-    # auto-sizes to exactly that footprint, so configs that never touch
-    # the knob keep working at any max_seq/batch_slots combination.
+    # KV capacity in PAGE_TOKENS-token pages.  Under the paged layout this
+    # is a REAL pool: requests reserve page groups at admission and release
+    # them at completion, so fewer pages = fewer resident requests.  Under
+    # the dense layout (and the wave runtime) batch_slots*max_seq must fit
+    # (the buffers really are that big).  None auto-sizes to that footprint
+    # (+ the scratch group under paging), so configs that never touch the
+    # knob keep working at any max_seq/batch_slots combination.
     kv_cache_pages: Optional[int] = None
-    # Wave admission order: fifo | sjf | interleave.  Validated and
-    # modelled by the co-tuning surrogate; the engine's equal-length-wave
-    # scheduler runs fifo today — runtime sjf/interleave land with
-    # continuous batching.
+    # Admission order under the continuous runtime: fifo | sjf (shortest
+    # prompt first) | interleave (fifo admission, prefill chunks issued
+    # between decode steps).  The wave runtime runs fifo regardless.
     schedule: str = "fifo"
+    # Runtime: continuous batching (slot-level admission) or the legacy
+    # equal-length wave loop.  Stacks without supports_continuous_batching
+    # fall back to wave automatically.
+    runtime: str = "continuous"
+    # KV layout under the continuous runtime: dense per-slot buffers or
+    # the paged pool + allocator.  The wave runtime is always dense.
+    kv_layout: str = "dense"
+    # Pages per allocation group == the paged kernel's pages_per_block
+    # tile.  With autotune_kernels the tuned paged_attention entry
+    # overrides this (clamped so one max_seq request still fits).
+    kv_page_block: int = 1
     # Tune/load Pallas block configs for this engine's decode shapes before
     # serving (persisted in the repro.autotune cache, so the compile-time
     # cost is paid once per (shape, dtype, backend)).
@@ -60,18 +93,45 @@ class ServeConfig:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}; "
                              f"have {SCHEDULES}")
+        if self.runtime not in RUNTIMES:
+            raise ValueError(f"unknown runtime {self.runtime!r}; "
+                             f"have {RUNTIMES}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r}; "
+                             f"have {KV_LAYOUTS}")
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if self.kv_page_block < 1:
+            raise ValueError("kv_page_block must be >= 1")
+        paged = self.runtime == "continuous" and self.kv_layout == "paged"
         needed = self.batch_slots * self.max_seq
+        # remember auto-sizing: the engine re-derives a full-residency pool
+        # if autotuning later changes the group size (pages_per_block)
+        self._kv_pages_auto = self.kv_cache_pages is None
         if self.kv_cache_pages is None:
-            self.kv_cache_pages = -(-needed // PAGE_TOKENS)
-        capacity = self.kv_cache_pages * PAGE_TOKENS
-        if needed > capacity:
-            raise ValueError(
-                f"KV cache too small: {self.batch_slots} slots x "
-                f"{self.max_seq} tokens needs {needed} tokens but "
-                f"kv_cache_pages={self.kv_cache_pages} holds only "
-                f"{capacity}")
+            pages = -(-needed // PAGE_TOKENS)
+            if paged:  # round to group granularity + the scratch group
+                ppb = self.kv_page_block
+                pages = (-(-pages // ppb) + 1) * ppb
+            self.kv_cache_pages = pages
+        if paged:
+            # Pages bound residency, not the dense footprint — but one
+            # max_seq request (plus the scratch group) must always fit.
+            floor = min_pages_for(self.max_seq, self.kv_page_block)
+            if self.kv_cache_pages < floor:
+                raise ValueError(
+                    f"KV cache too small: a single {self.max_seq}-token "
+                    f"request (+ the scratch group) needs {floor} pages at "
+                    f"{self.kv_page_block} pages/group but "
+                    f"kv_cache_pages={self.kv_cache_pages}")
+        else:
+            capacity = self.kv_cache_pages * PAGE_TOKENS
+            if needed > capacity:
+                raise ValueError(
+                    f"KV cache too small: {self.batch_slots} slots x "
+                    f"{self.max_seq} tokens needs {needed} tokens but "
+                    f"kv_cache_pages={self.kv_cache_pages} holds only "
+                    f"{capacity}")
 
 
 @dataclass
@@ -79,44 +139,158 @@ class GenerationResult:
     tokens: List[List[int]]  # generated continuations (per request)
     prefill_seconds: float
     decode_seconds: float
-    steps: int
+    steps: int  # batched decode dispatches
     # prefill dispatches actually issued (> waves when chunked prefill
-    # split prompts) — the observable evidence the prefill_chunk knob acts
+    # split prompts; per-slot under the continuous runtime) — the
+    # observable evidence the prefill_chunk knob acts
     prefill_chunks: int = 0
+    # per-request runtime provenance (rid order == input order):
+    # {"rid", "prompt_len", "new_tokens", "latency_s", "ttft_s"}
+    per_request: List[Dict[str, Any]] = field(default_factory=list)
 
     @property
     def decode_tokens_per_sec(self) -> float:
         n = sum(len(t) for t in self.tokens)
         return n / max(self.decode_seconds, 1e-9)
 
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile (0..100) of per-request latency seconds."""
+        lats = [r["latency_s"] for r in self.per_request]
+        if not lats:
+            return 0.0
+        return float(np.percentile(np.asarray(lats), q))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return self.latency_percentile(95.0)
+
 
 class ServeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig):
+        import dataclasses
+
         self.model = model
         self.params = params
-        self.cfg = cfg
+        # private copy: pool sizing below rewrites kv_cache_pages (group
+        # rounding, wave-fallback footprint, autotuned group size) and
+        # must not leak into a caller-owned config reused across engines
+        orig = cfg
+        self.cfg = cfg = dataclasses.replace(cfg)
+        cfg._kv_pages_auto = getattr(orig, "_kv_pages_auto", False)
+        self._continuous = (cfg.runtime == "continuous"
+                            and model.supports_continuous_batching)
+        self._paged = self._continuous and cfg.kv_layout == "paged"
+        if cfg.kv_layout == "paged" and not self._paged:
+            # A paged config passed the lenient one-request validation,
+            # but this stack runs dense buffers (wave fallback): restore
+            # the dense footprint accounting the paged branch waived, so
+            # the config honestly reports the memory actually allocated.
+            needed = cfg.batch_slots * cfg.max_seq
+            if cfg.kv_cache_pages * PAGE_TOKENS < needed:
+                cfg.kv_cache_pages = -(-needed // PAGE_TOKENS)
         # tuned block configs for this engine's kernel shapes (filled when
         # cfg.autotune_kernels; consulted implicitly by repro.kernels.ops)
-        self.kernel_blocks: Dict[str, Dict[str, int]] = {}
+        self.kernel_blocks: Dict[str, Dict[str, Any]] = {}
+        mcfg = model.cfg
         if cfg.autotune_kernels:
             # the decode cache buffer is always max_seq long; prompt-length
             # dependent shapes are warmed lazily per wave in generate()
-            mcfg = model.cfg
             self.kernel_blocks["decode_attention"] = self._ensure(
                 "decode_attention",
                 {"B": cfg.batch_slots, "S": cfg.max_seq,
                  "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
                  "D": mcfg.head_dim_})
+        if self._paged:
+            self._size_paged_pool()
         self._prefill = jax.jit(model.prefill)
         self._prefill_chunk = jax.jit(model.prefill_chunk)
         self._decode = jax.jit(model.decode_step)
+        if self._continuous:
+            self._decode_multi = jax.jit(model.decode_step_multi)
+            self._slot_chunk = jax.jit(model.prefill_chunk_slot)
+            self._slot_chunk_paged = jax.jit(model.prefill_chunk_slot_paged)
+            self._argmax_multi = jax.jit(self._greedy_rows)
+            self._categorical_multi = jax.jit(self._categorical_rows)
 
-    def _ensure(self, kernel: str, dims: Dict[str, int]) -> Dict[str, int]:
+    # ------------------------------------------------------------------
+    def _ensure(self, kernel: str, dims: Dict[str, int]) -> Dict[str, Any]:
         from repro import autotune
 
         return autotune.ensure_tuned(kernel, dims,
                                      dtype=self.model.cfg.compute_dtype,
                                      budget=self.cfg.autotune_budget)
+
+    def _size_paged_pool(self) -> None:
+        """Fix the pool geometry: group size (pages), groups per request,
+        total groups.  With autotune the paged kernel's tuned
+        ``pages_per_block`` becomes the group size — clamped so one
+        max_seq request still fits the configured page budget — and the
+        winner is re-keyed under the runtime pool signature so the
+        ``ops.paged_flash_decode`` consult point hits it."""
+        cfg, mcfg = self.cfg, self.model.cfg
+        ppb = cfg.kv_page_block
+        if cfg.autotune_kernels:
+            tuned = self._ensure(
+                "paged_attention",
+                {"B": cfg.batch_slots, "S": cfg.max_seq,
+                 "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
+                 "D": mcfg.head_dim_})
+            self.kernel_blocks["paged_attention"] = tuned
+            ppb = int(tuned.get("pages_per_block", ppb))
+        if not getattr(cfg, "_kv_pages_auto", False):
+            while ppb > 1:  # tuned tile too coarse for this page budget
+                if cfg.kv_cache_pages >= min_pages_for(cfg.max_seq, ppb):
+                    break
+                ppb //= 2
+        self.group_pages = ppb
+        self.group_tokens = ppb * PAGE_TOKENS
+        self.max_groups = -(-cfg.max_seq // self.group_tokens)
+        if getattr(cfg, "_kv_pages_auto", False):
+            # auto-sized budget: full residency at the adopted group size
+            self.pool_groups = cfg.batch_slots * self.max_groups + 1
+        else:
+            self.pool_groups = max(cfg.kv_cache_pages // ppb,
+                                   self.max_groups + 1)
+        # the config reports the pool actually allocated (group rounding,
+        # one-request minimum and auto-resizing can all move it)
+        cfg.kv_cache_pages = self.pool_groups * ppb
+        if cfg.autotune_kernels:
+            self._rekey_paged_entry()
+
+    def _rekey_paged_entry(self) -> None:
+        """Persist the paged winner under the dims the pool actually runs
+        (S = max_groups * group_tokens), so the runtime consult point in
+        ``ops.paged_flash_decode`` resolves the tuned launch knobs."""
+        from repro import autotune
+
+        mcfg = self.model.cfg
+        logical = {"B": self.cfg.batch_slots, "S": self.cfg.max_seq,
+                   "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
+                   "D": mcfg.head_dim_}
+        runtime = dict(logical, S=self.max_groups * self.group_tokens)
+        if runtime == logical:
+            return
+        cache = autotune.default_cache()
+        entry = cache.get("paged_attention", autotune.shape_sig(logical),
+                          mcfg.compute_dtype, autotune.backend_name())
+        if not entry:
+            return
+        # rebuild-per-trial loops (LiveServeSUT) construct many engines:
+        # skip the full-file cache rewrite when the entry already landed
+        existing = cache.get_config("paged_attention",
+                                    autotune.shape_sig(runtime),
+                                    mcfg.compute_dtype,
+                                    autotune.backend_name())
+        if existing == entry["config"]:
+            return
+        cache.put("paged_attention", autotune.shape_sig(runtime),
+                  mcfg.compute_dtype, autotune.backend_name(),
+                  entry["config"], entry["value"],
+                  meta=dict(entry.get("meta", {}), rekeyed_from="logical"))
 
     def _warm_prefill_blocks(self, prompt_len: int) -> None:
         """Tune/load block configs for the shapes this wave actually runs:
@@ -134,16 +308,21 @@ class ServeEngine:
         self.kernel_blocks["rmsnorm_decode"] = self._ensure(
             "rmsnorm", {"ROWS": B, "D": mcfg.d_model})
 
+    # ------------------------------------------------------------------
     def generate(
         self,
         prompts: Sequence[Sequence[int]],
-        max_new_tokens: int,
+        max_new_tokens: Union[int, Sequence[int]],
         frontend_embeds: Optional[np.ndarray] = None,
     ) -> GenerationResult:
-        """Generate continuations for a batch of equal-length prompts.
+        """Generate continuations for a batch of requests.
 
-        Requests are packed into ``batch_slots``-sized waves; a short final
-        wave is padded with dummy prompts (their outputs are discarded).
+        Under the continuous runtime prompts may have MIXED lengths and
+        ``max_new_tokens`` may be per-request; completed requests free
+        their slot (and KV pages) for pending ones mid-generation.  The
+        wave runtime keeps the historical contract: equal-length prompts
+        packed into ``batch_slots``-sized waves, short final wave padded
+        with dummies.
         """
         mcfg = self.model.cfg
         if (mcfg.frontend or mcfg.encoder) and frontend_embeds is None:
@@ -153,22 +332,47 @@ class ServeEngine:
             raise ValueError(
                 f"{mcfg.name} has a modality frontend/encoder; generate() "
                 "requires frontend_embeds")
+        n = len(prompts)
+        if isinstance(max_new_tokens, (int, np.integer)):
+            max_new = [int(max_new_tokens)] * n
+        else:
+            max_new = [int(m) for m in max_new_tokens]
+            if len(max_new) != n:
+                raise ValueError("per-request max_new_tokens length must "
+                                 "match the number of prompts")
+        if any(m < 1 for m in max_new):
+            raise ValueError("max_new_tokens must be >= 1")
+        for p, m in zip(prompts, max_new):
+            if len(p) + m > self.cfg.max_seq:
+                raise ValueError("prompt + generation exceeds max_seq")
+        if self._continuous:
+            return self._generate_continuous(prompts, max_new,
+                                             frontend_embeds)
+        return self._generate_waves(prompts, max_new, frontend_embeds)
+
+    # ------------------------------------------------------------------
+    # wave runtime (legacy exact-parity path)
+    # ------------------------------------------------------------------
+    def _generate_waves(self, prompts, max_new: List[int],
+                        frontend_embeds) -> GenerationResult:
         lens = {len(p) for p in prompts}
         if len(lens) != 1:
-            raise ValueError("engine batches equal-length prompts; "
-                             f"got lengths {sorted(lens)}")
+            raise ValueError("the wave runtime batches equal-length "
+                             f"prompts; got lengths {sorted(lens)} "
+                             "(use runtime='continuous' for mixed)")
         (plen,) = lens
-        if plen + max_new_tokens > self.cfg.max_seq:
-            raise ValueError("prompt + generation exceeds max_seq")
         if self.cfg.autotune_kernels:
             self._warm_prefill_blocks(plen)
 
         slots = self.cfg.batch_slots
         outputs: List[List[int]] = []
+        per_request: List[Dict[str, Any]] = []
         prefill_s = decode_s = 0.0
         steps = chunks = 0
+        t0 = time.time()
         for wave_start in range(0, len(prompts), slots):
             wave = list(prompts[wave_start:wave_start + slots])
+            wave_new = max_new[wave_start:wave_start + slots]
             n_real = len(wave)
             while len(wave) < slots:
                 wave.append(wave[0])  # pad with a copy; discarded later
@@ -179,13 +383,23 @@ class ServeEngine:
                     reps = np.repeat(fe[:1], slots - fe.shape[0], axis=0)
                     fe = np.concatenate([fe, reps], axis=0)
             toks, pf, dc, st, nc = self._generate_wave(
-                np.asarray(wave, np.int32), max_new_tokens, fe)
-            outputs.extend(toks[:n_real])
+                np.asarray(wave, np.int32), max(wave_new), fe)
+            wave_done = time.time() - t0
+            for i in range(n_real):
+                t = toks[i][:wave_new[i]]
+                outputs.append(t)
+                per_request.append({
+                    "rid": wave_start + i, "prompt_len": plen,
+                    "new_tokens": len(t),
+                    "latency_s": wave_done,
+                    "ttft_s": wave_done - dc,
+                })
             prefill_s += pf
             decode_s += dc
             steps += st
             chunks += nc
-        return GenerationResult(outputs, prefill_s, decode_s, steps, chunks)
+        return GenerationResult(outputs, prefill_s, decode_s, steps, chunks,
+                                per_request)
 
     def _generate_wave(self, prompt_arr: np.ndarray, max_new: int,
                        frontend_embeds) -> Any:
@@ -255,3 +469,227 @@ class ServeEngine:
         key = jax.random.fold_in(rng, step)
         return jax.random.categorical(
             key, lg / self.cfg.temperature, axis=-1)[:, None].astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # continuous-batching runtime
+    # ------------------------------------------------------------------
+    def _greedy_rows(self, logits):
+        lg = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def _base_key(self, rid: int):
+        """Per-request PRNG root.  Token ``i`` of request ``rid`` is always
+        sampled with ``fold_in(_base_key(rid), i)`` — BOTH the prefill-tail
+        path (``_sample_slot``) and the batched decode path
+        (``_categorical_rows``) compose keys this way, which is what makes
+        temperature sampling schedule- and slot-placement-invariant."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), rid)
+
+    def _categorical_rows(self, logits, base_keys, produced):
+        """Per-slot keys derive from (request id, token index) only, so
+        sampled tokens are schedule- and slot-placement-invariant."""
+        lg = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)
+        keys = jax.vmap(jax.random.fold_in)(base_keys, produced)
+        return jax.vmap(
+            lambda k, row: jax.random.categorical(
+                k, row / self.cfg.temperature))(keys, lg).astype(jnp.int32)
+
+    def _init_continuous_cache(self):
+        """Slot KV state: dense per-slot buffers or the paged pools, plus
+        the per-slot frontend memory buffer (never paged — fixed width)."""
+        mcfg = self.model.cfg
+        B = self.cfg.batch_slots
+        if self._paged:
+            cache = self.model.init_paged_cache(self.pool_groups,
+                                                self.group_tokens)
+            if mcfg.frontend or mcfg.encoder:
+                from repro.models.common import dtype_of
+
+                cache["memory"] = jnp.zeros(
+                    (B, mcfg.frontend_tokens, mcfg.d_model),
+                    dtype_of(mcfg.compute_dtype))
+        else:
+            cache = self.model.init_cache(B, max_seq=self.cfg.max_seq)
+            cache.pop("index", None)  # lengths are per-slot host state
+        return cache
+
+    def _generate_continuous(self, prompts, max_new: List[int],
+                             frontend_embeds) -> GenerationResult:
+        cfg = self.cfg
+        B = cfg.batch_slots
+        reqs = []
+        for i, p in enumerate(prompts):
+            fe = None
+            if frontend_embeds is not None:
+                fe = np.asarray(frontend_embeds[i:i + 1])
+            reqs.append(Request(i, list(p), max_new[i], fe))
+        sched = SlotScheduler(cfg.schedule, B)
+        sched.submit(reqs)
+        alloc = None
+        if self._paged:
+            # the allocator mirrors the device pool exactly (pool_groups
+            # already folds in the one-request minimum / auto-sizing)
+            alloc = PageAllocator(self.pool_groups * self.group_pages,
+                                  PAGE_TOKENS, self.group_pages)
+            page_tables = np.zeros((B, self.max_groups), np.int32)
+        cache = self._init_continuous_cache()
+
+        # host-side slot state
+        slot_req: List[Optional[Request]] = [None] * B
+        slot_chunks: List[List[np.ndarray]] = [[] for _ in range(B)]
+        slot_first_chunk = [False] * B  # frontend embeds ride chunk 0
+        slot_out: List[List[int]] = [[] for _ in range(B)]
+        lengths = np.zeros(B, np.int64)
+        next_tok = np.zeros(B, np.int32)
+        base_keys = jnp.zeros((B,) + jax.random.PRNGKey(0).shape,
+                              jax.random.PRNGKey(0).dtype)
+
+        results: List[Optional[List[int]]] = [None] * len(prompts)
+        per_request: List[Optional[Dict[str, Any]]] = [None] * len(prompts)
+        first_tok_t: List[Optional[float]] = [None] * B
+        prefill_s = decode_s = 0.0
+        steps = chunks_issued = 0
+        t0 = time.time()
+
+        def run_chunk(b: int) -> None:
+            nonlocal cache, prefill_s, chunks_issued
+            piece_tokens = slot_chunks[b].pop(0)
+            piece = {"tokens": jnp.asarray(piece_tokens)}
+            r = slot_req[b]
+            if slot_first_chunk[b]:
+                slot_first_chunk[b] = False
+                if r.frontend_embeds is not None:
+                    piece["frontend_embeds"] = jnp.asarray(r.frontend_embeds)
+            t = time.time()
+            if self._paged:
+                logits, new_cache = self._slot_chunk_paged(
+                    self.params, piece, cache,
+                    jnp.asarray(page_tables[b]),
+                    jnp.asarray(lengths[b], jnp.int32),
+                    jnp.asarray(b, jnp.int32))
+            else:
+                logits, new_cache = self._slot_chunk(
+                    self.params, piece, cache, jnp.asarray(b, jnp.int32),
+                    jnp.asarray(lengths[b], jnp.int32))
+            cache = new_cache
+            lengths[b] += piece_tokens.shape[1]
+            chunks_issued += 1
+            if not slot_chunks[b]:  # prefill done: sample the first token
+                tok = int(np.asarray(self._sample_slot(logits, r.rid, 0)))
+                prefill_s += time.time() - t
+                first_tok_t[b] = time.time()
+                accept_token(b, tok)
+            else:
+                logits.block_until_ready()
+                prefill_s += time.time() - t
+
+        def accept_token(b: int, tok: int) -> None:
+            r = slot_req[b]
+            slot_out[b].append(tok)
+            next_tok[b] = tok
+            done = len(slot_out[b]) >= r.max_new or (
+                cfg.eos_token is not None and tok == cfg.eos_token)
+            if done:
+                finish_slot(b)
+
+        def finish_slot(b: int) -> None:
+            r = slot_req[b]
+            now = time.time()
+            results[r.rid] = list(slot_out[b])
+            per_request[r.rid] = {
+                "rid": r.rid, "prompt_len": r.prompt_len,
+                "new_tokens": len(slot_out[b]),
+                "latency_s": now - t0,
+                "ttft_s": (first_tok_t[b] or now) - t0,
+            }
+            slot_req[b] = None
+            slot_out[b] = []
+            slot_chunks[b] = []
+            lengths[b] = 0
+            next_tok[b] = 0
+            if alloc is not None:
+                alloc.release(r.rid)
+                page_tables[b, :] = PageAllocator.SCRATCH_GROUP
+
+        def sample_key_for(b: int) -> None:
+            nonlocal base_keys
+            if cfg.temperature > 0:
+                base_keys = base_keys.at[b].set(
+                    self._base_key(slot_req[b].rid))
+
+        while sched.has_pending or any(r is not None for r in slot_req):
+            progressed = False
+            # 1. admission into freed slots, in policy order
+            for b in range(B):
+                if slot_req[b] is not None or not sched.has_pending:
+                    continue
+                head = sched.peek()
+                if alloc is not None:
+                    groups = alloc.try_alloc(head.rid, head.total_tokens)
+                    if groups is None:
+                        break  # pool full: wait for a completion
+                    page_tables[b, :] = PageAllocator.SCRATCH_GROUP
+                    page_tables[b, :len(groups)] = groups
+                sched.pop()
+                slot_req[b] = head
+                lengths[b] = 0
+                first_tok_t[b] = None
+                chunk = cfg.prefill_chunk
+                toks = np.asarray([head.prompt], np.int32)
+                slot_chunks[b] = [toks[:, s:s + chunk]
+                                  for s in range(0, toks.shape[1], chunk)]
+                slot_first_chunk[b] = True
+                sample_key_for(b)
+                progressed = True
+                if not sched.interleave_prefill:
+                    while slot_chunks[b] and slot_req[b] is not None:
+                        run_chunk(b)
+            # 2. interleave: one prefill chunk per prefilling slot per step
+            if sched.interleave_prefill:
+                for b in range(B):
+                    if slot_req[b] is not None and slot_chunks[b]:
+                        run_chunk(b)
+                        progressed = True
+            # 3. one batched decode step over every decoding slot
+            active = [b for b in range(B)
+                      if slot_req[b] is not None and not slot_chunks[b]]
+            if active:
+                t = time.time()
+                logits, cache = self._decode_multi(
+                    self.params, jnp.asarray(next_tok[:, None]), cache,
+                    jnp.asarray(lengths, jnp.int32),
+                    jnp.asarray(page_tables) if self._paged else None)
+                if cfg.temperature <= 0:
+                    toks = np.asarray(self._argmax_multi(logits))
+                else:
+                    produced = jnp.asarray(
+                        [len(slot_out[b]) for b in range(B)], jnp.int32)
+                    toks = np.asarray(self._categorical_multi(
+                        logits, base_keys, produced))
+                decode_s += time.time() - t
+                steps += 1
+                progressed = True
+                for b in active:
+                    lengths[b] += 1  # the fed token is now resident
+                    if first_tok_t[b] is None:
+                        first_tok_t[b] = time.time()
+                    accept_token(b, int(toks[b]))
+            if not progressed:  # defensive: cannot happen (see paging.py)
+                raise RuntimeError(
+                    "continuous scheduler stalled: pending requests but "
+                    "no admissible slot, chunk or decode step")
+
+        self.last_alloc = alloc  # post-run pool introspection (tests/bench)
+        return GenerationResult(
+            [list(t) for t in results], prefill_s, decode_s, steps,
+            chunks_issued, [dict(r) for r in per_request])
+
+    def _sample_slot(self, logits, rid: int, produced: int):
+        """Sample ONE request's next token from (1, S, V) logits, keyed by
+        the shared (request id, token index) scheme (``_base_key``)."""
+        lg = logits[:, -1, :self.model.cfg.vocab_size].astype(jnp.float32)[0]
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(lg).astype(jnp.int32)
+        key = jax.random.fold_in(self._base_key(rid), produced)
+        return jax.random.categorical(
+            key, lg / self.cfg.temperature).astype(jnp.int32)

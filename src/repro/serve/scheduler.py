@@ -1,0 +1,103 @@
+"""Runtime request scheduling for the continuous-batching serve engine.
+
+The tuned ``schedule`` knob acts here — at admission time, not as a
+surrogate fiction:
+
+* ``fifo``       — requests enter freed decode slots in arrival order.
+* ``sjf``        — shortest-job-first by prompt length (tie: arrival
+                   order), trimming mean latency under mixed lengths.
+* ``interleave`` — fifo admission, but prefill is issued one
+                   ``prefill_chunk`` at a time *between* decode steps, so
+                   a long prompt never stalls slots that are decoding.
+
+The scheduler is deliberately engine-agnostic pure Python: it owns the
+pending queue and the admission policy; slot/page state stays in the
+engine.  ``admission_order`` exposes the policy as a plain function the
+calibration tests use to pin the ordering the analytic surrogate's
+schedule terms model (``repro.serve.space`` derives those terms in closed
+form; the rank-agreement tests are what keep the two honest).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+__all__ = ["SCHEDULES", "Request", "SlotScheduler", "admission_order"]
+
+SCHEDULES = ("fifo", "sjf", "interleave")
+
+
+@dataclass
+class Request:
+    """One generation request as the scheduler sees it."""
+
+    rid: int                  # caller-side index (results keep this order)
+    prompt: Sequence[int]
+    max_new: int
+    frontend_embeds: Optional[Any] = None  # (1, n_tok, dim) or None
+    arrival: int = 0          # submission order (fifo/tie-break key)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_tokens(self) -> int:
+        """Worst-case KV footprint: the admission reservation size."""
+        return self.prompt_len + self.max_new
+
+
+def admission_order(policy: str, requests: Sequence[Request]) -> List[Request]:
+    """The order the policy would admit ``requests`` given free slots.
+
+    ``interleave`` admits fifo — its difference is prefill *timing*, not
+    order.  The policy as a plain function, for tests pinning the
+    ordering the surrogate's schedule terms assume.
+    """
+    if policy not in SCHEDULES:
+        raise ValueError(f"unknown schedule {policy!r}; have {SCHEDULES}")
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    if policy == "sjf":
+        reqs.sort(key=lambda r: (r.prompt_len, r.arrival))
+    return reqs
+
+
+@dataclass
+class SlotScheduler:
+    """Pending-queue + admission policy for a fixed set of decode slots."""
+
+    policy: str
+    slots: int
+    _pending: List[Request] = field(default_factory=list)
+    _arrivals: int = 0
+
+    def __post_init__(self):
+        if self.policy not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.policy!r}; "
+                             f"have {SCHEDULES}")
+        if self.slots < 1:
+            raise ValueError("need at least one decode slot")
+
+    @property
+    def interleave_prefill(self) -> bool:
+        """Whether prefill chunks are spread across decode steps."""
+        return self.policy == "interleave"
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            r.arrival = self._arrivals
+            self._arrivals += 1
+            self._pending.append(r)
+        self._pending = admission_order(self.policy, self._pending)
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._pending)
+
+    def peek(self) -> Optional[Request]:
+        """The request the policy would admit next (None when drained)."""
+        return self._pending[0] if self._pending else None
+
+    def pop(self) -> Request:
+        """Admit the head request (call after its resources are secured)."""
+        return self._pending.pop(0)

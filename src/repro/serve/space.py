@@ -3,11 +3,11 @@
 ``serve_knob_space`` exposes the engine's config surface — batch slots,
 prefill chunk, KV-cache pages, scheduling policy — to the ordinary tuner
 stack, and ``apply_serve_knobs`` maps a tuned config back onto a
-``ServeConfig``.  ``batch_slots``, the KV-page capacity and
-``prefill_chunk`` (runtime chunked prefill) act in the engine at runtime;
-``schedule`` is validated, modelled by the surrogate below, and gets its
-runtime wiring with continuous batching (see the ``ServeConfig`` field
-notes).
+``ServeConfig``.  Every knob acts in the engine at runtime: ``max_batch``
+sizes the decode slots, ``prefill_chunk`` is the chunked-prefill split
+(and the interleave quantum), ``kv_cache_pages`` is the paged allocator's
+pool (residency bound), and ``schedule`` is the continuous runtime's
+admission policy (``repro.serve.scheduler``).
 
 The rest of the module is the CPU-side **co-deployment surrogate** behind
 ``python -m repro.launch.tune --joint``, ``benchmarks/cotune_bench.py`` and
@@ -46,6 +46,9 @@ from repro.core.params import Config, EnumParam, IntParam, ParameterSpace
 from repro.core.surrogates import Surrogate
 from repro.core.tuner import PerfMetric
 
+from .paging import PAGE_TOKENS
+from .scheduler import SCHEDULES
+
 __all__ = [
     "PAGE_TOKENS",
     "SCHEDULES",
@@ -61,8 +64,8 @@ __all__ = [
     "make_live_cotune_sut",
 ]
 
-PAGE_TOKENS = 16  # KV-cache page granularity (tokens per page)
-SCHEDULES = ("fifo", "sjf", "interleave")
+# PAGE_TOKENS / SCHEDULES are defined by the runtime modules (paging /
+# scheduler, both numpy-only) and re-exported here for the tuning stack.
 
 
 def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
@@ -92,10 +95,11 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
         # prefill split size: scheduler granularity vs per-chunk overhead
         EnumParam("prefill_chunk", chunk_choices,
                   chunk_choices[len(chunk_choices) // 2]),
-        # KV capacity in PAGE_TOKENS-token pages (must cover batch x seq)
+        # KV pool in PAGE_TOKENS-token pages (paged layout: residency
+        # bound; dense layout: must cover batch x seq)
         IntParam("kv_cache_pages", page_per_seq, max_slots * page_per_seq,
                  default=default_slots * page_per_seq, log=True),
-        # wave admission order
+        # continuous-runtime admission order (scheduler.py)
         EnumParam("schedule", SCHEDULES, "fifo"),
     ])
 
@@ -105,16 +109,23 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
     tuning path itself never needs jax).
 
     The tuned page count was chosen for the *tuning* serving window; the
-    deployment's ``max_seq`` may differ (and the tuner legitimately
-    explores undersized caches, which it scores as thrash).  Pages are
-    therefore raised to the floor the deployed batch actually requires, so
-    a persisted winner always produces a constructible config.
+    deployment's ``max_seq`` may differ.  Pages are raised to the floor a
+    constructible config requires — which is layout-aware: the paged
+    continuous runtime only needs ONE max_seq request (+ scratch group)
+    resident, so the tuner legitimately explores small pools (scored as
+    low occupancy by the real engine); the dense layouts allocate the
+    full ``slots × max_seq`` footprint, so the floor covers it.
     """
     from .engine import ServeConfig
 
     base = base or ServeConfig()
     slots = int(config["max_batch"])
-    min_pages = -(-slots * base.max_seq // PAGE_TOKENS)
+    if base.runtime == "continuous" and base.kv_layout == "paged":
+        from .paging import min_pages_for
+
+        min_pages = min_pages_for(base.max_seq, base.kv_page_block)
+    else:
+        min_pages = -(-slots * base.max_seq // PAGE_TOKENS)
     return replace(
         base,
         batch_slots=slots,
@@ -129,7 +140,14 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class CotuneParams:
-    """Model shape + serving workload behind the co-deployment surrogate."""
+    """Model shape + serving workload behind the co-deployment surrogate.
+
+    The schedule/paging terms are calibrated against the CONTINUOUS
+    runtime (slot-level admission, reservation-based paged allocator) —
+    see ``coupled_serve_metrics`` for the derivation and
+    ``tests/test_continuous_batching.py`` for the rank-agreement pin
+    against the real engine.
+    """
 
     heads: int = 16
     kv_heads: int = 4
@@ -138,13 +156,18 @@ class CotuneParams:
     max_seq: int = 2048
     prompt_len: int = 512
     gen_len: int = 64
+    n_requests: int = 64         # queued workload depth behind the SLA
+    prompt_spread: float = 0.35  # relative prompt-length variation (sjf win)
     dtype: str = "float32"
-    sla_s: float = 0.55          # per-request latency SLA
+    sla_s: float = 0.55          # mean per-request latency SLA
     sla_penalty: float = 2.0     # soft-penalty exponent past the SLA
     weight_stream_s: float = 2e-3   # weights read once per decode step
     per_token_s: float = 5e-5       # non-attention compute per token
+    slot_dispatch_s: float = 2e-5   # per-slot decode dispatch state, even idle
     prefill_tok_s: float = 2e-6
     prefill_chunk_overhead_s: float = 1e-3
+    interleave_step_factor: float = 1.03  # mixed chunk+decode dispatch cost
+    sjf_latency_gain: float = 0.3   # mean-latency win per unit of spread
     page_table_s: float = 2e-8      # per page per step (table walk)
     slot_vmem_bytes: int = 460 * 1024  # engine dispatch state per slot
     kv_buffer_factor: int = 4          # double-buffered k and v tiles
@@ -194,39 +217,67 @@ def _attn_step_seconds(kernel_cfg: Config, batch: int,
 
 def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
                           p: CotuneParams) -> PerfMetric:
-    """End-to-end serve throughput (tokens/s) for one co-deployment config.
+    """End-to-end serve throughput (tokens/s) for one co-deployment config,
+    derived from the CONTINUOUS runtime's actual semantics:
 
-    value = decode throughput under the latency SLA (soft penalty past it);
-    metrics carry the raw throughput, per-request latency and the step
-    breakdown.  Deterministic, so batched/sequential tuner parity is exact.
+    * **Paging is a residency bound, not a thrash factor**: the engine
+      reserves ``ceil((prompt+gen)/PAGE_TOKENS)`` page groups at admission
+      and frees them at completion, with one group held back as scratch —
+      so the resident concurrency is ``C = min(max_batch,
+      (pages-1) // ceil((prompt+gen)/PAGE_TOKENS))``, the same
+      group-granular arithmetic ``PageAllocator.try_alloc`` enforces.
+      Slots beyond the page bound still cost dispatch (masked decode
+      lanes ride every step).
+    * **fifo/sjf** stall the decode loop for each admission's prefill
+      (chunks run back-to-back at admission), so prefill is paid ``C``
+      times per decode cycle: ``T = C·g / (g·step + C·prefill)``.
+    * **interleave** issues one prefill chunk per loop iteration between
+      decode steps — prefill amortizes once per request, each mixed
+      iteration slightly dearer: ``T = C·g / (g·step·factor + prefill)``.
+    * **sjf** keeps fifo's throughput but trims MEAN latency in
+      proportion to the workload's prompt-length spread (short jobs exit
+      first); latency counts queue wait: ``(R+C)/(2C)`` service times for
+      an ``R``-deep queue.
+
+    value = throughput under the mean-latency SLA (soft penalty past it);
+    metrics carry the raw throughput and the step breakdown.
+    Deterministic, so batched/sequential tuner parity is exact.
     """
     B = int(serve_cfg["max_batch"])
     chunk = int(serve_cfg["prefill_chunk"])
     pages = int(serve_cfg["kv_cache_pages"])
     schedule = str(serve_cfg["schedule"])
 
-    attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, B, p)
-    step_s = (p.weight_stream_s + B * p.per_token_s + attn_s
-              + pages * p.page_table_s)
+    # reservation-based residency: group-granular, minus the scratch
+    # group — the allocator's exact admission arithmetic (ppb=1 pools;
+    # serve_knob_space does not expose the group-size knob)
+    groups_per_req = -(-(p.prompt_len + p.gen_len) // PAGE_TOKENS)
+    c_pages = max(1, (pages - 1) // groups_per_req)
+    C = max(1, min(B, c_pages, p.n_requests))
+
+    attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, C, p)
+    step_s = (p.weight_stream_s + C * p.per_token_s + attn_s
+              + B * p.slot_dispatch_s + pages * p.page_table_s)
 
     # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead
     chunk = min(chunk, p.prompt_len)
     n_chunks = math.ceil(p.prompt_len / chunk)
     prefill_s = n_chunks * (p.prefill_chunk_overhead_s
                             + chunk * p.prefill_tok_s)
-    if schedule == "interleave":  # prefill overlapped with decode
-        prefill_s *= 0.4
-        step_s *= 1.03
 
-    # KV pages must cover the live batch; undersizing thrashes on eviction
-    needed = B * p.max_seq
-    capacity = pages * PAGE_TOKENS
-    util = min(1.0, capacity / needed) ** 2
+    g = p.gen_len
+    if schedule == "interleave":
+        denom = g * step_s * p.interleave_step_factor + prefill_s
+    else:
+        denom = g * step_s + C * prefill_s
+    tput = C * g / denom
 
-    tput = B * p.gen_len * util / (prefill_s + p.gen_len * step_s)
-    latency = prefill_s + p.gen_len * step_s
-    if schedule == "sjf":  # shortest-job-first trims mean request latency
-        latency *= 0.9
+    # mean latency: service at residency C + queue wait behind R requests
+    service = prefill_s + g * step_s
+    R = max(p.n_requests, C)
+    latency = service * (R + C) / (2.0 * C)
+    if schedule == "sjf":  # short jobs exit first under mixed lengths
+        latency *= 1.0 - p.sjf_latency_gain * p.prompt_spread
 
     value = tput
     if latency > p.sla_s > 0:
@@ -235,7 +286,8 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
         value=float(value), higher_is_better=True,
         metrics={"raw_throughput": float(tput), "latency_s": float(latency),
                  "step_s": float(step_s), "attn_s": float(attn_s),
-                 "prefill_s": float(prefill_s), "kv_util": float(util),
+                 "prefill_s": float(prefill_s),
+                 "resident": float(C), "kv_util": float(C) / float(B),
                  "sla_met": bool(latency <= p.sla_s)})
 
 
@@ -439,7 +491,11 @@ def make_live_cotune_sut(model_cfg, *, max_seq: int = 128,
 
     model = Model(model_cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    base = ServeConfig(max_seq=max_seq)
+    # paged continuous runtime: schedule AND kv_cache_pages act in the
+    # engine being wall-clocked, so the live joint mode really tunes the
+    # scheduler x pager x kernel interaction (stacks without continuous
+    # support fall back to the wave loop inside the engine)
+    base = ServeConfig(max_seq=max_seq, kv_layout="paged")
     serve = LiveServeSUT(model, params, base=base, prompt_len=prompt_len,
                          gen_len=gen_len, n_requests=n_requests,
                          warmup=warmup, repeats=repeats, seed=seed,

@@ -140,16 +140,19 @@ class TestKernelThreading:
                   autotune.backend_name(),
                   {"block_q": 16, "block_kv": 32}, 1.0)
 
+        # dim_semantics rides along (builtin default when never tuned)
         resolved = ops._resolve("rmsnorm", {"ROWS": 8, "D": 32},
                                 "float32", {"block_rows": None})
-        assert resolved == {"block_rows": 8}
+        assert resolved == {"block_rows": 8, "dim_semantics": "parallel"}
         resolved = ops._resolve("flash_attention", dims, "float32",
                                 {"block_q": None, "block_kv": None})
-        assert resolved == {"block_q": 16, "block_kv": 32}
+        assert resolved == {"block_q": 16, "block_kv": 32,
+                            "dim_semantics": "parallel"}
         # explicit overrides always win over the cache
         resolved = ops._resolve("flash_attention", dims, "float32",
                                 {"block_q": 64, "block_kv": None})
-        assert resolved == {"block_q": 64, "block_kv": 32}
+        assert resolved == {"block_q": 64, "block_kv": 32,
+                            "dim_semantics": "parallel"}
 
         rng = np.random.default_rng(0)
         q = jnp.asarray(rng.normal(size=(1, 64, 2, 16)), jnp.float32)
@@ -219,7 +222,8 @@ class TestKVSeqLenInSignature:
                   1.0)
         hit = ops._resolve("flash_attention", self_attn, "float32",
                            {"block_q": None, "block_kv": None})
-        assert hit == {"block_q": 16, "block_kv": 16}
+        assert hit == {"block_q": 16, "block_kv": 16,
+                       "dim_semantics": "parallel"}
         # cache-prefill shape (same S, longer SK) must NOT inherit it;
         # it falls back to the builtin defaults
         prefill = dict(self_attn, SK=128)

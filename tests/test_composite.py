@@ -285,11 +285,14 @@ class TestCotuneSurrogate:
         assert m1.value == m2.value
 
     def test_joint_beats_independent_at_equal_budget(self):
-        """The tentpole claim, in miniature (single seed, small budget)."""
+        """The tentpole claim, in miniature (single seed, the benchmark
+        budget — the continuous-runtime recalibration flattened the
+        surrogate's optimum, so starved budgets are coin-flips between
+        arms; the 3-seed mean at this budget is the CI gate)."""
         from repro.autotune.sut import KernelSUT
 
         p = CotuneParams()
-        budget, seed = 60, 0
+        budget, seed = 96, 0
         half = budget // 2
         krep = Tuner(KernelSUT("decode_attention", p.decode_dims(8),
                                dtype=p.dtype, mode="model").space(),

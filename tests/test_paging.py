@@ -1,0 +1,131 @@
+"""Paged KV allocator + runtime scheduler invariants (no jax needed)."""
+import pytest
+
+from repro.serve.paging import PAGE_TOKENS, OversubscriptionError, PageAllocator
+from repro.serve.scheduler import Request, SlotScheduler, admission_order
+
+
+def _reqs(lens, max_new=4):
+    return [Request(i, list(range(1, n + 1)), max_new) for i, n in
+            enumerate(lens)]
+
+
+class TestPageAllocator:
+    def test_alloc_release_balance(self):
+        a = PageAllocator(n_pages=16, pages_per_group=1)
+        assert a.usable_groups == 15
+        g1 = a.try_alloc(0, 40)  # 3 pages
+        g2 = a.try_alloc(1, 16)  # 1 page
+        assert len(g1) == 3 and len(g2) == 1
+        assert a.groups_in_use == 4
+        assert not (set(g1) & set(g2))
+        assert PageAllocator.SCRATCH_GROUP not in g1 + g2
+        a.check_balanced()
+        a.release(0)
+        a.release(1)
+        assert a.groups_in_use == 0
+        a.check_balanced()
+
+    def test_grouped_pages(self):
+        a = PageAllocator(n_pages=16, pages_per_group=4)
+        assert a.group_tokens == 4 * PAGE_TOKENS
+        assert a.usable_groups == 3  # 4 groups minus scratch
+        assert len(a.try_alloc(0, 65)) == 2  # 65 tokens -> 2 x 64-token groups
+
+    def test_temporarily_full_returns_none(self):
+        a = PageAllocator(n_pages=4, pages_per_group=1)
+        assert a.try_alloc(0, 3 * PAGE_TOKENS) is not None
+        assert a.try_alloc(1, PAGE_TOKENS) is None  # full, but fits later
+        a.release(0)
+        assert a.try_alloc(1, PAGE_TOKENS) is not None
+
+    def test_oversubscription_raises(self):
+        a = PageAllocator(n_pages=4, pages_per_group=1)
+        with pytest.raises(OversubscriptionError, match="kv_cache_pages"):
+            a.try_alloc(0, 4 * PAGE_TOKENS)  # > 3 usable groups, ever
+
+    def test_double_alloc_and_unknown_release_rejected(self):
+        a = PageAllocator(n_pages=8)
+        a.try_alloc(0, 16)
+        with pytest.raises(ValueError, match="already holds"):
+            a.try_alloc(0, 16)
+        with pytest.raises(KeyError):
+            a.release(7)
+
+    def test_mixed_length_stress_no_leaks(self):
+        """Admit/release in interleaved order: every group returns home."""
+        a = PageAllocator(n_pages=32, pages_per_group=2)
+        live = {}
+        for rid, tokens in enumerate([50, 17, 200, 33, 64, 1, 129, 96]):
+            got = a.try_alloc(rid, tokens)
+            if got is None:
+                victim = next(iter(live))
+                a.release(victim)
+                live.pop(victim)
+                got = a.try_alloc(rid, tokens)
+            assert got is not None
+            live[rid] = got
+            a.check_balanced()
+            if rid % 3 == 2:
+                victim = next(iter(live))
+                a.release(victim)
+                live.pop(victim)
+                a.check_balanced()
+        for rid in list(live):
+            a.release(rid)
+        assert a.groups_in_use == 0
+        assert a.high_water > 0
+        a.check_balanced()
+
+    def test_degenerate_pools_rejected(self):
+        with pytest.raises(ValueError):
+            PageAllocator(n_pages=1)  # scratch only
+        with pytest.raises(ValueError):
+            PageAllocator(n_pages=8, pages_per_group=0)
+
+
+class TestSlotScheduler:
+    def test_fifo_preserves_arrival(self):
+        s = SlotScheduler("fifo", 2)
+        s.submit(_reqs([5, 3, 9, 1]))
+        assert [s.pop().rid for _ in range(4)] == [0, 1, 2, 3]
+
+    def test_sjf_orders_by_prompt_len_with_stable_ties(self):
+        s = SlotScheduler("sjf", 2)
+        s.submit(_reqs([5, 3, 9, 3]))
+        assert [s.pop().rid for _ in range(4)] == [1, 3, 0, 2]
+
+    def test_interleave_admits_fifo_but_flags_chunking(self):
+        s = SlotScheduler("interleave", 2)
+        assert s.interleave_prefill
+        s.submit(_reqs([5, 3]))
+        assert [s.pop().rid, s.pop().rid] == [0, 1]
+        assert not SlotScheduler("fifo", 2).interleave_prefill
+
+    def test_incremental_submission_keeps_policy_order(self):
+        s = SlotScheduler("sjf", 1)
+        s.submit(_reqs([8]))
+        s.submit([Request(1, [1, 2], 4)])
+        assert s.peek().rid == 1  # shorter prompt jumps the queue
+        assert [s.pop().rid, s.pop().rid] == [1, 0]
+        assert not s.has_pending
+
+    def test_admission_order_function(self):
+        """The plain-function view of the policy (what the surrogate's
+        schedule terms assume; rank-agreement tests pin the rest)."""
+        reqs = _reqs([4, 2, 6])
+        assert [r.rid for r in admission_order("fifo", reqs)] == [0, 1, 2]
+        assert [r.rid for r in admission_order("sjf", reqs)] == [1, 0, 2]
+        with pytest.raises(ValueError, match="unknown schedule"):
+            admission_order("lifo", reqs)
+
+    def test_bad_policy_and_slots_rejected(self):
+        with pytest.raises(ValueError, match="unknown schedule"):
+            SlotScheduler("lifo", 2)
+        with pytest.raises(ValueError):
+            SlotScheduler("fifo", 0)
+
+    def test_request_reservation_size(self):
+        r = Request(0, [1, 2, 3], 5)
+        assert r.prompt_len == 3
+        assert r.total_tokens == 8

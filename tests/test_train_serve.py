@@ -134,11 +134,17 @@ class TestServeEngine:
         assert res.tokens[0] == [probe]
         assert res.steps <= 2
 
-    def test_unequal_prompts_rejected(self, engine):
+    def test_unequal_prompts_rejected_by_wave(self, engine):
+        """The WAVE runtime keeps its equal-length contract; the default
+        continuous runtime is exactly what lifts it."""
         model, params = engine
-        eng = ServeEngine(model, params, ServeConfig(max_seq=32))
-        with pytest.raises(ValueError):
+        eng = ServeEngine(model, params, ServeConfig(max_seq=32,
+                                                     runtime="wave"))
+        with pytest.raises(ValueError, match="equal-length"):
             eng.generate([[1, 2], [1, 2, 3]], max_new_tokens=2)
+        cont = ServeEngine(model, params, ServeConfig(max_seq=32))
+        res = cont.generate([[1, 2], [1, 2, 3]], max_new_tokens=2)
+        assert [len(t) for t in res.tokens] == [2, 2]
 
     def test_throughput_metrics(self, engine):
         model, params = engine
@@ -173,10 +179,13 @@ class TestChunkedPrefill:
         model, params = engine
         assert model.supports_chunked_prefill
         prompts = self._prompts(plen)
+        # wave runtime: the historical whole-wave chunk-count contract
+        # (the continuous runtime prefills per slot; see
+        # tests/test_continuous_batching.py for its parity pins)
         whole = ServeEngine(model, params, ServeConfig(
-            max_seq=64, batch_slots=2, prefill_chunk=2048))
+            max_seq=64, batch_slots=2, prefill_chunk=2048, runtime="wave"))
         chunked = ServeEngine(model, params, ServeConfig(
-            max_seq=64, batch_slots=2, prefill_chunk=chunk))
+            max_seq=64, batch_slots=2, prefill_chunk=chunk, runtime="wave"))
         rw = whole.generate(prompts, max_new_tokens=6)
         rc = chunked.generate(prompts, max_new_tokens=6)
         assert rc.tokens == rw.tokens  # byte-identical continuations
@@ -239,7 +248,8 @@ class TestChunkedPrefill:
         m = sut.test(cfg)
         assert m.higher_is_better and m.value > 0
         assert m.metrics["latency_s"] > 0
-        assert m.metrics["prefill_chunks"] == 3
+        # continuous runtime: per-request prefill => 2 requests x 3 chunks
+        assert m.metrics["prefill_chunks"] == 6
         assert m.metrics["prefill_s"] > 0
 
     def test_train_step_sut_measures_real_step(self):
@@ -284,11 +294,11 @@ class TestChunkedPrefill:
         fe = rng.normal(size=(2, cfg.frontend_tokens,
                               cfg.frontend_dim)).astype(np.float32)
         chunked = ServeEngine(model, params, ServeConfig(
-            max_seq=32, batch_slots=2, prefill_chunk=4))
+            max_seq=32, batch_slots=2, prefill_chunk=4, runtime="wave"))
         with pytest.raises(ValueError, match="frontend"):
             chunked.generate(prompts, max_new_tokens=2)
         whole = ServeEngine(model, params, ServeConfig(
-            max_seq=32, batch_slots=2, prefill_chunk=2048))
+            max_seq=32, batch_slots=2, prefill_chunk=2048, runtime="wave"))
         with pytest.raises(ValueError, match="frontend"):
             whole.generate(prompts, max_new_tokens=2)
         rw = whole.generate(prompts, max_new_tokens=3, frontend_embeds=fe)
