@@ -11,8 +11,16 @@ per-request latency rides along, as does the schedule-parity check (the
 tokens each request gets must be bit-identical across fifo/sjf/interleave
 and vs the wave baseline).
 
+A second, *oversubscribed* workload pins the page-policy claim: at an
+equal (small) ``kv_cache_pages`` pool, ``on_demand`` admission (prompt-
+size reservations grown per step, recompute preemption on exhaustion)
+must complete strictly more decode tokens/sec than worst-case ``reserve``
+admission — with bit-identical per-request tokens and a balanced
+allocator at exit.
+
 ``BENCH_serve.json`` is the cross-PR perf artifact; ``--check`` exits
-non-zero if continuous+paged underperforms wave at equal engine config —
+non-zero if continuous+paged underperforms wave at equal engine config,
+or if ``on_demand`` loses to ``reserve`` on the oversubscribed arm —
 wired into CI.
 """
 from __future__ import annotations
@@ -37,6 +45,10 @@ SLOTS = 4
 MAX_SEQ = 48
 PREFILL_CHUNK = 8
 SEED = 0
+# oversubscribed arm: decode-heavy requests (worst-case ~2 groups each at
+# PAGE_TOKENS=16) against a pool of 5 usable groups — reserve admission
+# can hold ~2 requests resident, on_demand packs all 4 slots and preempts
+OVERSUB_POOL = 6
 
 
 def _tiny_model():
@@ -62,23 +74,42 @@ def _workload(seed: int = SEED):
     return prompts, [int(g) for g in gens]
 
 
-def _engine(model, params, runtime: str, layout: str, schedule: str):
+def _oversub_workload(seed: int = SEED):
+    """Decode-heavy mixed lengths: generations dominate the footprint, so
+    worst-case reservations strand most of what they hold."""
+    rng = np.random.default_rng(seed + 1)
+    plens = rng.integers(3, 9, size=N_REQUESTS)
+    gens = rng.integers(10, 21, size=N_REQUESTS)
+    prompts = [rng.integers(1, 512, size=n).tolist() for n in plens]
+    return prompts, [int(g) for g in gens]
+
+
+def _engine(model, params, runtime: str, layout: str, schedule: str,
+            page_policy: str = "reserve", pages=None):
     from repro.serve import ServeConfig, ServeEngine
 
     return ServeEngine(model, params, ServeConfig(
         max_seq=MAX_SEQ, batch_slots=SLOTS, prefill_chunk=PREFILL_CHUNK,
-        runtime=runtime, kv_layout=layout, schedule=schedule))
+        runtime=runtime, kv_layout=layout, schedule=schedule,
+        page_policy=page_policy, kv_cache_pages=pages))
 
 
 def _run_continuous(model, params, layout: str, schedule: str,
-                    prompts, gens) -> Dict[str, Any]:
-    eng = _engine(model, params, "continuous", layout, schedule)
+                    prompts, gens, page_policy: str = "reserve",
+                    pages=None) -> Dict[str, Any]:
+    eng = _engine(model, params, "continuous", layout, schedule,
+                  page_policy, pages)
     eng.generate(prompts, gens)  # warmup: absorb jit specialization
     t0 = time.time()
     res = eng.generate(prompts, gens)
     wall = time.time() - t0
-    return _arm_stats(res.tokens, res, wall,
-                      [r["latency_s"] for r in res.per_request])
+    stats = _arm_stats(res.tokens, res, wall,
+                       [r["latency_s"] for r in res.per_request])
+    stats["preemptions"] = int(res.preemptions)
+    if eng.last_alloc is not None:
+        eng.last_alloc.check_balanced()
+        stats["leaked_groups"] = int(eng.last_alloc.groups_in_use)
+    return stats
 
 
 def _run_wave(model, params, prompts, gens) -> Dict[str, Any]:
@@ -148,6 +179,17 @@ def bench() -> Dict[str, Any]:
     ref = arms["wave_fifo"]["tokens"]
     parity = all(arms[a]["tokens"] == ref for a in arms)
 
+    # ---- oversubscribed page-policy arm: equal (small) pool, the
+    # reservation policy is the only difference -------------------------
+    os_prompts, os_gens = _oversub_workload()
+    oversub: Dict[str, Dict[str, Any]] = {}
+    for policy in ("reserve", "on_demand"):
+        oversub[policy] = _run_continuous(
+            model, params, "paged", "fifo", os_prompts, os_gens,
+            page_policy=policy, pages=OVERSUB_POOL)
+    oversub_parity = oversub["reserve"]["tokens"] == \
+        oversub["on_demand"]["tokens"]
+
     headline = arms["continuous_paged_fifo"]
     baseline = arms["wave_fifo"]
     out = {
@@ -162,6 +204,17 @@ def bench() -> Dict[str, Any]:
                                         / baseline["decode_tok_per_s"]),
         "continuous_over_wave_wall": (headline["wall_tok_per_s"]
                                       / baseline["wall_tok_per_s"]),
+        "oversub_workload": {"kv_cache_pages": OVERSUB_POOL,
+                             "prompt_lens": [len(p) for p in os_prompts],
+                             "gen_lens": os_gens},
+        "oversub_arms": {a: {k: v for k, v in s.items() if k != "tokens"}
+                         for a, s in oversub.items()},
+        "oversub_token_parity": bool(oversub_parity),
+        "on_demand_over_reserve_decode": (
+            oversub["on_demand"]["decode_tok_per_s"]
+            / oversub["reserve"]["decode_tok_per_s"]),
+        "oversub_leaked_groups": (oversub["reserve"]["leaked_groups"]
+                                  + oversub["on_demand"]["leaked_groups"]),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
@@ -184,6 +237,19 @@ def rows_from(result: Dict[str, Any]) -> List[Row]:
                  f"({result['continuous_over_wave_wall']:.2f}x wall)"))
     rows.append(("serve_token_parity", 0.0,
                  "ok" if result["token_parity"] else "MISMATCH"))
+    for policy in ("reserve", "on_demand"):
+        s = result["oversub_arms"][policy]
+        rows.append((f"serve_oversub_{policy}", 0.0,
+                     f"{s['decode_tok_per_s']:.0f} tok/s "
+                     f"steps={s['steps']} preempt={s['preemptions']} "
+                     f"occ={s['occupancy']:.2f}"))
+    rows.append(("serve_on_demand_over_reserve", 0.0,
+                 f"{result['on_demand_over_reserve_decode']:.2f}x decode "
+                 f"at {result['oversub_workload']['kv_cache_pages']} pages"))
+    rows.append(("serve_oversub_parity", 0.0,
+                 "ok" if (result["oversub_token_parity"]
+                          and result["oversub_leaked_groups"] == 0)
+                 else "MISMATCH"))
     return rows
 
 
@@ -213,8 +279,38 @@ def main(argv=None) -> int:
                   f"{ratio:.2f}x the wave baseline (< 1.0x)",
                   file=sys.stderr)
             return 1
+        if not result["oversub_token_parity"]:
+            print("CHECK FAILED: per-request tokens differ across page "
+                  "policies on the oversubscribed workload",
+                  file=sys.stderr)
+            return 1
+        if result["oversub_leaked_groups"]:
+            print("CHECK FAILED: page groups leaked on the oversubscribed "
+                  "workload", file=sys.stderr)
+            return 1
+        # the noise-free packing signal first: fewer batched decode steps
+        # at equal tokens is deterministic, unlike CPU wall-clock
+        od_steps = result["oversub_arms"]["on_demand"]["steps"]
+        rs_steps = result["oversub_arms"]["reserve"]["steps"]
+        if od_steps >= rs_steps:
+            print(f"CHECK FAILED: on_demand took {od_steps} decode steps "
+                  f"vs reserve's {rs_steps} at equal kv_cache_pages "
+                  "(packing gained nothing)", file=sys.stderr)
+            return 1
+        od_ratio = result["on_demand_over_reserve_decode"]
+        if od_ratio <= 1.0:
+            print(f"CHECK FAILED: on_demand+preemption decode throughput "
+                  f"{od_ratio:.2f}x reserve at equal kv_cache_pages "
+                  "(must be > 1.0x)", file=sys.stderr)
+            return 1
+        if result["oversub_arms"]["on_demand"]["preemptions"] < 1:
+            print("CHECK FAILED: oversubscribed arm issued no recompute "
+                  "preemptions (the pool is not actually oversubscribed)",
+                  file=sys.stderr)
+            return 1
         print(f"check OK: continuous+paged = {ratio:.2f}x wave decode "
-              "throughput, token parity holds")
+              f"throughput; on_demand = {od_ratio:.2f}x reserve at "
+              f"{OVERSUB_POOL} pages; token parity holds, pool balanced")
     return 0
 
 

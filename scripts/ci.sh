@@ -17,9 +17,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
-# Post-PR4 baseline: CI fails if the collected count ever drops below it
+# Post-PR5 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=414
+MIN_COLLECTED=437
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -113,7 +113,49 @@ for layout in ("paged", "dense"):
 print("continuous smoke OK (6 runtime combos, identical tokens, no leaks)")
 EOF
 
-echo "=== check: continuous+paged >= wave at equal engine config ==="
+echo "=== smoke: oversubscription + recompute preemption (~20s) ==="
+# Decode-heavy workload on a pool too small for worst-case reservations:
+# on_demand MUST preempt (recompute), tokens must match the reserve run
+# bit-for-bit, and no page group may outlive the run.
+timeout 120 python - <<'EOF'
+import jax, numpy as np
+from repro.configs import ModelConfig
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = ModelConfig(
+    name="ci-tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", vocab_pad_multiple=64,
+    rope_theta=10_000.0)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(1)
+prompts = [rng.integers(1, 512, size=n).tolist()
+           for n in rng.integers(3, 9, size=8)]
+gens = [int(g) for g in rng.integers(10, 17, size=8)]
+out = {}
+for policy in ("reserve", "on_demand"):
+    eng = ServeEngine(model, params, ServeConfig(
+        max_seq=32, batch_slots=3, runtime="continuous", kv_layout="paged",
+        kv_cache_pages=4, page_policy=policy, prefill_chunk=4))
+    res = eng.generate(prompts, gens)
+    assert eng.last_alloc.groups_in_use == 0, f"{policy}: page leak"
+    eng.last_alloc.check_balanced()
+    out[policy] = res
+assert out["on_demand"].preemptions > 0, "tiny pool never preempted"
+assert out["reserve"].preemptions == 0
+assert out["on_demand"].tokens == out["reserve"].tokens, \
+    "preemption changed generated tokens"
+assert out["on_demand"].steps < out["reserve"].steps, \
+    "on_demand packing did not reduce decode steps"
+print(f"oversubscription smoke OK ({out['on_demand'].preemptions} "
+      f"preemptions, identical tokens, "
+      f"{out['on_demand'].steps} vs {out['reserve'].steps} decode steps, "
+      "no leaks)")
+EOF
+
+echo "=== check: continuous+paged >= wave; on_demand >= reserve ==="
 timeout 300 python -m benchmarks.serve_bench --check
 
 echo "CI OK"

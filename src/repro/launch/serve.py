@@ -18,7 +18,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import Model
 from repro.serve import ServeConfig, ServeEngine
-from repro.serve.scheduler import SCHEDULES
+from repro.serve.scheduler import PAGE_POLICIES, SCHEDULES
 
 __all__ = ["main"]
 
@@ -40,6 +40,11 @@ def main(argv=None) -> int:
                     help="KV pool size in 16-token pages (paged layout: "
                          "bounds how many requests stay resident)")
     ap.add_argument("--schedule", choices=SCHEDULES, default="fifo")
+    ap.add_argument("--page-policy", choices=PAGE_POLICIES,
+                    default="reserve",
+                    help="paged-layout KV reservation policy: worst-case "
+                         "up-front (reserve) or prompt-only + on-demand "
+                         "growth with recompute preemption (on_demand)")
     ap.add_argument("--prefill-chunk", type=int, default=512)
     ap.add_argument("--mixed", action="store_true",
                     help="mixed-length workload: prompt lengths in "
@@ -55,7 +60,7 @@ def main(argv=None) -> int:
         batch_slots=args.batch_slots, temperature=args.temperature,
         seed=args.seed, runtime=args.runtime, kv_layout=args.kv_layout,
         kv_cache_pages=args.kv_pages, schedule=args.schedule,
-        prefill_chunk=args.prefill_chunk))
+        page_policy=args.page_policy, prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
     if args.mixed and engine._continuous:
         plens = rng.integers(2, args.prompt_len + 1, size=args.requests)
@@ -83,7 +88,8 @@ def main(argv=None) -> int:
     if getattr(engine, "last_alloc", None) is not None:
         a = engine.last_alloc
         print(f"  kv pool: {a.n_groups} groups x {a.group_tokens} tokens, "
-              f"high water {a.high_water} groups")
+              f"high water {a.high_water} groups "
+              f"[{args.page_policy}, {res.preemptions} preemptions]")
     for i, toks in enumerate(res.tokens[:3]):
         print(f"  req {i}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
     return 0

@@ -12,7 +12,7 @@ from typing import Any
 _ENGINE_NAMES = ("GenerationResult", "OversubscriptionError", "ServeConfig",
                  "ServeEngine")
 _PAGING_NAMES = ("PAGE_TOKENS", "PageAllocator")
-_SCHED_NAMES = ("Request", "SCHEDULES", "SlotScheduler")
+_SCHED_NAMES = ("PAGE_POLICIES", "Request", "SCHEDULES", "SlotScheduler")
 _SPACE_NAMES = (
     "CotuneParams",
     "LiveCotuneScalarizer",

@@ -34,7 +34,7 @@ from repro.models import Model
 
 from .paging import (PAGE_TOKENS, OversubscriptionError, PageAllocator,
                      min_pages_for)
-from .scheduler import SCHEDULES, Request, SlotScheduler
+from .scheduler import PAGE_POLICIES, SCHEDULES, Request, SlotScheduler
 
 __all__ = ["ServeConfig", "ServeEngine", "GenerationResult",
            "OversubscriptionError"]
@@ -72,6 +72,20 @@ class ServeConfig:
     # prompt first) | interleave (fifo admission, prefill chunks issued
     # between decode steps).  The wave runtime runs fifo regardless.
     schedule: str = "fifo"
+    # KV reservation policy under the paged layout (repro.serve.scheduler
+    # PAGE_POLICIES; a tuned knob — serve_knob_space exposes it):
+    #   reserve   — admission reserves the worst-case prompt+max_new
+    #               footprint; no preemption, but short generations strand
+    #               the unused reservation tail.
+    #   on_demand — admission reserves the prompt only; decode grows the
+    #               reservation group-by-group and, when the pool runs
+    #               dry, preempts the youngest request (recompute: it is
+    #               re-queued at the head and re-prefilled with its
+    #               generated tokens folded into the prompt — tokens stay
+    #               bit-identical because sampling keys on
+    #               (rid, token-index)).
+    # Dense layouts have no allocator, so the knob is inert there.
+    page_policy: str = "reserve"
     # Runtime: continuous batching (slot-level admission) or the legacy
     # equal-length wave loop.  Stacks without supports_continuous_batching
     # fall back to wave automatically.
@@ -99,6 +113,9 @@ class ServeConfig:
         if self.kv_layout not in KV_LAYOUTS:
             raise ValueError(f"unknown kv_layout {self.kv_layout!r}; "
                              f"have {KV_LAYOUTS}")
+        if self.page_policy not in PAGE_POLICIES:
+            raise ValueError(f"unknown page_policy {self.page_policy!r}; "
+                             f"have {PAGE_POLICIES}")
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if self.kv_page_block < 1:
@@ -145,8 +162,13 @@ class GenerationResult:
     # observable evidence the prefill_chunk knob acts
     prefill_chunks: int = 0
     # per-request runtime provenance (rid order == input order):
-    # {"rid", "prompt_len", "new_tokens", "latency_s", "ttft_s"}
+    # {"rid", "prompt_len", "new_tokens", "latency_s", "ttft_s",
+    #  "preemptions"}
     per_request: List[Dict[str, Any]] = field(default_factory=list)
+    # recompute preemptions issued (on_demand page policy only): each one
+    # re-queued a request whose re-prefill cost is the price of admitting
+    # on prompt-size reservations instead of worst-case ones
+    preemptions: int = 0
 
     @property
     def decode_tokens_per_sec(self) -> float:
@@ -393,6 +415,7 @@ class ServeEngine:
                     "new_tokens": len(t),
                     "latency_s": wave_done,
                     "ttft_s": wave_done - dc,
+                    "preemptions": 0,  # waves hold slots to completion
                 })
             prefill_s += pf
             decode_s += dc
@@ -523,7 +546,7 @@ class ServeEngine:
             if frontend_embeds is not None:
                 fe = np.asarray(frontend_embeds[i:i + 1])
             reqs.append(Request(i, list(p), max_new[i], fe))
-        sched = SlotScheduler(cfg.schedule, B)
+        sched = SlotScheduler(cfg.schedule, B, page_policy=cfg.page_policy)
         sched.submit(reqs)
         alloc = None
         if self._paged:
@@ -532,6 +555,7 @@ class ServeEngine:
             alloc = PageAllocator(self.pool_groups * self.group_pages,
                                   PAGE_TOKENS, self.group_pages)
             page_tables = np.zeros((B, self.max_groups), np.int32)
+        on_demand = alloc is not None and sched.on_demand
         cache = self._init_continuous_cache()
 
         # host-side slot state
@@ -546,9 +570,9 @@ class ServeEngine:
 
         results: List[Optional[List[int]]] = [None] * len(prompts)
         per_request: List[Optional[Dict[str, Any]]] = [None] * len(prompts)
-        first_tok_t: List[Optional[float]] = [None] * B
+        first_tok_t: Dict[int, float] = {}  # rid -> first-ever-token time
         prefill_s = decode_s = 0.0
-        steps = chunks_issued = 0
+        steps = chunks_issued = preemptions = 0
         t0 = time.time()
 
         def run_chunk(b: int) -> None:
@@ -574,10 +598,14 @@ class ServeEngine:
             cache = new_cache
             lengths[b] += piece_tokens.shape[1]
             chunks_issued += 1
-            if not slot_chunks[b]:  # prefill done: sample the first token
-                tok = int(np.asarray(self._sample_slot(logits, r.rid, 0)))
+            if not slot_chunks[b]:  # prefill done: sample the next token
+                # token index = tokens already carried from before a
+                # preemption (0 for fresh requests) — the (rid, index)
+                # sampling key continues exactly where it left off
+                tok = int(np.asarray(self._sample_slot(
+                    logits, r.rid, len(slot_out[b]))))
                 prefill_s += time.time() - t
-                first_tok_t[b] = time.time()
+                first_tok_t.setdefault(r.rid, time.time())
                 accept_token(b, tok)
             else:
                 logits.block_until_ready()
@@ -592,6 +620,15 @@ class ServeEngine:
             if done:
                 finish_slot(b)
 
+        def clear_slot(b: int) -> None:
+            slot_req[b] = None
+            slot_out[b] = []
+            slot_chunks[b] = []
+            lengths[b] = 0
+            next_tok[b] = 0
+            if alloc is not None:
+                page_tables[b, :] = PageAllocator.SCRATCH_GROUP
+
         def finish_slot(b: int) -> None:
             r = slot_req[b]
             now = time.time()
@@ -600,16 +637,80 @@ class ServeEngine:
                 "rid": r.rid, "prompt_len": r.prompt_len,
                 "new_tokens": len(slot_out[b]),
                 "latency_s": now - t0,
-                "ttft_s": (first_tok_t[b] or now) - t0,
+                "ttft_s": first_tok_t.get(r.rid, now) - t0,
+                "preemptions": r.preemptions,
             }
-            slot_req[b] = None
-            slot_out[b] = []
-            slot_chunks[b] = []
-            lengths[b] = 0
-            next_tok[b] = 0
             if alloc is not None:
                 alloc.release(r.rid)
-                page_tables[b, :] = PageAllocator.SCRATCH_GROUP
+            clear_slot(b)
+
+        def preempt_slot(b: int) -> None:
+            """Recompute preemption: capture the victim's generated tokens
+            into its request, release its page groups and re-queue it at
+            the head — readmission re-prefills prompt+generated and
+            continues at the same (rid, token-index) sampling keys."""
+            nonlocal preemptions
+            r = slot_req[b]
+            r.generated = list(slot_out[b])
+            r.preemptions += 1
+            preemptions += 1
+            alloc.release(r.rid)
+            clear_slot(b)
+            sched.resubmit(r)
+
+        def admit_tokens(r: Request) -> int:
+            """The admission reservation: worst-case prompt+max_new under
+            ``reserve``, the actual prefill footprint under ``on_demand``
+            (decode extends group-by-group from there)."""
+            return r.resident_tokens if on_demand else r.total_tokens
+
+        def next_admission():
+            """(request, groups) for the next admissible request, else
+            None.  Head-first in policy order; under ``sjf`` a bounded
+            bypass admits the first *fitting* pending request when the
+            head's reservation doesn't fit (no head-of-line starvation);
+            ``fifo``/``interleave`` stay strictly in order."""
+            head = sched.peek()
+            if alloc is None:
+                return sched.pop(), None
+            groups = alloc.try_alloc(head.rid, admit_tokens(head))
+            if groups is not None:
+                return sched.pop(), groups
+            if cfg.schedule != "sjf":
+                return None
+            cand = sched.pop_first_fit(
+                lambda r: alloc.fits(admit_tokens(r)))
+            if cand is None:
+                return None
+            groups = alloc.try_alloc(cand.rid, admit_tokens(cand))
+            # fits() IS try_alloc's free-space test, so this cannot be
+            # None — admitting with a stale page table would corrupt KV
+            assert groups is not None, "pop_first_fit/try_alloc disagree"
+            return cand, groups
+
+        def extend_slot(b: int) -> None:
+            """Grow slot ``b``'s reservation to cover the next decode
+            write; on pool exhaustion preempt the youngest request and
+            retry.  ``b`` itself may be the youngest and get preempted —
+            the caller re-filters ``active`` on ``slot_req`` afterwards,
+            which drops self-preempted slots from the dispatch."""
+            r = slot_req[b]
+            while True:
+                new = alloc.extend(r.rid, int(lengths[b]) + 1)
+                if new is not None:
+                    if new:
+                        grown = alloc.owned_groups(r.rid)
+                        page_tables[b, :len(grown)] = grown
+                    return
+                occupied = [bb for bb in range(B)
+                            if slot_req[bb] is not None]
+                victim = SlotScheduler.select_victim(
+                    [slot_req[bb] for bb in occupied])
+                vb = next(bb for bb in occupied
+                          if slot_req[bb] is victim)
+                preempt_slot(vb)
+                if vb == b:
+                    return
 
         def sample_key_for(b: int) -> None:
             nonlocal base_keys
@@ -617,72 +718,102 @@ class ServeEngine:
                 base_keys = base_keys.at[b].set(
                     self._base_key(slot_req[b].rid))
 
-        while sched.has_pending or any(r is not None for r in slot_req):
-            progressed = False
-            # 1. admission into freed slots, in policy order
-            for b in range(B):
-                if slot_req[b] is not None or not sched.has_pending:
-                    continue
-                head = sched.peek()
-                if alloc is not None:
-                    groups = alloc.try_alloc(head.rid, head.total_tokens)
-                    if groups is None:
-                        break  # pool full: wait for a completion
-                    page_tables[b, :] = PageAllocator.SCRATCH_GROUP
-                    page_tables[b, :len(groups)] = groups
-                sched.pop()
-                slot_req[b] = head
-                lengths[b] = 0
-                first_tok_t[b] = None
-                chunk = cfg.prefill_chunk
-                toks = np.asarray([head.prompt], np.int32)
-                slot_chunks[b] = [toks[:, s:s + chunk]
-                                  for s in range(0, toks.shape[1], chunk)]
-                slot_first_chunk[b] = True
-                sample_key_for(b)
-                progressed = True
-                if not sched.interleave_prefill:
-                    while slot_chunks[b] and slot_req[b] is not None:
-                        run_chunk(b)
-            # 2. interleave: one prefill chunk per prefilling slot per step
-            if sched.interleave_prefill:
+        def loop() -> None:
+            nonlocal cache, decode_s, steps
+            while sched.has_pending or any(r is not None for r in slot_req):
+                progressed = False
+                # 1. admission into freed slots, in policy order
                 for b in range(B):
-                    if slot_req[b] is not None and slot_chunks[b]:
-                        run_chunk(b)
-                        progressed = True
-            # 3. one batched decode step over every decoding slot
-            active = [b for b in range(B)
-                      if slot_req[b] is not None and not slot_chunks[b]]
-            if active:
-                t = time.time()
-                logits, cache = self._decode_multi(
-                    self.params, jnp.asarray(next_tok[:, None]), cache,
-                    jnp.asarray(lengths, jnp.int32),
-                    jnp.asarray(page_tables) if self._paged else None)
-                if cfg.temperature <= 0:
-                    toks = np.asarray(self._argmax_multi(logits))
-                else:
-                    produced = jnp.asarray(
-                        [len(slot_out[b]) for b in range(B)], jnp.int32)
-                    toks = np.asarray(self._categorical_multi(
-                        logits, base_keys, produced))
-                decode_s += time.time() - t
-                steps += 1
-                progressed = True
-                for b in active:
-                    lengths[b] += 1  # the fed token is now resident
-                    if first_tok_t[b] is None:
-                        first_tok_t[b] = time.time()
-                    accept_token(b, int(toks[b]))
-            if not progressed:  # defensive: cannot happen (see paging.py)
-                raise RuntimeError(
-                    "continuous scheduler stalled: pending requests but "
-                    "no admissible slot, chunk or decode step")
+                    if slot_req[b] is not None or not sched.has_pending:
+                        continue
+                    admitted = next_admission()
+                    if admitted is None:
+                        break  # pool full: wait for a release
+                    head, groups = admitted
+                    if groups is not None:
+                        page_tables[b, :] = PageAllocator.SCRATCH_GROUP
+                        page_tables[b, :len(groups)] = groups
+                    slot_req[b] = head
+                    lengths[b] = 0
+                    chunk = cfg.prefill_chunk
+                    # a preempted request re-prefills its prompt plus the
+                    # tokens it had generated (exact chunked prefill ⇒
+                    # identical cache state to the uninterrupted run)
+                    toks = np.asarray(
+                        [list(head.prompt) + list(head.generated)],
+                        np.int32)
+                    slot_out[b] = list(head.generated)
+                    slot_chunks[b] = [toks[:, s:s + chunk]
+                                      for s in range(0, toks.shape[1],
+                                                     chunk)]
+                    slot_first_chunk[b] = True
+                    sample_key_for(b)
+                    progressed = True
+                    if not sched.interleave_prefill:
+                        while slot_chunks[b] and slot_req[b] is not None:
+                            run_chunk(b)
+                # 2. interleave: one prefill chunk per prefilling slot
+                if sched.interleave_prefill:
+                    for b in range(B):
+                        if slot_req[b] is not None and slot_chunks[b]:
+                            run_chunk(b)
+                            progressed = True
+                # 3. one batched decode step over every decoding slot —
+                # under on_demand, first grow reservations to cover the
+                # step's KV write, preempting victims on pool exhaustion
+                active = [b for b in range(B)
+                          if slot_req[b] is not None and not slot_chunks[b]]
+                if on_demand:
+                    for b in active:
+                        if slot_req[b] is None:
+                            continue  # preempted as a victim this pass
+                        extend_slot(b)
+                    active = [b for b in active
+                              if slot_req[b] is not None
+                              and not slot_chunks[b]]
+                if active:
+                    t = time.time()
+                    logits, new_cache = self._decode_multi(
+                        self.params, jnp.asarray(next_tok[:, None]), cache,
+                        jnp.asarray(lengths, jnp.int32),
+                        jnp.asarray(page_tables) if self._paged else None)
+                    if cfg.temperature <= 0:
+                        toks = np.asarray(self._argmax_multi(logits))
+                    else:
+                        produced = jnp.asarray(
+                            [len(slot_out[b]) for b in range(B)], jnp.int32)
+                        toks = np.asarray(self._categorical_multi(
+                            logits, base_keys, produced))
+                    cache = new_cache
+                    decode_s += time.time() - t
+                    steps += 1
+                    progressed = True
+                    for b in active:
+                        lengths[b] += 1  # the fed token is now resident
+                        first_tok_t.setdefault(slot_req[b].rid, time.time())
+                        accept_token(b, int(toks[b]))
+                if not progressed:  # defensive: cannot happen (paging.py)
+                    raise RuntimeError(
+                        "continuous scheduler stalled: pending requests "
+                        "but no admissible slot, chunk or decode step")
 
-        self.last_alloc = alloc  # post-run pool introspection (tests/bench)
+        try:
+            loop()
+        except BaseException:
+            # error-path unwind: no page group may outlive the generation
+            # (a stranded reservation would silently shrink every later
+            # run's pool); tests assert check_balanced() after this
+            if alloc is not None:
+                alloc.release_all()
+            raise
+        finally:
+            # post-run pool introspection (tests/bench), even on unwind
+            self.last_alloc = alloc
+
         return GenerationResult(
             [list(t) for t in results], prefill_s, decode_s, steps,
-            chunks_issued, [dict(r) for r in per_request])
+            chunks_issued, [dict(r) for r in per_request],
+            preemptions=preemptions)
 
     def _sample_slot(self, logits, rid: int, produced: int):
         """Sample ONE request's next token from (1, S, V) logits, keyed by

@@ -48,6 +48,12 @@ class PageAllocator:
     never fit — even with the pool empty — raises
     ``OversubscriptionError`` instead, so impossible workloads fail
     loudly rather than deadlocking admission.
+
+    ``extend`` is the on-demand growth path (``page_policy="on_demand"``):
+    admission reserves only the prompt footprint and decode grows the
+    reservation group-by-group; a ``None`` from ``extend`` is the signal
+    to preempt a victim (release its groups, re-queue it for recompute)
+    and retry.
     """
 
     SCRATCH_GROUP = 0
@@ -92,6 +98,12 @@ class PageAllocator:
     def groups_for(self, n_tokens: int) -> int:
         return -(-max(int(n_tokens), 1) // self.group_tokens)
 
+    def fits(self, n_tokens: int) -> bool:
+        """Would ``try_alloc(_, n_tokens)`` succeed right now?  The ONE
+        free-space test (admission bypass scans use it, so they can never
+        drift from the allocation path's arithmetic)."""
+        return self.groups_for(n_tokens) <= len(self._free)
+
     # ------------------------------------------------------------------
     def try_alloc(self, owner: int, n_tokens: int) -> Optional[List[int]]:
         """Reserve groups covering ``n_tokens`` for ``owner``.
@@ -109,11 +121,51 @@ class PageAllocator:
                 f"{self.group_tokens}) but the pool holds only "
                 f"{self.usable_tokens} usable tokens "
                 f"({self.usable_groups} groups) — raise kv_cache_pages")
-        if need > len(self._free):
+        if not self.fits(n_tokens):
             return None
         groups = [self._free.pop() for _ in range(need)]
         self._owned[owner] = groups
         self.high_water = max(self.high_water, self.groups_in_use)
+        return list(groups)
+
+    def extend(self, owner: int, n_tokens: int) -> Optional[List[int]]:
+        """Grow ``owner``'s reservation to cover ``n_tokens`` total tokens.
+
+        The on-demand growth path: a request admitted on a prompt-sized
+        reservation calls this as decode crosses group boundaries.  Returns
+        the *newly added* group ids (``[]`` when the current reservation
+        already covers ``n_tokens``), ``None`` when the pool is temporarily
+        full (the caller preempts a victim and retries), and raises
+        ``OversubscriptionError`` when ``n_tokens`` exceeds the pool's
+        total usable capacity — which, like ``try_alloc``'s, can only
+        happen on pools below the one-``max_seq``-request floor the engine
+        config already enforces.
+        """
+        groups = self._owned.get(owner)
+        if groups is None:
+            raise KeyError(f"owner {owner} holds no pages")
+        need = self.groups_for(n_tokens)
+        if need > self.usable_groups:
+            raise OversubscriptionError(
+                f"request grew to {n_tokens} KV tokens ({need} groups of "
+                f"{self.group_tokens}) but the pool holds only "
+                f"{self.usable_tokens} usable tokens "
+                f"({self.usable_groups} groups) — raise kv_cache_pages")
+        grow = need - len(groups)
+        if grow <= 0:
+            return []
+        if grow > len(self._free):
+            return None
+        new = [self._free.pop() for _ in range(grow)]
+        groups.extend(new)
+        self.high_water = max(self.high_water, self.groups_in_use)
+        return list(new)
+
+    def owned_groups(self, owner: int) -> List[int]:
+        """The groups ``owner`` currently holds, in logical order."""
+        groups = self._owned.get(owner)
+        if groups is None:
+            raise KeyError(f"owner {owner} holds no pages")
         return list(groups)
 
     def release(self, owner: int) -> None:
@@ -122,6 +174,15 @@ class PageAllocator:
         if groups is None:
             raise KeyError(f"owner {owner} holds no pages")
         self._free.extend(reversed(groups))
+
+    def release_all(self) -> int:
+        """Release every live reservation (engine unwind path: an exception
+        mid-generation must not strand page groups).  Returns the number of
+        owners released."""
+        owners = list(self._owned)
+        for owner in owners:
+            self.release(owner)
+        return len(owners)
 
     def check_balanced(self) -> None:
         """Invariant: free + owned == usable, with no duplicate ids."""

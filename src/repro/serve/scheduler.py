@@ -10,6 +10,25 @@ surrogate fiction:
                    ``prefill_chunk`` at a time *between* decode steps, so
                    a long prompt never stalls slots that are decoding.
 
+The tuned ``page_policy`` knob also lives here — it decides what a KV
+reservation *means* at admission:
+
+* ``reserve``    — admission reserves the worst-case ``prompt + max_new``
+                   footprint up front; a request can never run out of
+                   pages mid-flight, but short actual generations strand
+                   the unused tail of every reservation.
+* ``on_demand``  — admission reserves only the prompt footprint and the
+                   engine grows the reservation group-by-group as decode
+                   crosses group boundaries; when the pool runs dry the
+                   engine preempts a victim (``select_victim``: the
+                   youngest request — least work lost), releases its
+                   groups and re-queues it at the *head* via ``resubmit``
+                   with its generated tokens folded into the prompt, so
+                   readmission re-prefills and continues.  Tokens stay
+                   bit-identical because sampling is keyed
+                   ``(rid, token-index)`` and therefore schedule- and
+                   preemption-invariant.
+
 The scheduler is deliberately engine-agnostic pure Python: it owns the
 pending queue and the admission policy; slot/page state stays in the
 engine.  ``admission_order`` exposes the policy as a plain function the
@@ -20,11 +39,18 @@ form; the rank-agreement tests are what keep the two honest).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
-__all__ = ["SCHEDULES", "Request", "SlotScheduler", "admission_order"]
+__all__ = ["SCHEDULES", "PAGE_POLICIES", "Request", "SlotScheduler",
+           "admission_order"]
 
 SCHEDULES = ("fifo", "sjf", "interleave")
+PAGE_POLICIES = ("reserve", "on_demand")
+
+# bounded sjf admission-bypass window: how many pending requests past a
+# non-fitting head the engine may scan for one that fits the page pool
+# (bounded so a full pool cannot turn admission into a queue-length scan)
+ADMIT_SCAN = 4
 
 
 @dataclass
@@ -35,15 +61,26 @@ class Request:
     prompt: Sequence[int]
     max_new: int
     frontend_embeds: Optional[Any] = None  # (1, n_tok, dim) or None
-    arrival: int = 0          # submission order (fifo/tie-break key)
+    arrival: int = -1         # submission order; assigned on FIRST submit
+    # tokens produced before a preemption (folded into the re-prefill and
+    # carried so readmission continues at the right (rid, token-index))
+    generated: List[int] = field(default_factory=list)
+    preemptions: int = 0
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
 
     @property
+    def resident_tokens(self) -> int:
+        """The prefill footprint at (re)admission: the original prompt
+        plus any tokens generated before a preemption — what the
+        ``on_demand`` policy reserves up front."""
+        return self.prompt_len + len(self.generated)
+
+    @property
     def total_tokens(self) -> int:
-        """Worst-case KV footprint: the admission reservation size."""
+        """Worst-case KV footprint: the ``reserve`` admission size."""
         return self.prompt_len + self.max_new
 
 
@@ -68,13 +105,21 @@ class SlotScheduler:
 
     policy: str
     slots: int
+    page_policy: str = "reserve"
     _pending: List[Request] = field(default_factory=list)
+    # preempted requests, re-queued ahead of everything pending: they
+    # already spent prefill (and decode) work, so they re-enter first
+    # regardless of the admission policy
+    _resubmitted: List[Request] = field(default_factory=list)
     _arrivals: int = 0
 
     def __post_init__(self):
         if self.policy not in SCHEDULES:
             raise ValueError(f"unknown schedule {self.policy!r}; "
                              f"have {SCHEDULES}")
+        if self.page_policy not in PAGE_POLICIES:
+            raise ValueError(f"unknown page_policy {self.page_policy!r}; "
+                             f"have {PAGE_POLICIES}")
         if self.slots < 1:
             raise ValueError("need at least one decode slot")
 
@@ -83,21 +128,74 @@ class SlotScheduler:
         """Whether prefill chunks are spread across decode steps."""
         return self.policy == "interleave"
 
+    @property
+    def on_demand(self) -> bool:
+        """Whether admission reserves prompt-only footprints that the
+        engine grows (and, under pressure, preempts) at decode time."""
+        return self.page_policy == "on_demand"
+
     def submit(self, requests: Sequence[Request]) -> None:
         for r in requests:
-            r.arrival = self._arrivals
-            self._arrivals += 1
+            if r.arrival < 0:  # first submission only: a re-submitted
+                r.arrival = self._arrivals  # request keeps its place in
+                self._arrivals += 1         # the fifo/tie-break order
             self._pending.append(r)
         self._pending = admission_order(self.policy, self._pending)
 
+    def resubmit(self, request: Request) -> None:
+        """Re-queue a preempted request at the head of the line.
+
+        Preempted requests bypass the admission policy: they already hold
+        a place in the completed-work order (their prefill and part of
+        their decode ran), so they re-enter before anything still pending.
+        ``arrival`` is preserved (see ``submit``), keeping fifo fairness
+        and sjf tie-breaks stable across preemptions.
+        """
+        self._resubmitted.append(request)
+
     @property
     def has_pending(self) -> bool:
-        return bool(self._pending)
+        return bool(self._resubmitted) or bool(self._pending)
 
     def peek(self) -> Optional[Request]:
         """The request the policy would admit next (None when drained)."""
+        if self._resubmitted:
+            return self._resubmitted[0]
         return self._pending[0] if self._pending else None
 
     def pop(self) -> Request:
         """Admit the head request (call after its resources are secured)."""
+        if self._resubmitted:
+            return self._resubmitted.pop(0)
         return self._pending.pop(0)
+
+    def pop_first_fit(self, fits: Callable[[Request], bool],
+                      limit: int = ADMIT_SCAN) -> Optional[Request]:
+        """Admit the first request within the next ``limit`` queue entries
+        for which ``fits`` holds, removing it from the queue.
+
+        The bounded head-of-line bypass: under ``sjf`` a head whose
+        reservation does not fit the page pool must not starve smaller
+        pending requests that would.  ``fifo`` stays strict (the engine
+        only calls this for sjf), and the window is bounded so a full
+        pool never costs a whole-queue scan per admission attempt.
+        """
+        window = max(limit, 1)
+        queue = (self._resubmitted[:window]
+                 + self._pending[:max(0, window - len(self._resubmitted))])
+        for i, r in enumerate(queue):
+            if fits(r):
+                if i < len(self._resubmitted):
+                    return self._resubmitted.pop(i)
+                return self._pending.pop(i - len(self._resubmitted))
+        return None
+
+    @staticmethod
+    def select_victim(running: Sequence[Request]) -> Request:
+        """The preemption victim: the *youngest* running request (largest
+        arrival; tie: largest rid for determinism).  Youngest-first loses
+        the least completed work to the recompute, and can never starve
+        the oldest request — it keeps its pages until it completes."""
+        if not running:
+            raise ValueError("no running requests to preempt")
+        return max(running, key=lambda r: (r.arrival, r.rid))

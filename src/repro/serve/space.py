@@ -47,11 +47,12 @@ from repro.core.surrogates import Surrogate
 from repro.core.tuner import PerfMetric
 
 from .paging import PAGE_TOKENS
-from .scheduler import SCHEDULES
+from .scheduler import PAGE_POLICIES, SCHEDULES
 
 __all__ = [
     "PAGE_TOKENS",
     "SCHEDULES",
+    "PAGE_POLICIES",
     "serve_knob_space",
     "apply_serve_knobs",
     "CotuneParams",
@@ -101,6 +102,13 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
                  default=default_slots * page_per_seq, log=True),
         # continuous-runtime admission order (scheduler.py)
         EnumParam("schedule", SCHEDULES, "fifo"),
+        # paged-layout KV reservation policy: worst-case up-front
+        # (reserve) vs prompt-only + on-demand growth with recompute
+        # preemption (on_demand) — the optimum genuinely shifts with
+        # kv_cache_pages (small pools want on_demand's packing, large
+        # pools avoid its bookkeeping), which is what makes it worth
+        # co-tuning rather than hard-coding
+        EnumParam("page_policy", PAGE_POLICIES, "reserve"),
     ])
 
 
@@ -132,6 +140,8 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
         prefill_chunk=int(config["prefill_chunk"]),
         kv_cache_pages=max(int(config["kv_cache_pages"]), min_pages),
         schedule=str(config["schedule"]),
+        # absent in pre-PR5 cached winners: keep the base's policy then
+        page_policy=str(config.get("page_policy", base.page_policy)),
     )
 
 
@@ -171,6 +181,12 @@ class CotuneParams:
     page_table_s: float = 2e-8      # per page per step (table walk)
     slot_vmem_bytes: int = 460 * 1024  # engine dispatch state per slot
     kv_buffer_factor: int = 4          # double-buffered k and v tiles
+    # on_demand page-policy terms: per-resident-slot allocator bookkeeping
+    # each step (reservation growth checks), and the recompute tax — the
+    # fraction of an extra prefill paid per over-admitted request when the
+    # expected-footprint packing outruns the worst-case-safe one
+    extend_check_s: float = 1e-6
+    preempt_recompute: float = 0.5
 
     @classmethod
     def from_model(cls, cfg, max_seq: int = 2048, **kw) -> "CotuneParams":
@@ -220,14 +236,26 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     """End-to-end serve throughput (tokens/s) for one co-deployment config,
     derived from the CONTINUOUS runtime's actual semantics:
 
-    * **Paging is a residency bound, not a thrash factor**: the engine
-      reserves ``ceil((prompt+gen)/PAGE_TOKENS)`` page groups at admission
-      and frees them at completion, with one group held back as scratch —
-      so the resident concurrency is ``C = min(max_batch,
+    * **Paging is a residency bound, not a thrash factor** — and the
+      bound depends on the ``page_policy``.  Under ``reserve`` admission
+      holds the worst case: ``ceil((prompt+gen)/PAGE_TOKENS)`` groups per
+      request, released at completion, one group held back as scratch —
+      resident concurrency ``C = min(max_batch,
       (pages-1) // ceil((prompt+gen)/PAGE_TOKENS))``, the same
       group-granular arithmetic ``PageAllocator.try_alloc`` enforces.
-      Slots beyond the page bound still cost dispatch (masked decode
-      lanes ride every step).
+      Under ``on_demand`` admission reserves the prompt only and decode
+      grows the reservation, so the pool packs requests by their
+      *expected* footprint (a request's residency grows linearly from
+      ``prompt`` to ``prompt+gen``, mean ``prompt + gen/2``):
+      ``C = min(max_batch, (pages-1) // ceil((prompt+gen/2)/PAGE_TOKENS))``
+      — strictly more resident requests on small pools.  The price is a
+      per-resident-slot reservation-growth check each step
+      (``extend_check_s``) and, past the preemption-free concurrency, a
+      recompute tax: over-admitted requests get preempted and re-prefill
+      (``preempt_recompute`` of an extra prefill per over-admission) —
+      which is why the knob's optimum shifts with pool size instead of
+      one policy dominating.  Slots beyond the page bound still cost
+      dispatch (masked decode lanes ride every step).
     * **fifo/sjf** stall the decode loop for each admission's prefill
       (chunks run back-to-back at admission), so prefill is paid ``C``
       times per decode cycle: ``T = C·g / (g·step + C·prefill)``.
@@ -247,23 +275,45 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     chunk = int(serve_cfg["prefill_chunk"])
     pages = int(serve_cfg["kv_cache_pages"])
     schedule = str(serve_cfg["schedule"])
+    policy = str(serve_cfg.get("page_policy", "reserve"))
 
     # reservation-based residency: group-granular, minus the scratch
     # group — the allocator's exact admission arithmetic (ppb=1 pools;
-    # serve_knob_space does not expose the group-size knob)
-    groups_per_req = -(-(p.prompt_len + p.gen_len) // PAGE_TOKENS)
+    # serve_knob_space does not expose the group-size knob).  reserve
+    # packs by the worst-case footprint; on_demand by the EXPECTED one
+    # (residency grows linearly from prompt to prompt+gen over a
+    # request's lifetime, so the time-averaged footprint is prompt+gen/2)
+    groups_worst = -(-(p.prompt_len + p.gen_len) // PAGE_TOKENS)
+    if policy == "on_demand":
+        groups_per_req = math.ceil(
+            (p.prompt_len + p.gen_len / 2.0) / PAGE_TOKENS)
+    else:
+        groups_per_req = groups_worst
     c_pages = max(1, (pages - 1) // groups_per_req)
     C = max(1, min(B, c_pages, p.n_requests))
 
     attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, C, p)
     step_s = (p.weight_stream_s + C * p.per_token_s + attn_s
               + B * p.slot_dispatch_s + pages * p.page_table_s)
+    if policy == "on_demand":  # per-step reservation-growth bookkeeping
+        step_s += C * p.extend_check_s
 
     # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead
     chunk = min(chunk, p.prompt_len)
     n_chunks = math.ceil(p.prompt_len / chunk)
     prefill_s = n_chunks * (p.prefill_chunk_overhead_s
                             + chunk * p.prefill_tok_s)
+
+    # recompute tax: admitting past the preemption-free concurrency means
+    # some requests outgrow the pool mid-decode, get preempted and
+    # re-prefill — charged as a fraction of an extra prefill per
+    # over-admission (zero when the pool covers the worst case at C)
+    preempt_frac = 0.0
+    if policy == "on_demand":
+        c_worst = max(1, min(B, max(1, (pages - 1) // groups_worst),
+                             p.n_requests))
+        preempt_frac = max(0.0, 1.0 - c_worst / float(C))
+        prefill_s *= 1.0 + p.preempt_recompute * preempt_frac
 
     g = p.gen_len
     if schedule == "interleave":
@@ -288,6 +338,8 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
                  "step_s": float(step_s), "attn_s": float(attn_s),
                  "prefill_s": float(prefill_s),
                  "resident": float(C), "kv_util": float(C) / float(B),
+                 "page_policy": policy,
+                 "preempt_frac": float(preempt_frac),
                  "sla_met": bool(latency <= p.sla_s)})
 
 

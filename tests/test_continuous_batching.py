@@ -156,6 +156,123 @@ class TestPagingRuntime:
         assert len(res.tokens[0]) == 2
 
 
+class TestPagePolicy:
+    """The tuned page_policy axis: on_demand admits on prompt-size
+    reservations, grows them per step, and preempts (recompute) on pool
+    exhaustion — identical tokens, strictly better packing on
+    oversubscribed pools."""
+
+    # decode-heavy mixed workload: worst-case footprints of 2 groups per
+    # request at PAGE_TOKENS=16, so a 4-page pool (3 usable groups)
+    # serializes reserve admission but packs 3 on_demand prompts
+    HEAVY_PROMPTS = [[1, 2, 3], [9, 8, 7, 6], [2, 2, 2, 2, 2],
+                     [7, 1, 4, 1], [3, 3, 3], [5, 4, 3, 2, 1, 6]]
+    HEAVY_NEW = [14, 12, 16, 13, 18, 12]
+
+    def _run(self, engine, policy, pages=4, slots=3, **kw):
+        model, params = engine
+        eng = ServeEngine(model, params, _cfg(
+            kv_layout="paged", batch_slots=slots, kv_cache_pages=pages,
+            page_policy=policy, **kw))
+        res = eng.generate(self.HEAVY_PROMPTS, self.HEAVY_NEW)
+        eng.last_alloc.check_balanced()
+        assert eng.last_alloc.groups_in_use == 0
+        return res
+
+    def test_forced_preemption_token_parity(self, engine):
+        """Preemption re-prefills prompt+generated and continues at the
+        same (rid, token-index) keys: bit-identical tokens, fewer decode
+        steps (better packing) on the oversubscribed pool."""
+        reserve = self._run(engine, "reserve")
+        on_demand = self._run(engine, "on_demand")
+        assert on_demand.preemptions > 0  # the pool really ran dry
+        assert reserve.preemptions == 0   # reserve can never preempt
+        assert on_demand.tokens == reserve.tokens
+        assert on_demand.steps < reserve.steps
+        # per-request provenance carries the recompute count
+        assert sum(r["preemptions"] for r in on_demand.per_request) \
+            == on_demand.preemptions
+
+    def test_policy_parity_across_schedules(self, engine):
+        outs = [self._run(engine, "on_demand", schedule=s).tokens
+                for s in ("fifo", "sjf", "interleave")]
+        assert outs[0] == outs[1] == outs[2]
+
+    def test_on_demand_temperature_parity(self, engine):
+        """Sampled tokens survive preemption bit-identically: the
+        (rid, token-index) key stream is recomputed, not resumed."""
+        outs = {}
+        for pol in ("reserve", "on_demand"):
+            outs[pol] = self._run(engine, pol, temperature=0.8, seed=7)
+        assert outs["on_demand"].preemptions > 0
+        assert outs["on_demand"].tokens == outs["reserve"].tokens
+
+    def test_on_demand_inert_on_big_pools(self, engine):
+        """With every worst case resident the policies are identical:
+        no extension failures, no preemptions, same step count."""
+        reserve = self._run(engine, "reserve", pages=16)
+        on_demand = self._run(engine, "on_demand", pages=16)
+        assert on_demand.preemptions == 0
+        assert on_demand.tokens == reserve.tokens
+        assert on_demand.steps == reserve.steps
+
+    def test_dense_layout_ignores_policy(self, engine):
+        model, params = engine
+        eng = ServeEngine(model, params, _cfg(kv_layout="dense",
+                                              page_policy="on_demand"))
+        res = eng.generate(self.HEAVY_PROMPTS, self.HEAVY_NEW)
+        assert res.preemptions == 0
+
+    def test_unknown_page_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown page_policy"):
+            ServeConfig(page_policy="lazy")
+
+    def test_error_path_releases_pages(self, engine):
+        """Regression: an exception mid-generation (e.g. inside a decode
+        dispatch) must unwind every live reservation — a stranded page
+        group would silently shrink every later run's pool."""
+        model, params = engine
+        for policy in ("reserve", "on_demand"):
+            eng = ServeEngine(model, params, _cfg(
+                kv_layout="paged", batch_slots=3, page_policy=policy))
+
+            calls = {"n": 0}
+            real = eng._decode_multi
+
+            def boom(*a, _real=real, **kw):
+                calls["n"] += 1
+                if calls["n"] >= 3:  # fail mid-flight, with live slots
+                    raise RuntimeError("injected decode failure")
+                return _real(*a, **kw)
+
+            eng._decode_multi = boom
+            with pytest.raises(RuntimeError, match="injected"):
+                eng.generate(self.HEAVY_PROMPTS, self.HEAVY_NEW)
+            assert eng.last_alloc is not None
+            assert eng.last_alloc.groups_in_use == 0
+            eng.last_alloc.check_balanced()
+
+    def test_sjf_bypass_beats_head_of_line_blocking(self, engine):
+        """A blocked sjf head (reservation too big for the free pool)
+        must not starve a smaller pending request that fits: the bounded
+        bypass admits it, so it starts BEFORE the policy-earlier blocked
+        request.  fifo stays strict (arrival order of first tokens)."""
+        model, params = engine
+        prompts = [[1, 2, 3, 4], [9, 8, 7, 6, 5], [2, 4, 6, 8, 1, 3]]
+        max_new = [28, 27, 6]  # worst-case groups: 2, 2, 1 (4-page pool)
+        ttft = {}
+        for sched in ("sjf", "fifo"):
+            eng = ServeEngine(model, params, _cfg(
+                kv_layout="paged", batch_slots=2, kv_cache_pages=4,
+                schedule=sched))
+            res = eng.generate(prompts, max_new)
+            ttft[sched] = [r["ttft_s"] for r in res.per_request]
+        # sjf: rid 2 bypasses blocked rid 1 and decodes alongside rid 0
+        assert ttft["sjf"][2] < ttft["sjf"][1]
+        # fifo keeps strict admission order
+        assert ttft["fifo"][1] < ttft["fifo"][2]
+
+
 class TestPerRequestStats:
     def test_provenance_shape_and_ordering(self, engine):
         model, params = engine
@@ -197,7 +314,7 @@ class TestSurrogateRankAgreement:
     re-derived from the real scheduler; pin that both rank configs the
     same way, on the runtime's noise-free counters where possible."""
 
-    def _surrogate(self, schedule, pages, p=None):
+    def _surrogate(self, schedule, pages, p=None, policy="reserve"):
         from repro.serve.space import (CotuneParams, coupled_serve_metrics,
                                        serve_knob_space)
 
@@ -206,6 +323,7 @@ class TestSurrogateRankAgreement:
         cfg = serve_knob_space(p.max_seq).default_config()
         cfg["schedule"] = schedule
         cfg["kv_cache_pages"] = pages
+        cfg["page_policy"] = policy
         kcfg = p.default_kernel_config()
         return coupled_serve_metrics(cfg, kcfg, p)
 
@@ -224,6 +342,29 @@ class TestSurrogateRankAgreement:
         hi = self._surrogate("fifo", pages=16)
         assert lo.value < hi.value  # surrogate ranks the same way
         assert lo.metrics["resident"] < hi.metrics["resident"]
+
+    def test_page_policy_rank_agreement(self, engine):
+        """Engine evidence (noise-free decode-step counts, pinned above in
+        TestPagePolicy): on_demand completes equal tokens in fewer steps
+        on an oversubscribed pool.  The surrogate must rank the same way —
+        and flip on big pools, where on_demand only pays bookkeeping: the
+        policy optimum genuinely shifts with kv_cache_pages."""
+        from repro.serve.space import CotuneParams
+
+        # decode-heavy workload: expected footprint (prompt+gen/2) is
+        # well under the worst case, which is where on_demand packs
+        p = CotuneParams(prompt_len=32, gen_len=96, max_seq=256,
+                         n_requests=16)
+        small_od = self._surrogate("fifo", pages=21, p=p, policy="on_demand")
+        small_rs = self._surrogate("fifo", pages=21, p=p, policy="reserve")
+        assert small_od.value > small_rs.value
+        assert small_od.metrics["resident"] > small_rs.metrics["resident"]
+        assert small_od.metrics["preempt_frac"] > 0  # the recompute tax
+        big_od = self._surrogate("fifo", pages=256, p=p, policy="on_demand")
+        big_rs = self._surrogate("fifo", pages=256, p=p, policy="reserve")
+        assert big_rs.value > big_od.value  # bookkeeping, no packing gain
+        assert big_od.metrics["preempt_frac"] == 0
+        assert big_od.metrics["resident"] == big_rs.metrics["resident"]
 
     def test_sjf_rank_agreement_on_mean_latency(self, engine):
         """One long prompt ahead of short ones on a single slot: sjf must

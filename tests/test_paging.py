@@ -83,6 +83,48 @@ class TestPageAllocator:
         with pytest.raises(ValueError):
             PageAllocator(n_pages=8, pages_per_group=0)
 
+    def test_extend_grows_group_by_group(self):
+        a = PageAllocator(n_pages=8, pages_per_group=1)
+        first = a.try_alloc(0, 10)  # 1 group covers 16 tokens
+        assert len(first) == 1
+        assert a.extend(0, 16) == []      # still inside the reservation
+        grew = a.extend(0, 17)            # crosses the group boundary
+        assert len(grew) == 1 and grew[0] not in first
+        assert a.owned_groups(0) == first + grew
+        assert a.extend(0, 33) and len(a.owned_groups(0)) == 3
+        a.check_balanced()
+        a.release(0)
+        a.check_balanced()
+
+    def test_extend_none_when_full_oversubscription_raises(self):
+        a = PageAllocator(n_pages=4, pages_per_group=1)  # 3 usable
+        a.try_alloc(0, 16)
+        a.try_alloc(1, 2 * 16)
+        assert a.extend(0, 17) is None  # temporarily full: preempt + retry
+        a.release(1)
+        assert a.extend(0, 17) is not None
+        with pytest.raises(OversubscriptionError, match="kv_cache_pages"):
+            a.extend(0, 4 * 16)  # can never fit, even with the pool empty
+        with pytest.raises(KeyError):
+            a.extend(9, 16)  # unknown owner
+
+    def test_extend_moves_high_water(self):
+        a = PageAllocator(n_pages=8)
+        a.try_alloc(0, 16)
+        hw = a.high_water
+        a.extend(0, 3 * 16)
+        assert a.high_water == 3 > hw
+
+    def test_release_all_unwinds_every_owner(self):
+        a = PageAllocator(n_pages=16)
+        a.try_alloc(0, 40)
+        a.try_alloc(1, 16)
+        a.extend(1, 32)
+        assert a.release_all() == 2
+        assert a.groups_in_use == 0
+        a.check_balanced()
+        assert a.release_all() == 0  # idempotent on an empty pool
+
 
 class TestSlotScheduler:
     def test_fifo_preserves_arrival(self):
@@ -129,3 +171,79 @@ class TestSlotScheduler:
         r = Request(0, [1, 2, 3], 5)
         assert r.prompt_len == 3
         assert r.total_tokens == 8
+        assert r.resident_tokens == 3  # on_demand admits the prompt only
+        r.generated = [7, 7]
+        assert r.resident_tokens == 5  # re-prefill carries generated tokens
+        assert r.total_tokens == 8     # worst case is unchanged
+
+    def test_submit_assigns_arrival_once(self):
+        """A preemption re-queue must not lose the original ordering:
+        arrival is assigned on FIRST submission only."""
+        s = SlotScheduler("fifo", 2)
+        s.submit(_reqs([5, 3]))
+        first = s.pop()
+        assert first.arrival == 0
+        s.submit([first])  # re-submission keeps arrival 0
+        assert first.arrival == 0
+        assert s.peek() is first  # fifo: back at the head, not the tail
+        s.submit([Request(9, [1], 4)])
+        assert [s.pop().rid for _ in range(3)] == [first.rid, 1, 9]
+
+    def test_resubmit_jumps_the_queue(self):
+        """Preempted requests re-enter at the head regardless of policy —
+        they already spent prefill/decode work."""
+        s = SlotScheduler("sjf", 2)
+        s.submit(_reqs([3, 5, 9]))
+        victim = s.pop()          # rid 0 (shortest)
+        long_one = Request(7, list(range(20)), 4)
+        victim.generated = [42]   # mid-flight state rides along
+        s.resubmit(victim)
+        s.submit([long_one])
+        # head is the resubmitted victim even though sjf would rank the
+        # pending 5-token prompt first
+        assert s.peek() is victim
+        assert s.pop() is victim
+        assert [s.pop().rid for _ in range(3)] == [1, 2, 7]
+
+    def test_pop_first_fit_bypasses_blocked_head(self):
+        """The bounded sjf head-of-line bypass: admit the first FITTING
+        pending request when the head's reservation does not fit."""
+        s = SlotScheduler("sjf", 2)
+        s.submit([Request(0, [1, 2], 30),      # head: huge max_new
+                  Request(1, [1, 2, 3], 30),   # also too big
+                  Request(2, [1, 2, 3, 4], 2)])  # fits
+        got = s.pop_first_fit(lambda r: r.total_tokens <= 8)
+        assert got is not None and got.rid == 2
+        # head untouched; nothing else fits
+        assert s.peek().rid == 0
+        assert s.pop_first_fit(lambda r: r.total_tokens <= 8) is None
+        # the window is bounded: a fitting request beyond it is not seen
+        s2 = SlotScheduler("fifo", 2)
+        s2.submit([Request(i, [1] * 4, 30) for i in range(5)]
+                  + [Request(5, [1], 1)])
+        assert s2.pop_first_fit(lambda r: r.total_tokens <= 2,
+                                limit=4) is None
+        assert s2.pop_first_fit(lambda r: r.total_tokens <= 2,
+                                limit=6).rid == 5
+
+    def test_pop_first_fit_scans_resubmitted_first(self):
+        s = SlotScheduler("sjf", 2)
+        s.submit(_reqs([5, 3]))
+        victim = s.pop()
+        s.resubmit(victim)
+        got = s.pop_first_fit(lambda r: True)
+        assert got is victim
+
+    def test_select_victim_is_youngest(self):
+        reqs = _reqs([4, 2, 6])
+        SlotScheduler("fifo", 2).submit(reqs)
+        assert SlotScheduler.select_victim(reqs).rid == 2  # last arrival
+        assert SlotScheduler.select_victim(reqs[:1]).rid == 0
+        with pytest.raises(ValueError):
+            SlotScheduler.select_victim([])
+
+    def test_page_policy_axis_validated(self):
+        assert not SlotScheduler("fifo", 2).on_demand  # reserve default
+        assert SlotScheduler("fifo", 2, page_policy="on_demand").on_demand
+        with pytest.raises(ValueError, match="unknown page_policy"):
+            SlotScheduler("fifo", 2, page_policy="lazy")

@@ -1,0 +1,179 @@
+"""Property tests for on-demand page growth + the preemption parity matrix.
+
+Two layers of the PR-5 contract:
+
+* ``PageAllocator`` under random ``try_alloc``/``extend``/``release``
+  interleavings (hypothesis, or the deterministic stub): the pool stays
+  balanced, the scratch group never leaks into a reservation, and the
+  high-water mark is monotone.
+* The engine matrix: per-request tokens are bit-identical across page
+  policies (``reserve``/``on_demand``), all three schedules, paged/dense
+  layouts, and with/without forced preemption — the tuned knobs move
+  *when* work happens, never *what* is generated.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.paging import (OversubscriptionError, PAGE_TOKENS,
+                                PageAllocator)
+
+# ---------------------------------------------------------------------------
+# allocator property tests (no jax)
+# ---------------------------------------------------------------------------
+
+
+class TestAllocatorProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           n_pages=st.integers(4, 40),
+           pages_per_group=st.integers(1, 3))
+    def test_random_interleavings_stay_balanced(self, seed, n_pages,
+                                                pages_per_group):
+        """alloc/extend/release in random order: balance invariant after
+        every operation, no scratch leakage, high-water monotone."""
+        if n_pages // pages_per_group < 2:
+            n_pages = 2 * pages_per_group  # keep the pool constructible
+        a = PageAllocator(n_pages, pages_per_group=pages_per_group)
+        rng = np.random.default_rng(seed)
+        live = {}  # owner -> tokens currently reserved
+        next_owner = 0
+        hw = a.high_water
+        for _ in range(60):
+            op = rng.integers(0, 3)
+            if op == 0:  # admit a new owner
+                tokens = int(rng.integers(1, a.usable_tokens + 1))
+                try:
+                    got = a.try_alloc(next_owner, tokens)
+                except OversubscriptionError:
+                    got = None
+                if got is not None:
+                    assert PageAllocator.SCRATCH_GROUP not in got
+                    assert len(got) == a.groups_for(tokens)
+                    live[next_owner] = tokens
+                    next_owner += 1
+            elif op == 1 and live:  # grow a live owner
+                owner = int(rng.choice(list(live)))
+                grow_to = live[owner] + int(rng.integers(1, 2 * a.group_tokens))
+                try:
+                    new = a.extend(owner, grow_to)
+                except OversubscriptionError:
+                    new = None
+                if new is not None:
+                    assert PageAllocator.SCRATCH_GROUP not in new
+                    live[owner] = grow_to
+                    assert len(a.owned_groups(owner)) == \
+                        a.groups_for(grow_to)
+            elif op == 2 and live:  # complete (or preempt) an owner
+                owner = int(rng.choice(list(live)))
+                a.release(owner)
+                del live[owner]
+            a.check_balanced()
+            assert a.high_water >= hw  # monotone
+            hw = a.high_water
+            assert a.free_groups + a.groups_in_use == a.usable_groups
+        for owner in list(live):
+            a.release(owner)
+        assert a.groups_in_use == 0
+        a.check_balanced()
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_extend_equals_upfront_reservation(self, seed):
+        """Growing token-by-token lands on exactly the same group count
+        as one worst-case reservation (no on-demand over-allocation)."""
+        rng = np.random.default_rng(seed)
+        total = int(rng.integers(1, 6 * PAGE_TOKENS))
+        start = int(rng.integers(1, total + 1))
+        a = PageAllocator(16)
+        b = PageAllocator(16)
+        a.try_alloc(0, total)
+        b.try_alloc(0, start)
+        for t in range(start + 1, total + 1):
+            assert b.extend(0, t) is not None
+        assert len(b.owned_groups(0)) == len(a.owned_groups(0))
+
+
+# ---------------------------------------------------------------------------
+# engine preemption parity matrix (jax)
+# ---------------------------------------------------------------------------
+
+# decode-heavy mixed workload: worst-case footprints (2 groups each at
+# PAGE_TOKENS=16) oversubscribe the tiny pool, forcing on_demand
+# preemption; expected footprints still pack several prompts
+MATRIX_PROMPTS = [[1, 2, 3], [9, 8, 7, 6], [2, 2, 2, 2, 2],
+                  [7, 1, 4, 1], [3, 3, 3, 3], [5, 4, 3, 2, 1, 6]]
+MATRIX_NEW = [14, 12, 16, 13, 18, 12]
+TINY_POOL = 4   # pages: 3 usable groups -> reserve serializes admission
+BIG_POOL = 16   # pages: every worst case resident, preemption impossible
+
+
+@pytest.fixture(scope="module")
+def engine():
+    import jax
+
+    from repro.configs import ModelConfig
+    from repro.models import Model
+
+    cfg = ModelConfig(
+        name="tiny-preempt", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _generate(engine, layout, policy, schedule, pages):
+    from repro.serve import ServeConfig, ServeEngine
+
+    model, params = engine
+    eng = ServeEngine(model, params, ServeConfig(
+        max_seq=32, batch_slots=3, runtime="continuous", prefill_chunk=4,
+        kv_layout=layout, page_policy=policy, schedule=schedule,
+        kv_cache_pages=pages if layout == "paged" else None))
+    res = eng.generate(MATRIX_PROMPTS, MATRIX_NEW)
+    if layout == "paged":
+        assert eng.last_alloc.groups_in_use == 0, \
+            f"leak in {layout}/{policy}/{schedule}/pages={pages}"
+        eng.last_alloc.check_balanced()
+    return res
+
+
+class TestPreemptionParityMatrix:
+    def test_tokens_identical_across_the_matrix(self, engine):
+        """reserve/on_demand x fifo/sjf/interleave x paged(+dense control)
+        x oversubscribed/comfortable pools: one token stream."""
+        ref = _generate(engine, "dense", "reserve", "fifo", None)
+        preempted = 0
+        for policy in ("reserve", "on_demand"):
+            for schedule in ("fifo", "sjf", "interleave"):
+                res = _generate(engine, "paged", policy, schedule,
+                                TINY_POOL)
+                assert res.tokens == ref.tokens, \
+                    f"{policy}/{schedule} diverged on the tiny pool"
+                if policy == "on_demand":
+                    preempted += res.preemptions
+                else:
+                    assert res.preemptions == 0
+        # the tiny pool must actually exercise the recompute path
+        assert preempted > 0
+        # comfortable pool: both policies, no preemption, same tokens
+        for policy in ("reserve", "on_demand"):
+            res = _generate(engine, "paged", policy, "fifo", BIG_POOL)
+            assert res.tokens == ref.tokens
+            assert res.preemptions == 0
+        # dense control: policy knob is inert off the paged layout
+        res = _generate(engine, "dense", "on_demand", "fifo", None)
+        assert res.tokens == ref.tokens and res.preemptions == 0
+
+    def test_preemption_survives_interleave_chunking(self, engine):
+        """interleave + on_demand: a victim preempted mid-decode while
+        another slot is still prefilling re-enters and completes with
+        identical tokens (chunked re-prefill is exact)."""
+        ref = _generate(engine, "paged", "reserve", "interleave", BIG_POOL)
+        res = _generate(engine, "paged", "on_demand", "interleave",
+                        TINY_POOL)
+        assert res.preemptions > 0
+        assert res.tokens == ref.tokens
