@@ -18,10 +18,18 @@ must complete strictly more decode tokens/sec than worst-case ``reserve``
 admission — with bit-identical per-request tokens and a balanced
 allocator at exit.
 
+A third, *repeated-shared-prefix* workload pins the prefix-sharing claim:
+every request opens with the same long system prompt, so with
+``share_prefix`` on, sharers map the donor's resident page groups
+(copy-on-write) instead of re-prefilling them.  At an equal pool the
+shared arm must clear >= 2x the unshared arm's end-to-end
+(prefill+decode) tokens/sec — with bit-identical tokens, strictly fewer
+prefill dispatches (the noise-free signal) and a balanced allocator.
+
 ``BENCH_serve.json`` is the cross-PR perf artifact; ``--check`` exits
 non-zero if continuous+paged underperforms wave at equal engine config,
-or if ``on_demand`` loses to ``reserve`` on the oversubscribed arm —
-wired into CI.
+if ``on_demand`` loses to ``reserve`` on the oversubscribed arm, or if
+sharing loses its 2x on the repeated-prefix arm — wired into CI.
 """
 from __future__ import annotations
 
@@ -49,6 +57,14 @@ SEED = 0
 # PAGE_TOKENS=16) against a pool of 5 usable groups — reserve admission
 # can hold ~2 requests resident, on_demand packs all 4 slots and preempts
 OVERSUB_POOL = 6
+# shared-prefix arm: every request opens with the same 32-token system
+# prompt (two full 16-token page groups — fully sharable), then a short
+# private tail and a short generation, so prefill dominates the bill.
+# Both sharing arms run the finer chunk (equal config; only share_prefix
+# differs): per-dispatch overhead is the real cost on the tiny model, and
+# sharing's win IS the dispatches it skips
+SHARED_PREFIX_LEN = 32
+SHARED_PREFILL_CHUNK = 4
 
 
 def _tiny_model():
@@ -84,21 +100,36 @@ def _oversub_workload(seed: int = SEED):
     return prompts, [int(g) for g in gens]
 
 
+def _shared_workload(seed: int = SEED):
+    """Repeated-system-prompt traffic: one long common prefix, short
+    private tails, short generations — the workload prefix sharing is
+    for (prefill is most of each request's bill)."""
+    rng = np.random.default_rng(seed + 2)
+    prefix = rng.integers(1, 512, size=SHARED_PREFIX_LEN).tolist()
+    tails = [rng.integers(1, 512, size=int(n)).tolist()
+             for n in rng.integers(1, 3, size=N_REQUESTS)]
+    gens = [int(g) for g in rng.integers(2, 7, size=N_REQUESTS)]
+    return [prefix + t for t in tails], gens
+
+
 def _engine(model, params, runtime: str, layout: str, schedule: str,
-            page_policy: str = "reserve", pages=None):
+            page_policy: str = "reserve", pages=None,
+            share_prefix: bool = False, chunk: int = PREFILL_CHUNK):
     from repro.serve import ServeConfig, ServeEngine
 
     return ServeEngine(model, params, ServeConfig(
-        max_seq=MAX_SEQ, batch_slots=SLOTS, prefill_chunk=PREFILL_CHUNK,
+        max_seq=MAX_SEQ, batch_slots=SLOTS, prefill_chunk=chunk,
         runtime=runtime, kv_layout=layout, schedule=schedule,
-        page_policy=page_policy, kv_cache_pages=pages))
+        page_policy=page_policy, kv_cache_pages=pages,
+        share_prefix=share_prefix))
 
 
 def _run_continuous(model, params, layout: str, schedule: str,
                     prompts, gens, page_policy: str = "reserve",
-                    pages=None) -> Dict[str, Any]:
+                    pages=None, share_prefix: bool = False,
+                    chunk: int = PREFILL_CHUNK) -> Dict[str, Any]:
     eng = _engine(model, params, "continuous", layout, schedule,
-                  page_policy, pages)
+                  page_policy, pages, share_prefix, chunk)
     eng.generate(prompts, gens)  # warmup: absorb jit specialization
     t0 = time.time()
     res = eng.generate(prompts, gens)
@@ -106,6 +137,9 @@ def _run_continuous(model, params, layout: str, schedule: str,
     stats = _arm_stats(res.tokens, res, wall,
                        [r["latency_s"] for r in res.per_request])
     stats["preemptions"] = int(res.preemptions)
+    stats["prefill_chunks"] = int(res.prefill_chunks)
+    stats["shared_prefix_tokens"] = int(res.shared_prefix_tokens)
+    stats["cow_splits"] = int(res.cow_splits)
     if eng.last_alloc is not None:
         eng.last_alloc.check_balanced()
         stats["leaked_groups"] = int(eng.last_alloc.groups_in_use)
@@ -190,6 +224,23 @@ def bench() -> Dict[str, Any]:
     oversub_parity = oversub["reserve"]["tokens"] == \
         oversub["on_demand"]["tokens"]
 
+    # ---- repeated-shared-prefix arm: equal pool and schedule, the
+    # share_prefix knob is the only difference --------------------------
+    sh_prompts, sh_gens = _shared_workload()
+    sharing: Dict[str, Dict[str, Any]] = {}
+    for arm, share in (("unshared", False), ("shared", True)):
+        sharing[arm] = _run_continuous(
+            model, params, "paged", "fifo", sh_prompts, sh_gens,
+            share_prefix=share, chunk=SHARED_PREFILL_CHUNK)
+    sharing_parity = sharing["shared"]["tokens"] == \
+        sharing["unshared"]["tokens"]
+
+    def _serve_rate(s: Dict[str, Any]) -> float:
+        # end-to-end serve rate: generated tokens over prefill+decode time
+        # (prefill is exactly what sharing removes, so decode-only rates
+        # would hide the win)
+        return s["generated"] / max(s["prefill_s"] + s["decode_s"], 1e-9)
+
     headline = arms["continuous_paged_fifo"]
     baseline = arms["wave_fifo"]
     out = {
@@ -215,6 +266,17 @@ def bench() -> Dict[str, Any]:
             / oversub["reserve"]["decode_tok_per_s"]),
         "oversub_leaked_groups": (oversub["reserve"]["leaked_groups"]
                                   + oversub["on_demand"]["leaked_groups"]),
+        "shared_workload": {"prefix_len": SHARED_PREFIX_LEN,
+                            "prefill_chunk": SHARED_PREFILL_CHUNK,
+                            "prompt_lens": [len(p) for p in sh_prompts],
+                            "gen_lens": sh_gens},
+        "sharing_arms": {a: {k: v for k, v in s.items() if k != "tokens"}
+                         for a, s in sharing.items()},
+        "sharing_token_parity": bool(sharing_parity),
+        "shared_over_unshared_serve": (_serve_rate(sharing["shared"])
+                                       / _serve_rate(sharing["unshared"])),
+        "sharing_leaked_groups": (sharing["shared"]["leaked_groups"]
+                                  + sharing["unshared"]["leaked_groups"]),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
@@ -249,6 +311,20 @@ def rows_from(result: Dict[str, Any]) -> List[Row]:
     rows.append(("serve_oversub_parity", 0.0,
                  "ok" if (result["oversub_token_parity"]
                           and result["oversub_leaked_groups"] == 0)
+                 else "MISMATCH"))
+    for arm in ("unshared", "shared"):
+        s = result["sharing_arms"][arm]
+        rows.append((f"serve_prefix_{arm}", 0.0,
+                     f"{s['generated'] / max(s['prefill_s'] + s['decode_s'], 1e-9):.0f} tok/s "
+                     f"chunks={s['prefill_chunks']} "
+                     f"shared={s['shared_prefix_tokens']} "
+                     f"cow={s['cow_splits']}"))
+    rows.append(("serve_shared_over_unshared", 0.0,
+                 f"{result['shared_over_unshared_serve']:.2f}x "
+                 "prefill+decode tok/s at equal pool"))
+    rows.append(("serve_sharing_parity", 0.0,
+                 "ok" if (result["sharing_token_parity"]
+                          and result["sharing_leaked_groups"] == 0)
                  else "MISMATCH"))
     return rows
 
@@ -308,9 +384,36 @@ def main(argv=None) -> int:
                   "preemptions (the pool is not actually oversubscribed)",
                   file=sys.stderr)
             return 1
+        if not result["sharing_token_parity"]:
+            print("CHECK FAILED: per-request tokens differ with "
+                  "share_prefix on the repeated-prefix workload",
+                  file=sys.stderr)
+            return 1
+        if result["sharing_leaked_groups"]:
+            print("CHECK FAILED: page groups leaked on the shared-prefix "
+                  "workload", file=sys.stderr)
+            return 1
+        sh = result["sharing_arms"]["shared"]
+        un = result["sharing_arms"]["unshared"]
+        # noise-free first: sharing must actually skip prefill dispatches
+        if sh["prefill_chunks"] >= un["prefill_chunks"] or \
+                sh["shared_prefix_tokens"] <= 0:
+            print(f"CHECK FAILED: sharing issued {sh['prefill_chunks']} "
+                  f"prefill chunks vs {un['prefill_chunks']} unshared "
+                  f"(shared tokens: {sh['shared_prefix_tokens']}) — "
+                  "nothing was actually shared", file=sys.stderr)
+            return 1
+        sh_ratio = result["shared_over_unshared_serve"]
+        if sh_ratio < 2.0:
+            print(f"CHECK FAILED: shared-prefix serve throughput "
+                  f"{sh_ratio:.2f}x unshared at an equal pool "
+                  "(must be >= 2.0x)", file=sys.stderr)
+            return 1
         print(f"check OK: continuous+paged = {ratio:.2f}x wave decode "
               f"throughput; on_demand = {od_ratio:.2f}x reserve at "
-              f"{OVERSUB_POOL} pages; token parity holds, pool balanced")
+              f"{OVERSUB_POOL} pages; share_prefix = {sh_ratio:.2f}x "
+              "unshared on the repeated-prefix arm; token parity holds, "
+              "pool balanced")
     return 0
 
 

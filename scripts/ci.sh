@@ -17,9 +17,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
-# Post-PR5 baseline: CI fails if the collected count ever drops below it
+# Post-PR6 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=437
+MIN_COLLECTED=464
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -155,7 +155,67 @@ print(f"oversubscription smoke OK ({out['on_demand'].preemptions} "
       "no leaks)")
 EOF
 
-echo "=== check: continuous+paged >= wave; on_demand >= reserve ==="
+echo "=== smoke: prefix sharing (CoW) + speculative decoding (~30s) ==="
+# Repeated shared-prefix workload: sharing MUST skip prefill dispatches
+# and split at least one group copy-on-write; speculation MUST draft and
+# accept tokens in fewer decode dispatches. Tokens are bit-identical to
+# the plain run in every arm, and no page group may outlive a run.
+timeout 120 python - <<'EOF'
+import jax, jax.numpy as jnp
+from repro.configs import ModelConfig
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+
+cfg = ModelConfig(
+    name="ci-tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", vocab_pad_multiple=64,
+    rope_theta=10_000.0)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+# A long donor, a short filler that frees a slot, then two sharers: an
+# exact copy (coverage capped at prompt-1 lands mid-group -> CoW) and a
+# mid-group prefix. The donor generates long enough to stay resident.
+donor = [((i * 37) % 509) + 1 for i in range(32)]
+prompts = [donor, [1, 2, 3], list(donor), donor[:20]]
+gens = [26, 2, 5, 4]
+
+def run(p, **kw):
+    eng = ServeEngine(model, p, ServeConfig(
+        max_seq=64, batch_slots=2, runtime="continuous",
+        kv_layout="paged", prefill_chunk=4, **kw))
+    res = eng.generate(prompts, gens)
+    assert eng.last_alloc.groups_in_use == 0, f"{kw}: page leak"
+    eng.last_alloc.check_balanced()
+    return res
+
+plain = run(params)
+shared = run(params, share_prefix=True)
+assert shared.tokens == plain.tokens, "sharing changed generated tokens"
+assert shared.shared_prefix_tokens > 0, "shared-prefix workload never shared"
+assert shared.cow_splits > 0, "no copy-on-write split ever happened"
+assert shared.prefill_chunks < plain.prefill_chunks, \
+    "sharing did not skip prefill dispatches"
+both = run(params, share_prefix=True, draft_len=4)
+assert both.tokens == plain.tokens, "sharing+speculation changed tokens"
+# Zeroed params give repetitive argmax output, so n-gram drafts MUST
+# land: fewer decode dispatches for the same (trivial) tokens.
+zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+zplain = run(zeros)
+zspec = run(zeros, draft_len=4)
+assert zspec.tokens == zplain.tokens, "speculation changed generated tokens"
+assert zspec.drafted > 0 and zspec.accepted > 0, "speculation never accepted"
+assert zspec.steps < zplain.steps, \
+    "accepted drafts did not reduce decode dispatches"
+print(f"sharing+speculation smoke OK ({shared.shared_prefix_tokens} shared "
+      f"tokens, {shared.cow_splits} CoW splits, "
+      f"{shared.prefill_chunks} vs {plain.prefill_chunks} prefill chunks, "
+      f"{zspec.accepted}/{zspec.drafted} drafts accepted, "
+      f"{zspec.steps} vs {zplain.steps} decode dispatches, identical "
+      "tokens, no leaks)")
+EOF
+
+echo "=== check: continuous+paged >= wave; on_demand >= reserve; shared >= 2x ==="
 timeout 300 python -m benchmarks.serve_bench --check
 
 echo "CI OK"

@@ -371,28 +371,67 @@ def self_attention(
 
     new_cache = None
     if cache is not None and page_table is not None:
-        # Paged pool: single-token decode append through the page table.
         B = x.shape[0]
         T = cache["k"].shape[1]
+        S_new = k.shape[1]
         pos = jnp.asarray(cache_index, jnp.int32).reshape(B)
-        gid = page_table[jnp.arange(B), pos // T]
-        off = pos % T
-        ck = cache["k"].at[gid, off].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[gid, off].set(v[:, 0].astype(cache["v"].dtype))
-        new_cache = {"k": ck, "v": cv}
-        y = _paged_decode_attend(q, ck, cv, page_table, pos + 1)
+        if S_new == 1:
+            # Paged pool: single-token decode append through the table.
+            gid = page_table[jnp.arange(B), pos // T]
+            off = pos % T
+            ck = cache["k"].at[gid, off].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[gid, off].set(
+                v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            y = _paged_decode_attend(q, ck, cv, page_table, pos + 1)
+        else:
+            # Speculative verify: C tokens per slot, positions
+            # pos..pos+C-1.  Columns past the page table (a draft chain
+            # overrunning max_seq on a request that will finish first)
+            # are routed out of range and dropped by the scatter; columns
+            # past a slot's reservation land in the scratch entries of
+            # its table row — either way they are masked KV no valid
+            # query ever reads, so the accepted prefix stays exact.
+            G_pool = cache["k"].shape[0]
+            MAXG = page_table.shape[1]
+            ppos = pos[:, None] + jnp.arange(S_new, dtype=jnp.int32)
+            lg = ppos // T
+            gid = jnp.where(
+                lg < MAXG,
+                page_table[jnp.arange(B)[:, None],
+                           jnp.minimum(lg, MAXG - 1)],
+                G_pool)
+            off = ppos % T
+            ck = cache["k"].at[gid, off].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[gid, off].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv}
+            y = _paged_verify_attend(q, ck, cv, page_table, pos)
     elif cache is not None:
         Sbuf = cache["k"].shape[1]
         S_new = k.shape[1]
         if jnp.ndim(cache_index) == 1:
-            # Continuous batching: each slot appends one token at its own
+            # Continuous batching: each slot appends token(s) at its own
             # cache length (scatter write; per-slot masks in the attend).
+            # S_new > 1 is the speculative-verify chain — the dense mask
+            # already handles vector q_offset with multi-token queries,
+            # and writes past the buffer (overrunning draft columns) are
+            # dropped rather than clamped onto live positions.
             B = x.shape[0]
             idx = cache_index.astype(jnp.int32)
-            ck = cache["k"].at[jnp.arange(B), idx].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[jnp.arange(B), idx].set(
-                v[:, 0].astype(cache["v"].dtype))
+            if S_new == 1:
+                ck = cache["k"].at[jnp.arange(B), idx].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[jnp.arange(B), idx].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            else:
+                ppos = idx[:, None] + jnp.arange(S_new, dtype=jnp.int32)
+                ck = cache["k"].at[jnp.arange(B)[:, None], ppos].set(
+                    k.astype(cache["k"].dtype), mode="drop")
+                cv = cache["v"].at[jnp.arange(B)[:, None], ppos].set(
+                    v.astype(cache["v"].dtype), mode="drop")
             new_cache = {"k": ck, "v": cv}
             y = attend(q, ck, cv, cfg=cfg, causal=True, window=0,
                        impl="dense", kv_len=idx + S_new, q_offset=idx)
@@ -442,6 +481,31 @@ def _paged_decode_attend(q, k_pages, v_pages, page_table, lengths):
     else:
         out = paged_flash_decode(qs, k_pages, v_pages, page_table, lengths)
     return out[:, None].astype(v_pages.dtype)
+
+
+def _paged_verify_attend(q, k_pages, v_pages, page_table, base):
+    """Multi-token decode attention over a paged pool (speculative verify).
+
+    ``paged_attention_ref`` generalized to C query columns per slot:
+    gather the pool into logical order through the page table, then
+    masked attention where column i (absolute position ``base + i``)
+    sees key positions ``< base + i + 1``.  Scratch-group and
+    rejected-tail writes are masked out the same way stale pool tokens
+    are in the single-token ref, so the accepted prefix attends exactly
+    the KV a draft-free run would."""
+    B, C, H, D = q.shape
+    G_pool, T, KV, _ = k_pages.shape
+    k = k_pages[page_table].reshape(B, -1, KV, D).astype(jnp.float32)
+    v = v_pages[page_table].reshape(B, -1, KV, D).astype(jnp.float32)
+    Gq = H // KV
+    qg = q.reshape(B, C, KV, Gq, D).astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k)
+    kpos = jnp.arange(k.shape[1])[None, None, None, None, :]
+    qpos = (base[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :])
+    s = jnp.where(kpos <= qpos[:, None, None, :, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", w, v)
+    return out.reshape(B, C, H, D).astype(v_pages.dtype)
 
 
 def _ring_decode_attend(q, ck, cv, cache_index, window):

@@ -693,23 +693,30 @@ class Model:
 
     def decode_step_multi(self, params, tokens, cache, lengths,
                           page_table=None):
-        """Continuous-batching decode: one token per slot, each slot at
+        """Continuous-batching decode: C token(s) per slot, each slot at
         its OWN cache length.
 
-        ``tokens``: (B, 1); ``lengths``: (B,) tokens already resident per
-        slot.  Dense layout (``page_table=None``): ``cache["blocks"]``
-        are the usual per-slot buffers, appended by scatter.  Paged
-        layout: the blocks are pools and ``page_table`` (B, MAXG) maps
-        each slot's logical groups to physical ones.  Idle/masked slots
-        are decoded too (their outputs are discarded by the engine) —
-        slot math is row-independent, so live slots' tokens are identical
-        whatever the rest of the batch is doing.
+        ``tokens``: (B, C); ``lengths``: (B,) tokens already resident per
+        slot.  C == 1 is the ordinary decode step; C > 1 is the
+        speculative-verify dispatch — column i of slot b sits at position
+        ``lengths[b] + i``, and the causal per-slot masks make each
+        column's logits exactly what C successive single-token steps
+        would produce, so acceptance can compare draft tokens against
+        bit-stable verified ones.  Dense layout (``page_table=None``):
+        ``cache["blocks"]`` are the usual per-slot buffers, appended by
+        scatter.  Paged layout: the blocks are pools and ``page_table``
+        (B, MAXG) maps each slot's logical groups to physical ones.
+        Idle/masked slots are decoded too (their outputs are discarded by
+        the engine) — slot math is row-independent, so live slots' tokens
+        are identical whatever the rest of the batch is doing.
         """
         cfg = self.cfg
         lengths = jnp.asarray(lengths, jnp.int32)
         x = self._embed(params, tokens)
+        C = tokens.shape[1]
         ctx = {
-            "positions": lengths[:, None],
+            "positions": lengths[:, None] + jnp.arange(C,
+                                                       dtype=jnp.int32)[None],
             "index": lengths,
             "memory": cache.get("memory"),
             "shared_params": params.get("shared"),

@@ -11,7 +11,14 @@ Two runtimes share one engine:
   explores).  Decode is one batched dispatch per step at per-slot cache
   lengths; admission-time prefill reuses the exact chunked-prefill path,
   so generated tokens are identical to the wave runtime's and identical
-  across schedules (slot math is row-independent).
+  across schedules (slot math is row-independent).  Two further tuned
+  mechanisms ride this runtime without touching tokens: *prefix sharing*
+  (``share_prefix``; admission maps registry-matched prompt-prefix page
+  groups copy-on-write instead of re-prefilling them) and
+  *self-speculative decoding* (``draft_len``; n-gram drafts from the
+  request's own history verified as extra columns of the same batched
+  dispatch, accepted only where they match what single-token decode
+  would have sampled).
 * ``wave`` — the legacy static loop (equal-length prompts packed into
   ``batch_slots``-sized waves), kept as the exact-parity fallback and the
   only runtime for stacks without ``supports_continuous_batching``
@@ -33,7 +40,7 @@ import numpy as np
 from repro.models import Model
 
 from .paging import (PAGE_TOKENS, OversubscriptionError, PageAllocator,
-                     min_pages_for)
+                     PrefixIndex, min_pages_for)
 from .scheduler import PAGE_POLICIES, SCHEDULES, Request, SlotScheduler
 
 __all__ = ["ServeConfig", "ServeEngine", "GenerationResult",
@@ -97,6 +104,26 @@ class ServeConfig:
     # tile.  With autotune_kernels the tuned paged_attention entry
     # overrides this (clamped so one max_seq request still fits).
     kv_page_block: int = 1
+    # Prefix sharing across concurrent requests (paged layout only; a
+    # tuned knob): admission content-matches the prompt against a
+    # registry of resident fully-prefilled prompt chunks and maps the
+    # matched page groups copy-on-write instead of re-prefilling them —
+    # TTFT drops by exactly the prefill no longer issued, and the pool
+    # hosts more requests because shared groups are stored once.  Tokens
+    # are untouched: matching compares token content exactly and chunked
+    # prefill is chunk-split-invariant, so shared KV is bitwise the KV
+    # the sharer would have computed.  Inert under dense/wave layouts
+    # and for requests carrying frontend embeddings (their KV depends on
+    # the embeds, not just the token ids).
+    share_prefix: bool = False
+    # Self-speculative decoding draft length (0 = off; a tuned knob):
+    # each decode dispatch carries up to draft_len extra tokens drafted
+    # by n-gram lookup in the request's own history, verified as extra
+    # columns of the same batched step.  The longest draft prefix that
+    # matches what single-token decode would have sampled is accepted —
+    # same (rid, token-index) sampling keys, so generated tokens stay
+    # bit-identical at any draft_len; only the dispatch count drops.
+    draft_len: int = 0
     # Tune/load Pallas block configs for this engine's decode shapes before
     # serving (persisted in the repro.autotune cache, so the compile-time
     # cost is paid once per (shape, dtype, backend)).
@@ -120,6 +147,8 @@ class ServeConfig:
             raise ValueError("prefill_chunk must be >= 1")
         if self.kv_page_block < 1:
             raise ValueError("kv_page_block must be >= 1")
+        if self.draft_len < 0:
+            raise ValueError("draft_len must be >= 0")
         paged = self.runtime == "continuous" and self.kv_layout == "paged"
         needed = self.batch_slots * self.max_seq
         # remember auto-sizing: the engine re-derives a full-residency pool
@@ -169,6 +198,20 @@ class GenerationResult:
     # re-queued a request whose re-prefill cost is the price of admitting
     # on prompt-size reservations instead of worst-case ones
     preemptions: int = 0
+    # prefix-sharing + speculative-decoding provenance: prompt tokens
+    # admitted straight from shared resident groups (their prefill was
+    # skipped), copy-on-write group splits performed, draft tokens
+    # proposed to verification, and draft tokens accepted (beyond the
+    # guaranteed first token of every dispatch)
+    shared_prefix_tokens: int = 0
+    cow_splits: int = 0
+    drafted: int = 0
+    accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens that verification accepted."""
+        return self.accepted / max(self.drafted, 1)
 
     @property
     def decode_tokens_per_sec(self) -> float:
@@ -237,6 +280,9 @@ class ServeEngine:
             self._slot_chunk_paged = jax.jit(model.prefill_chunk_slot_paged)
             self._argmax_multi = jax.jit(self._greedy_rows)
             self._categorical_multi = jax.jit(self._categorical_rows)
+            self._argmax_grid = jax.jit(self._greedy_grid)
+            self._categorical_grid_j = jax.jit(self._categorical_grid)
+            self._copy_group = jax.jit(self._copy_group_blocks)
 
     # ------------------------------------------------------------------
     def _ensure(self, kernel: str, dims: Dict[str, int]) -> Dict[str, Any]:
@@ -517,6 +563,53 @@ class ServeEngine:
             lambda k, row: jax.random.categorical(
                 k, row / self.cfg.temperature))(keys, lg).astype(jnp.int32)
 
+    def _greedy_grid(self, logits):
+        """Greedy over a (B, C, V) speculative-verify grid -> (B, C)
+        tokens; column 0 is exactly ``_greedy_rows`` of the single-token
+        dispatch."""
+        lg = logits[..., :self.model.cfg.vocab_size].astype(jnp.float32)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def _categorical_grid(self, logits, base_keys, produced):
+        """Temperature sampling over a (B, C, V) verify grid: column i of
+        slot b keys on ``fold_in(base_key[b], produced[b] + i)`` — the
+        key single-token decode would use i steps later — which is what
+        makes speculative acceptance token-parity-exact."""
+        lg = logits[..., :self.model.cfg.vocab_size].astype(jnp.float32)
+        offs = jnp.arange(lg.shape[1], dtype=jnp.int32)
+
+        def row(base, p0, rows):
+            return jax.vmap(lambda i, r: jax.random.categorical(
+                jax.random.fold_in(base, p0 + i),
+                r / self.cfg.temperature))(offs, rows)
+
+        return jax.vmap(row)(base_keys, produced, lg).astype(jnp.int32)
+
+    def _copy_group_blocks(self, blocks, src, dst):
+        """Device copy of one physical pool group (the CoW split): every
+        paged cache leaf is (n_sub, G, T, KV, D) — copy pool row
+        ``src`` into ``dst`` across all blocks."""
+        return jax.tree_util.tree_map(
+            lambda l: l.at[:, dst].set(l[:, src]), blocks)
+
+    @staticmethod
+    def _ngram_draft(history: List[int], k: int, max_n: int = 3) -> List[int]:
+        """Self-drafted continuation: find the most recent earlier
+        occurrence of the longest (<= max_n) suffix of ``history`` and
+        propose the <= k tokens that followed it.  Pure host-side
+        heuristic — a wrong draft costs wasted verify columns, never
+        correctness (verification accepts exactly what single-token
+        decode would have produced)."""
+        L = len(history)
+        if k <= 0 or L < 2:
+            return []
+        for n in range(min(max_n, L - 1), 0, -1):
+            suffix = history[L - n:]
+            for s in range(L - n - 1, -1, -1):
+                if history[s:s + n] == suffix:
+                    return history[s + n:s + n + k]
+        return []
+
     def _init_continuous_cache(self):
         """Slot KV state: dense per-slot buffers or the paged pools, plus
         the per-slot frontend memory buffer (never paged — fixed width)."""
@@ -549,12 +642,15 @@ class ServeEngine:
         sched = SlotScheduler(cfg.schedule, B, page_policy=cfg.page_policy)
         sched.submit(reqs)
         alloc = None
+        prefix = None
         if self._paged:
             # the allocator mirrors the device pool exactly (pool_groups
             # already folds in the one-request minimum / auto-sizing)
             alloc = PageAllocator(self.pool_groups * self.group_pages,
                                   PAGE_TOKENS, self.group_pages)
             page_tables = np.zeros((B, self.max_groups), np.int32)
+            if cfg.share_prefix:
+                prefix = PrefixIndex(alloc)
         on_demand = alloc is not None and sched.on_demand
         cache = self._init_continuous_cache()
 
@@ -571,8 +667,10 @@ class ServeEngine:
         results: List[Optional[List[int]]] = [None] * len(prompts)
         per_request: List[Optional[Dict[str, Any]]] = [None] * len(prompts)
         first_tok_t: Dict[int, float] = {}  # rid -> first-ever-token time
+        shared_by_rid: Dict[int, int] = {}  # rid -> shared-admitted tokens
         prefill_s = decode_s = 0.0
         steps = chunks_issued = preemptions = 0
+        shared_total = cow_splits = drafted = accepted = 0
         t0 = time.time()
 
         def run_chunk(b: int) -> None:
@@ -599,6 +697,13 @@ class ServeEngine:
             lengths[b] += piece_tokens.shape[1]
             chunks_issued += 1
             if not slot_chunks[b]:  # prefill done: sample the next token
+                # publish this prompt's full-chunk groups for sharers;
+                # frontend requests never register — their KV depends on
+                # the embeds, not just the token ids, so content-matched
+                # sharing would alias different activations
+                if prefix is not None and r.frontend_embeds is None:
+                    prefix.register(list(r.prompt),
+                                    [int(g) for g in page_tables[b]])
                 # token index = tokens already carried from before a
                 # preemption (0 for fresh requests) — the (rid, index)
                 # sampling key continues exactly where it left off
@@ -639,6 +744,7 @@ class ServeEngine:
                 "latency_s": now - t0,
                 "ttft_s": first_tok_t.get(r.rid, now) - t0,
                 "preemptions": r.preemptions,
+                "shared_tokens": shared_by_rid.get(r.rid, 0),
             }
             if alloc is not None:
                 alloc.release(r.rid)
@@ -664,39 +770,102 @@ class ServeEngine:
             (decode extends group-by-group from there)."""
             return r.resident_tokens if on_demand else r.total_tokens
 
+        def shared_match(r: Request):
+            """``(gids, covered, cow)`` the registry offers ``r``: live
+            groups whose registered chunks cover a prefix of its
+            prompt(+carried tokens), capped one token short of the full
+            footprint so at least one suffix token always runs through
+            prefill (its logits seed sampling).  ``cow`` is set when the
+            suffix's first write lands *inside* the last shared group —
+            that group must be split before admission completes."""
+            if prefix is None or r.frontend_embeds is not None:
+                return [], 0, False
+            toks = list(r.prompt) + list(r.generated)
+            gids, covered = prefix.match(toks)
+            covered = min(covered, len(toks) - 1)
+            keep = -(-covered // self.group_tokens)
+            return gids[:keep], covered, bool(covered % self.group_tokens)
+
+        def try_admit(r: Request):
+            """Secure ``r``'s page reservation: take refs on matched
+            shared groups, extend with private groups for the rest, and
+            CoW-split (allocator swap + device group copy) the boundary
+            group the suffix will write into.  Returns ``(groups,
+            covered)`` — the logical page-table row and the shared token
+            count — or ``None`` when the pool cannot host ``r`` yet."""
+            nonlocal cache, cow_splits
+            gids, covered, cow = shared_match(r)
+            if not gids:
+                groups = alloc.try_alloc(r.rid, admit_tokens(r))
+                return None if groups is None else (groups, 0)
+            alloc.share(r.rid, gids)
+            if alloc.extend(r.rid, admit_tokens(r)) is None:
+                alloc.release(r.rid)  # undo: the shared refs must not leak
+                return None
+            if cow:
+                old = gids[-1]
+                new = alloc.cow_split(r.rid, len(gids) - 1)
+                if new is None:
+                    alloc.release(r.rid)
+                    return None
+                # the split group's resident tokens must read identically
+                # through the new mapping: copy the physical bytes
+                cache = dict(cache, blocks=self._copy_group(
+                    cache["blocks"], jnp.asarray(old, jnp.int32),
+                    jnp.asarray(new, jnp.int32)))
+                cow_splits += 1
+            return alloc.owned_groups(r.rid), covered
+
+        def fits_shared(r: Request) -> bool:
+            """Free-space test matching ``try_admit``'s arithmetic exactly
+            (the sjf bypass scan must never disagree with admission):
+            fresh groups needed = full reservation minus shared groups,
+            plus one when a CoW split will claim a free group."""
+            gids, covered, cow = shared_match(r)
+            need = (alloc.groups_for(admit_tokens(r)) - len(gids)
+                    + (1 if cow else 0))
+            return need <= alloc.free_groups
+
         def next_admission():
-            """(request, groups) for the next admissible request, else
-            None.  Head-first in policy order; under ``sjf`` a bounded
+            """(request, groups, covered) for the next admissible request,
+            else None.  Head-first in policy order; under ``sjf`` a bounded
             bypass admits the first *fitting* pending request when the
             head's reservation doesn't fit (no head-of-line starvation);
             ``fifo``/``interleave`` stay strictly in order."""
             head = sched.peek()
             if alloc is None:
-                return sched.pop(), None
-            groups = alloc.try_alloc(head.rid, admit_tokens(head))
-            if groups is not None:
-                return sched.pop(), groups
+                return sched.pop(), None, 0
+            got = try_admit(head)
+            if got is not None:
+                sched.pop()
+                return head, got[0], got[1]
             if cfg.schedule != "sjf":
                 return None
-            cand = sched.pop_first_fit(
-                lambda r: alloc.fits(admit_tokens(r)))
+            cand = sched.pop_first_fit(fits_shared)
             if cand is None:
                 return None
-            groups = alloc.try_alloc(cand.rid, admit_tokens(cand))
-            # fits() IS try_alloc's free-space test, so this cannot be
-            # None — admitting with a stale page table would corrupt KV
-            assert groups is not None, "pop_first_fit/try_alloc disagree"
-            return cand, groups
+            got = try_admit(cand)
+            # fits_shared IS try_admit's free-space arithmetic, so this
+            # cannot be None — admitting with a stale page table would
+            # corrupt KV
+            assert got is not None, "pop_first_fit/try_admit disagree"
+            return cand, got[0], got[1]
 
-        def extend_slot(b: int) -> None:
+        def extend_slot(b: int, want: Optional[int] = None) -> None:
             """Grow slot ``b``'s reservation to cover the next decode
-            write; on pool exhaustion preempt the youngest request and
-            retry.  ``b`` itself may be the youngest and get preempted —
-            the caller re-filters ``active`` on ``slot_req`` afterwards,
-            which drops self-preempted slots from the dispatch."""
+            write (``want`` tokens under speculation: every column of the
+            verify chain that could be *accepted* must land in reserved
+            groups, not scratch); on pool exhaustion preempt the
+            cheapest-recompute victim — resident tokens minus the
+            shared-prefix tokens other owners keep alive, ties youngest —
+            and retry.  ``b`` itself may be the cheapest and get
+            preempted — the caller re-filters ``active`` on ``slot_req``
+            afterwards, which drops self-preempted slots from the
+            dispatch."""
             r = slot_req[b]
+            target = int(lengths[b]) + 1 if want is None else want
             while True:
-                new = alloc.extend(r.rid, int(lengths[b]) + 1)
+                new = alloc.extend(r.rid, target)
                 if new is not None:
                     if new:
                         grown = alloc.owned_groups(r.rid)
@@ -704,10 +873,19 @@ class ServeEngine:
                     return
                 occupied = [bb for bb in range(B)
                             if slot_req[bb] is not None]
+                by_rid = {slot_req[bb].rid: bb for bb in occupied}
+
+                def recompute_cost(rr: Request) -> int:
+                    # tokens a preemption would force back through
+                    # prefill: resident minus what shared groups keep
+                    # alive for its readmission re-match
+                    return max(0, int(lengths[by_rid[rr.rid]])
+                               - alloc.shared_prefix_tokens(rr.rid))
+
                 victim = SlotScheduler.select_victim(
-                    [slot_req[bb] for bb in occupied])
-                vb = next(bb for bb in occupied
-                          if slot_req[bb] is victim)
+                    [slot_req[bb] for bb in occupied],
+                    cost=recompute_cost)
+                vb = by_rid[victim.rid]
                 preempt_slot(vb)
                 if vb == b:
                     return
@@ -719,7 +897,7 @@ class ServeEngine:
                     self._base_key(slot_req[b].rid))
 
         def loop() -> None:
-            nonlocal cache, decode_s, steps
+            nonlocal cache, decode_s, steps, shared_total, drafted, accepted
             while sched.has_pending or any(r is not None for r in slot_req):
                 progressed = False
                 # 1. admission into freed slots, in policy order
@@ -729,18 +907,26 @@ class ServeEngine:
                     admitted = next_admission()
                     if admitted is None:
                         break  # pool full: wait for a release
-                    head, groups = admitted
+                    head, groups, covered = admitted
                     if groups is not None:
                         page_tables[b, :] = PageAllocator.SCRATCH_GROUP
                         page_tables[b, :len(groups)] = groups
+                    if covered:
+                        shared_total += covered
+                        shared_by_rid[head.rid] = (
+                            shared_by_rid.get(head.rid, 0) + covered)
                     slot_req[b] = head
-                    lengths[b] = 0
+                    lengths[b] = covered
                     chunk = cfg.prefill_chunk
                     # a preempted request re-prefills its prompt plus the
                     # tokens it had generated (exact chunked prefill ⇒
-                    # identical cache state to the uninterrupted run)
+                    # identical cache state to the uninterrupted run);
+                    # with prefix sharing the covered leading tokens are
+                    # already resident in shared groups, so only the
+                    # private suffix is prefilled at all — the TTFT win
                     toks = np.asarray(
-                        [list(head.prompt) + list(head.generated)],
+                        [(list(head.prompt)
+                          + list(head.generated))[covered:]],
                         np.int32)
                     slot_out[b] = list(head.generated)
                     slot_chunks[b] = [toks[:, s:s + chunk]
@@ -759,19 +945,81 @@ class ServeEngine:
                             run_chunk(b)
                             progressed = True
                 # 3. one batched decode step over every decoding slot —
-                # under on_demand, first grow reservations to cover the
-                # step's KV write, preempting victims on pool exhaustion
+                # with speculation, draft_len extra n-gram columns ride
+                # the same dispatch and the longest sample-matching draft
+                # prefix is accepted; under on_demand, first grow
+                # reservations to cover the step's KV writes (the whole
+                # chain that could be accepted), preempting victims on
+                # pool exhaustion
                 active = [b for b in range(B)
                           if slot_req[b] is not None and not slot_chunks[b]]
+                drafts: Dict[int, List[int]] = {}
+                if cfg.draft_len > 0:
+                    for b in active:
+                        r = slot_req[b]
+                        # never draft past the generation budget: tokens
+                        # beyond max_new could not be accepted anyway
+                        room = r.max_new - len(slot_out[b]) - 1
+                        d = self._ngram_draft(list(r.prompt) + slot_out[b],
+                                              min(cfg.draft_len, room))
+                        if d:
+                            drafts[b] = d
                 if on_demand:
                     for b in active:
                         if slot_req[b] is None:
                             continue  # preempted as a victim this pass
-                        extend_slot(b)
+                        want = None
+                        if b in drafts:
+                            want = min(
+                                int(lengths[b]) + 1 + len(drafts[b]),
+                                slot_req[b].total_tokens)
+                        extend_slot(b, want)
                     active = [b for b in active
                               if slot_req[b] is not None
                               and not slot_chunks[b]]
-                if active:
+                if active and cfg.draft_len > 0:
+                    t = time.time()
+                    C = cfg.draft_len + 1
+                    feed = np.zeros((B, C), np.int32)
+                    feed[:, 0] = next_tok
+                    for b, d in drafts.items():
+                        if slot_req[b] is not None:
+                            feed[b, 1:1 + len(d)] = d
+                    logits, new_cache = self._decode_multi(
+                        self.params, jnp.asarray(feed), cache,
+                        jnp.asarray(lengths, jnp.int32),
+                        jnp.asarray(page_tables) if self._paged else None)
+                    if cfg.temperature <= 0:
+                        toks = np.asarray(self._argmax_grid(logits))
+                    else:
+                        produced = jnp.asarray(
+                            [len(slot_out[b]) for b in range(B)], jnp.int32)
+                        toks = np.asarray(self._categorical_grid_j(
+                            logits, base_keys, produced))
+                    cache = new_cache
+                    decode_s += time.time() - t
+                    steps += 1
+                    progressed = True
+                    for b in active:
+                        d = drafts.get(b, [])
+                        drafted += len(d)
+                        # column 0 is the ordinary sampled token (always
+                        # accepted); column i+1's logits are valid only
+                        # if fed draft token d[i] matched the token
+                        # sampled at column i
+                        for i in range(C):
+                            lengths[b] += 1  # the fed token is resident
+                            first_tok_t.setdefault(slot_req[b].rid,
+                                                   time.time())
+                            tok = int(toks[b, i])
+                            accept_token(b, tok)
+                            if i > 0:
+                                accepted += 1
+                            if slot_req[b] is None:
+                                break  # finished mid-chain
+                            if i >= len(d) or tok != d[i]:
+                                break
+                elif active:
                     t = time.time()
                     logits, new_cache = self._decode_multi(
                         self.params, jnp.asarray(next_tok[:, None]), cache,
@@ -809,11 +1057,13 @@ class ServeEngine:
         finally:
             # post-run pool introspection (tests/bench), even on unwind
             self.last_alloc = alloc
+            self.last_prefix = prefix
 
         return GenerationResult(
             [list(t) for t in results], prefill_s, decode_s, steps,
             chunks_issued, [dict(r) for r in per_request],
-            preemptions=preemptions)
+            preemptions=preemptions, shared_prefix_tokens=shared_total,
+            cow_splits=cow_splits, drafted=drafted, accepted=accepted)
 
     def _sample_slot(self, logits, rid: int, produced: int):
         """Sample ONE request's next token from (1, S, V) logits, keyed by

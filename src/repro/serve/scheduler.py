@@ -21,8 +21,9 @@ reservation *means* at admission:
                    engine grows the reservation group-by-group as decode
                    crosses group boundaries; when the pool runs dry the
                    engine preempts a victim (``select_victim``: the
-                   youngest request — least work lost), releases its
-                   groups and re-queues it at the *head* via ``resubmit``
+                   cheapest recompute — least non-shared resident tokens,
+                   youngest on ties), releases its claim on its groups
+                   and re-queues it at the *head* via ``resubmit``
                    with its generated tokens folded into the prompt, so
                    readmission re-prefills and continues.  Tokens stay
                    bit-identical because sampling is keyed
@@ -191,11 +192,19 @@ class SlotScheduler:
         return None
 
     @staticmethod
-    def select_victim(running: Sequence[Request]) -> Request:
-        """The preemption victim: the *youngest* running request (largest
-        arrival; tie: largest rid for determinism).  Youngest-first loses
-        the least completed work to the recompute, and can never starve
-        the oldest request — it keeps its pages until it completes."""
+    def select_victim(running: Sequence[Request],
+                      cost: Optional[Callable[[Request], int]] = None
+                      ) -> Request:
+        """The preemption victim.
+
+        With a ``cost`` function (the engine passes the recompute bill:
+        resident tokens minus the shared-prefix tokens that survive the
+        preemption), pick the *cheapest-recompute* request — ties broken
+        youngest-first (largest arrival, then largest rid) so the oldest
+        request can never starve.  Without one, the historical
+        youngest-first policy: the least completed work lost."""
         if not running:
             raise ValueError("no running requests to preempt")
-        return max(running, key=lambda r: (r.arrival, r.rid))
+        if cost is None:
+            return max(running, key=lambda r: (r.arrival, r.rid))
+        return min(running, key=lambda r: (cost(r), -r.arrival, -r.rid))

@@ -109,6 +109,16 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
         # pools avoid its bookkeeping), which is what makes it worth
         # co-tuning rather than hard-coding
         EnumParam("page_policy", PAGE_POLICIES, "reserve"),
+        # prefix sharing (paged layout): matched prompt-prefix page groups
+        # are mapped copy-on-write instead of re-prefilled — the win
+        # scales with how much of the workload's prompts actually repeat
+        # (CotuneParams.prefix_share_frac), so it is tuned, not assumed
+        EnumParam("share_prefix", (0, 1), 0),
+        # self-speculative draft length (0 = off): more columns amortize
+        # the per-step fixed cost over more accepted tokens, but each
+        # column costs verify compute whether accepted or not — the
+        # optimum is interior and acceptance-rate-dependent
+        EnumParam("draft_len", (0, 2, 4, 8), 0),
     ])
 
 
@@ -142,6 +152,10 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
         schedule=str(config["schedule"]),
         # absent in pre-PR5 cached winners: keep the base's policy then
         page_policy=str(config.get("page_policy", base.page_policy)),
+        # absent in pre-PR6 cached winners: keep the base's settings then
+        share_prefix=bool(int(config.get(
+            "share_prefix", 1 if base.share_prefix else 0))),
+        draft_len=int(config.get("draft_len", base.draft_len)),
     )
 
 
@@ -187,6 +201,14 @@ class CotuneParams:
     # expected-footprint packing outruns the worst-case-safe one
     extend_check_s: float = 1e-6
     preempt_recompute: float = 0.5
+    # prefix-sharing + speculation terms: the fraction of each prompt the
+    # workload's requests share (and the pool therefore stores once /
+    # prefill skips), the per-draft-token acceptance probability of the
+    # n-gram drafter on this workload, and the verify-column cost each
+    # draft token adds to a decode dispatch whether accepted or not
+    prefix_share_frac: float = 0.25
+    spec_accept: float = 0.6
+    draft_token_s: float = 1e-5
 
     @classmethod
     def from_model(cls, cfg, max_seq: int = 2048, **kw) -> "CotuneParams":
@@ -276,6 +298,16 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     pages = int(serve_cfg["kv_cache_pages"])
     schedule = str(serve_cfg["schedule"])
     policy = str(serve_cfg.get("page_policy", "reserve"))
+    share = bool(int(serve_cfg.get("share_prefix", 0)))
+    k_draft = int(serve_cfg.get("draft_len", 0))
+
+    # prefix sharing stores the workload's repeated prompt fraction once
+    # (copy-on-write groups) and skips its prefill: each request's
+    # PRIVATE footprint shrinks to prompt*(1-f)+gen — which raises
+    # residency on page-bound pools — and the prefill term shrinks the
+    # same way (TTFT is exactly the prefill no longer issued)
+    f_share = p.prefix_share_frac if share else 0.0
+    prompt_eff = p.prompt_len * (1.0 - f_share)
 
     # reservation-based residency: group-granular, minus the scratch
     # group — the allocator's exact admission arithmetic (ppb=1 pools;
@@ -283,10 +315,10 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     # packs by the worst-case footprint; on_demand by the EXPECTED one
     # (residency grows linearly from prompt to prompt+gen over a
     # request's lifetime, so the time-averaged footprint is prompt+gen/2)
-    groups_worst = -(-(p.prompt_len + p.gen_len) // PAGE_TOKENS)
+    groups_worst = math.ceil((prompt_eff + p.gen_len) / PAGE_TOKENS)
     if policy == "on_demand":
         groups_per_req = math.ceil(
-            (p.prompt_len + p.gen_len / 2.0) / PAGE_TOKENS)
+            (prompt_eff + p.gen_len / 2.0) / PAGE_TOKENS)
     else:
         groups_per_req = groups_worst
     c_pages = max(1, (pages - 1) // groups_per_req)
@@ -298,9 +330,10 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     if policy == "on_demand":  # per-step reservation-growth bookkeeping
         step_s += C * p.extend_check_s
 
-    # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead
-    chunk = min(chunk, p.prompt_len)
-    n_chunks = math.ceil(p.prompt_len / chunk)
+    # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead —
+    # over the NON-shared tail only (shared groups are already resident)
+    chunk = min(chunk, max(int(math.ceil(prompt_eff)), 1))
+    n_chunks = math.ceil(prompt_eff / chunk)
     prefill_s = n_chunks * (p.prefill_chunk_overhead_s
                             + chunk * p.prefill_tok_s)
 
@@ -315,15 +348,30 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
         preempt_frac = max(0.0, 1.0 - c_worst / float(C))
         prefill_s *= 1.0 + p.preempt_recompute * preempt_frac
 
+    # self-speculative decoding: a draft of k tokens rides every decode
+    # dispatch; with per-token acceptance a, each dispatch lands
+    # E = sum_{i=0..k} a^i = (1-a^(k+1))/(1-a) tokens in expectation (the
+    # first column is the regular decode token and always lands), so g
+    # tokens take g/E dispatches, each dearer by k verify columns.  With
+    # a == 0 any k > 0 is strictly worse — exactly how the tuner learns
+    # to switch speculation off on non-repetitive workloads.
+    spec_E = 1.0
+    step_eff = step_s
+    if k_draft > 0:
+        a = min(max(p.spec_accept, 0.0), 0.999)
+        spec_E = (1.0 - a ** (k_draft + 1)) / (1.0 - a)
+        step_eff = step_s + k_draft * p.draft_token_s
+
     g = p.gen_len
+    decode_cycle = g / spec_E * step_eff
     if schedule == "interleave":
-        denom = g * step_s * p.interleave_step_factor + prefill_s
+        denom = decode_cycle * p.interleave_step_factor + prefill_s
     else:
-        denom = g * step_s + C * prefill_s
+        denom = decode_cycle + C * prefill_s
     tput = C * g / denom
 
     # mean latency: service at residency C + queue wait behind R requests
-    service = prefill_s + g * step_s
+    service = prefill_s + decode_cycle
     R = max(p.n_requests, C)
     latency = service * (R + C) / (2.0 * C)
     if schedule == "sjf":  # short jobs exit first under mixed lengths
@@ -340,6 +388,9 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
                  "resident": float(C), "kv_util": float(C) / float(B),
                  "page_policy": policy,
                  "preempt_frac": float(preempt_frac),
+                 "share_prefix": bool(share),
+                 "draft_len": int(k_draft),
+                 "spec_tokens_per_step": float(spec_E),
                  "sla_met": bool(latency <= p.sla_s)})
 
 

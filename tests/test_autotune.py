@@ -485,3 +485,29 @@ class TestServeConfigCache:
         fresh = AutotuneCache(tmp_cache)
         assert autotune.cached_serve_config(sig_dims, "float32",
                                             cache=fresh) == knobs
+
+    def test_pre_sharing_cache_entry_still_deploys(self, tmp_cache):
+        """Regression: winners persisted before the share_prefix/draft_len
+        knobs existed must deploy with both features off (the page_policy
+        precedent) — widening the knob space must not invalidate caches
+        written by older builds."""
+        from repro.serve.space import apply_serve_knobs
+
+        sig_dims = {"S": 256, "H": 4, "KV": 4, "D": 16}
+        old_shape = {"max_batch": 8, "prefill_chunk": 128,
+                     "kv_cache_pages": 512, "schedule": "sjf"}
+        autotune.put_serve_config(sig_dims, "float32", old_shape, 1234.0)
+        loaded = autotune.cached_serve_config(sig_dims, "float32")
+        assert "share_prefix" not in loaded and "draft_len" not in loaded
+        cfg = apply_serve_knobs(loaded)
+        assert cfg.schedule == "sjf"
+        assert cfg.page_policy == "reserve"  # the PR-5 back-compat rule
+        assert cfg.share_prefix is False and cfg.draft_len == 0
+        # and a widened-space winner round-trips the new knobs
+        new_shape = dict(old_shape, share_prefix=1, draft_len=4,
+                         page_policy="on_demand")
+        autotune.put_serve_config(sig_dims, "float32", new_shape, 2000.0)
+        cfg2 = apply_serve_knobs(autotune.cached_serve_config(
+            sig_dims, "float32"))
+        assert cfg2.share_prefix is True and cfg2.draft_len == 4
+        assert cfg2.page_policy == "on_demand"

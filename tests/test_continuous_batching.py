@@ -407,3 +407,214 @@ class TestSurrogateRankAgreement:
         # at C>1 the surrogate charges prefill once (overlapped) instead of
         # per-admission: interleave >= fifo on raw throughput
         assert s_i.metrics["raw_throughput"] >= s_f.metrics["raw_throughput"]
+
+
+# 18-token common prefix (one full 16-token page group) + distinct tails:
+# the repeated-system-prompt workload prefix sharing exists for.
+SHARED_PREFIX = [7, 3, 9, 1, 4, 4, 8, 2, 6, 5, 1, 9, 2, 7, 3, 8, 5, 2]
+SHARED_PROMPTS = [SHARED_PREFIX + [11], SHARED_PREFIX + [12, 13],
+                  SHARED_PREFIX + [14, 15, 16], SHARED_PREFIX + [17]]
+SHARED_NEW = [5, 4, 6, 3]
+
+
+class TestPrefixSharing:
+    """The CoW prefix-sharing tentpole: identical tokens, fewer prefill
+    dispatches, zero page leaks — under forced copy-on-write splits and
+    sharer preemptions."""
+
+    def _run(self, engine, share, max_new=None, **kw):
+        model, params = engine
+        eng = ServeEngine(model, params, _cfg(
+            max_seq=64, kv_layout="paged", share_prefix=share, **kw))
+        res = eng.generate(SHARED_PROMPTS, max_new or SHARED_NEW)
+        eng.last_alloc.check_balanced()
+        assert eng.last_alloc.groups_in_use == 0
+        return res
+
+    def test_sharing_token_parity_and_fewer_prefill_chunks(self, engine):
+        off = self._run(engine, False)
+        on = self._run(engine, True)
+        assert on.tokens == off.tokens  # sharing moves work, not content
+        assert on.shared_prefix_tokens > 0
+        assert off.shared_prefix_tokens == 0
+        # the shared groups' prefill was genuinely skipped
+        assert on.prefill_chunks < off.prefill_chunks
+        # per-request provenance carries the shared-token counts
+        assert sum(r["shared_tokens"] for r in on.per_request) \
+            == on.shared_prefix_tokens
+        assert any(r["shared_tokens"] == 0 for r in on.per_request)  # donor
+
+    def test_sharing_parity_across_schedules(self, engine):
+        outs = [self._run(engine, True, schedule=s).tokens
+                for s in ("fifo", "sjf", "interleave")]
+        assert outs[0] == outs[1] == outs[2]
+
+    def test_sharing_temperature_parity(self, engine):
+        """Sampled tokens key on (rid, token index) only — admitting from
+        shared groups must not shift the key stream."""
+        off = self._run(engine, False, temperature=0.8, seed=7)
+        on = self._run(engine, True, temperature=0.8, seed=7)
+        assert on.tokens == off.tokens
+        assert on.shared_prefix_tokens > 0
+
+    def test_forced_cow_split_preserves_tokens(self, engine):
+        """An identical prompt and a boundary-sharing shorter prompt both
+        cover into their final token's group: the engine must CoW-split
+        that group before the first divergent write, leaving the donor's
+        KV bytes untouched (pinned via the donor's own continuation)."""
+        model, params = engine
+        donor = [((i * 37) % 509) + 1 for i in range(32)]  # 2 full groups
+        # the donor decodes long enough to stay resident (groups live,
+        # registry fresh) while the filler drains a slot and each sharer
+        # is admitted in turn; both sharers' coverage ends mid-group
+        # (identical prompt: 31 of 32 — the last token always dispatches
+        # for logits; boundary prompt: 19 of 20), forcing a CoW split
+        prompts = [donor, [1, 2, 3], list(donor), donor[:20]]
+        max_new = [26, 2, 5, 4]
+        outs = {}
+        for share in (False, True):
+            eng = ServeEngine(model, params, _cfg(
+                max_seq=64, batch_slots=2, kv_layout="paged",
+                share_prefix=share))
+            outs[share] = eng.generate(prompts, max_new)
+            eng.last_alloc.check_balanced()
+            assert eng.last_alloc.groups_in_use == 0
+        assert outs[True].tokens == outs[False].tokens
+        assert outs[True].cow_splits >= 2  # both sharers forced a split
+        assert outs[True].shared_prefix_tokens > 0
+        assert outs[True].prefill_chunks < outs[False].prefill_chunks
+
+    def test_sharing_survives_preemption_and_cuts_recompute(self, engine):
+        """on_demand exhaustion on a shared workload: shared groups stay
+        resident through a sharer's preemption (other owners hold them),
+        so readmission re-prefills only the private tail — same tokens,
+        fewer prefill dispatches than the unshared run."""
+        outs = {}
+        for share in (False, True):
+            # decode-heavy on a 4-usable-group pool: requests outgrow
+            # their prompt-size reservations mid-decode and run it dry
+            # even with the shared prefix deduplicated
+            outs[share] = self._run(engine, share, batch_slots=3,
+                                    kv_cache_pages=5,
+                                    page_policy="on_demand",
+                                    max_new=[14, 13, 16, 12])
+        assert outs[True].tokens == outs[False].tokens
+        assert outs[True].preemptions > 0  # the pool really ran dry
+        assert outs[True].prefill_chunks < outs[False].prefill_chunks
+
+    def test_sharing_inert_on_dense_layout(self, engine):
+        model, params = engine
+        eng = ServeEngine(model, params, _cfg(
+            max_seq=64, kv_layout="dense", share_prefix=True))
+        res = eng.generate(SHARED_PROMPTS, SHARED_NEW)
+        assert res.shared_prefix_tokens == 0 and res.cow_splits == 0
+
+
+class TestSpeculativeDecode:
+    """Self-speculative n-gram decoding: the draft rides the SAME verify
+    dispatch and the acceptance rule replays greedy/sampled choices at
+    the same (rid, token-index) keys — so tokens are bit-identical at any
+    draft_len, and repetitive histories collapse dispatch counts."""
+
+    def test_draft_parity_matrix(self, engine, reference_tokens):
+        model, params = engine
+        for k in (2, 4):
+            for sched in ("fifo", "sjf", "interleave"):
+                eng = ServeEngine(model, params, _cfg(
+                    kv_layout="paged", schedule=sched, draft_len=k))
+                res = eng.generate(PROMPTS, MAX_NEW)
+                assert res.tokens == reference_tokens, (k, sched)
+
+    def test_draft_parity_dense_layout(self, engine, reference_tokens):
+        model, params = engine
+        eng = ServeEngine(model, params, _cfg(kv_layout="dense",
+                                              draft_len=4))
+        assert eng.generate(PROMPTS, MAX_NEW).tokens == reference_tokens
+
+    def test_draft_parity_under_preemption(self, engine):
+        """Speculation composes with on_demand growth/preemption: the
+        draft-aware pre-extension and recompute keep token parity."""
+        model, params = engine
+        outs = {}
+        for k in (0, 4):
+            eng = ServeEngine(model, params, _cfg(
+                kv_layout="paged", batch_slots=3, kv_cache_pages=4,
+                page_policy="on_demand", draft_len=k))
+            outs[k] = eng.generate(TestPagePolicy.HEAVY_PROMPTS,
+                                   TestPagePolicy.HEAVY_NEW)
+            eng.last_alloc.check_balanced()
+            assert eng.last_alloc.groups_in_use == 0
+        assert outs[4].tokens == outs[0].tokens
+        assert outs[4].preemptions > 0
+
+    def test_draft_temperature_parity(self, engine):
+        model, params = engine
+        outs = {}
+        for k in (0, 4):
+            eng = ServeEngine(model, params, _cfg(
+                kv_layout="paged", temperature=0.8, seed=7, draft_len=k))
+            outs[k] = eng.generate(PROMPTS, MAX_NEW).tokens
+        assert outs[4] == outs[0]
+
+    def test_acceptance_collapses_dispatches_on_repetitive_history(
+            self, engine):
+        """The acceptance machinery itself, pinned on a constant-output
+        model (zeroed params -> uniform logits -> greedy repeats token 0):
+        the n-gram draft matches the generated loop, verification accepts
+        it, and equal tokens arrive in strictly fewer dispatches."""
+        model, params = engine
+        zero = jax.tree_util.tree_map(jnp.zeros_like, params)
+        runs = {}
+        for k in (0, 4):
+            eng = ServeEngine(model, zero, _cfg(kv_layout="paged",
+                                                draft_len=k))
+            runs[k] = eng.generate([[5, 3, 5, 3]], 12)
+        assert runs[4].tokens == runs[0].tokens
+        assert runs[4].drafted > 0
+        assert runs[4].accepted > 0
+        assert runs[4].steps < runs[0].steps
+        assert 0.0 < runs[4].acceptance_rate <= 1.0
+        assert runs[0].drafted == runs[0].accepted == 0
+
+    def test_sharing_and_speculation_compose(self, engine):
+        model, params = engine
+        outs = {}
+        for on in (False, True):
+            eng = ServeEngine(model, params, _cfg(
+                max_seq=64, kv_layout="paged", share_prefix=on,
+                draft_len=4 if on else 0))
+            outs[on] = eng.generate(SHARED_PROMPTS, SHARED_NEW)
+            eng.last_alloc.check_balanced()
+            assert eng.last_alloc.groups_in_use == 0
+        assert outs[True].tokens == outs[False].tokens
+        assert outs[True].shared_prefix_tokens > 0
+
+    def test_negative_draft_len_rejected(self):
+        with pytest.raises(ValueError, match="draft_len"):
+            _cfg(draft_len=-1)
+
+    def test_new_knob_surrogate_rank_agreement(self, engine):
+        """Engine evidence (prefill_chunks / dispatch counts above) says
+        sharing and accepted speculation do strictly less work for equal
+        tokens; the surrogate must rank the widened knob space the same
+        way — and must rank speculation WORSE when nothing is accepted."""
+        from repro.serve.space import CotuneParams, coupled_serve_metrics
+
+        p = CotuneParams(prompt_len=64, gen_len=16, max_seq=256,
+                         n_requests=16)
+        kcfg = p.default_kernel_config()
+        base = dict(max_batch=8, prefill_chunk=64, kv_cache_pages=64,
+                    schedule="fifo", page_policy="reserve")
+        v0 = coupled_serve_metrics(dict(base), kcfg, p)
+        vs = coupled_serve_metrics(dict(base, share_prefix=1), kcfg, p)
+        vk = coupled_serve_metrics(dict(base, draft_len=4), kcfg, p)
+        assert vs.value > v0.value
+        assert vs.metrics["prefill_s"] < v0.metrics["prefill_s"]
+        assert vk.value > v0.value
+        assert vk.metrics["spec_tokens_per_step"] > 1.0
+        # zero acceptance: drafts are pure verify overhead
+        p_dry = CotuneParams(prompt_len=64, gen_len=16, max_seq=256,
+                             n_requests=16, spec_accept=0.0)
+        vk_dry = coupled_serve_metrics(dict(base, draft_len=4), kcfg, p_dry)
+        v0_dry = coupled_serve_metrics(dict(base), kcfg, p_dry)
+        assert vk_dry.value < v0_dry.value

@@ -1,7 +1,12 @@
 """Paged KV allocator + runtime scheduler invariants (no jax needed)."""
-import pytest
+import random
 
-from repro.serve.paging import PAGE_TOKENS, OversubscriptionError, PageAllocator
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.paging import (PAGE_TOKENS, OversubscriptionError,
+                                PageAllocator, PrefixIndex)
 from repro.serve.scheduler import Request, SlotScheduler, admission_order
 
 
@@ -242,8 +247,205 @@ class TestSlotScheduler:
         with pytest.raises(ValueError):
             SlotScheduler.select_victim([])
 
+    def test_select_victim_cost_aware_picks_cheapest_recompute(self):
+        reqs = _reqs([4, 2, 6])
+        SlotScheduler("fifo", 2).submit(reqs)
+        costs = {0: 5, 1: 9, 2: 7}
+        got = SlotScheduler.select_victim(reqs, cost=lambda r: costs[r.rid])
+        assert got.rid == 0  # smallest re-prefill bill wins
+        # equal cost falls back to the historical youngest-arrival rule
+        assert SlotScheduler.select_victim(reqs, cost=lambda r: 3).rid == 2
+        with pytest.raises(ValueError):
+            SlotScheduler.select_victim([], cost=lambda r: 0)
+
     def test_page_policy_axis_validated(self):
         assert not SlotScheduler("fifo", 2).on_demand  # reserve default
         assert SlotScheduler("fifo", 2, page_policy="on_demand").on_demand
         with pytest.raises(ValueError, match="unknown page_policy"):
             SlotScheduler("fifo", 2, page_policy="lazy")
+
+
+class TestPrefixSharingAllocator:
+    def test_share_refcounts_and_either_release_order(self):
+        a = PageAllocator(n_pages=8)
+        donor = a.try_alloc(0, 32)  # 2 groups
+        assert a.share(1, donor) == donor
+        assert all(a.ref(g) == 2 for g in donor)
+        assert a.groups_in_use == 2  # distinct physical groups, not 4
+        a.check_balanced()
+        a.release(0)  # donor leaves first: the sharer keeps the KV alive
+        assert all(a.ref(g) == 1 for g in donor)
+        assert a.owned_groups(1) == donor
+        a.check_balanced()
+        a.release(1)
+        assert a.groups_in_use == 0
+        a.check_balanced()
+
+    def test_share_rejects_dead_scratch_and_double_owner(self):
+        a = PageAllocator(n_pages=8)
+        donor = a.try_alloc(0, 16)
+        with pytest.raises(ValueError, match="already holds"):
+            a.share(0, donor)
+        with pytest.raises(ValueError, match="scratch"):
+            a.share(1, [PageAllocator.SCRATCH_GROUP])
+        a.release(0)
+        with pytest.raises(ValueError, match="not live"):
+            a.share(1, donor)  # freed groups can never be shared
+        a.check_balanced()
+
+    def test_cow_split_privatizes_one_logical_group(self):
+        a = PageAllocator(n_pages=8)
+        donor = a.try_alloc(0, 32)
+        a.share(1, donor)
+        new = a.cow_split(1, 1)
+        assert new is not None and new != donor[1]
+        assert a.owned_groups(1) == [donor[0], new]
+        assert a.owned_groups(0) == donor  # donor's mapping is untouched
+        assert a.ref(donor[1]) == 1 and a.ref(new) == 1
+        assert a.ref(donor[0]) == 2  # leading group is still shared
+        a.check_balanced()
+
+    def test_cow_split_requires_sharing_and_free_space(self):
+        a = PageAllocator(n_pages=4)  # 3 usable groups
+        donor = a.try_alloc(0, 32)  # 2 groups
+        a.share(1, donor)
+        assert a.cow_split(1, 0) is not None  # takes the last free group
+        assert a.cow_split(1, 1) is None      # pool full: preempt + retry
+        with pytest.raises(ValueError, match="single owner"):
+            a.cow_split(1, 0)  # already private
+        with pytest.raises(KeyError):
+            a.cow_split(9, 0)
+        a.check_balanced()
+
+    def test_shared_prefix_tokens_counts_leading_run_only(self):
+        a = PageAllocator(n_pages=8)
+        donor = a.try_alloc(0, 48)  # 3 groups
+        a.share(1, donor)
+        assert a.shared_prefix_tokens(1) == 48
+        a.cow_split(1, 1)  # middle goes private: leading run is 1 group
+        assert a.shared_prefix_tokens(1) == PAGE_TOKENS
+        assert a.shared_prefix_tokens(0) == PAGE_TOKENS  # symmetric view
+        a.release(1)
+        assert a.shared_prefix_tokens(0) == 0
+        with pytest.raises(KeyError):
+            a.shared_prefix_tokens(9)
+
+    def test_generation_bumps_only_on_free(self):
+        a = PageAllocator(n_pages=4)
+        g = a.try_alloc(0, 16)[0]
+        gen = a.generation(g)
+        a.share(1, [g])
+        a.release(0)
+        assert a.generation(g) == gen  # still live via the sharer
+        a.release(1)
+        assert a.generation(g) == gen + 1  # actually freed: aged
+
+
+class TestPrefixIndex:
+    def test_register_then_chain_match(self):
+        a = PageAllocator(n_pages=16)
+        idx = PrefixIndex(a)
+        prompt = list(range(40))  # 2 full chunks + 8-token tail
+        gids = a.try_alloc(0, len(prompt))
+        assert idx.register(prompt, gids) == 2  # full chunks only
+        hit, covered = idx.match(prompt)
+        assert covered == 32 and hit == gids[:2]
+        # divergence mid-chunk shares only the whole chunks before it
+        hit, covered = idx.match(prompt[:20] + [999] * 12)
+        assert covered == 16 and hit == gids[:1]
+        # a different first token shares nothing
+        assert idx.match([999] + prompt[1:]) == ([], 0)
+
+    def test_boundary_share_of_trailing_partial_chunk(self):
+        a = PageAllocator(n_pages=16)
+        idx = PrefixIndex(a)
+        prompt = list(range(32))
+        gids = a.try_alloc(0, 32)
+        idx.register(prompt, gids)
+        # a shorter prompt that is a prefix of a registered chunk covers
+        # its own partial tail (the caller CoWs that final group)
+        hit, covered = idx.match(prompt[:24])
+        assert covered == 24 and hit == gids[:2]
+
+    def test_stale_entries_never_match(self):
+        a = PageAllocator(n_pages=4)
+        idx = PrefixIndex(a)
+        prompt = list(range(16))
+        gids = a.try_alloc(0, 16)
+        idx.register(prompt, gids)
+        a.release(0)
+        assert idx.match(prompt) == ([], 0)  # freed: pruned
+        regot = a.try_alloc(1, 16)
+        assert regot == gids  # the pool recycled the same physical group
+        assert idx.match(prompt) == ([], 0)  # generation mismatch: stale
+
+    def test_first_registration_wins(self):
+        a = PageAllocator(n_pages=8)
+        idx = PrefixIndex(a)
+        prompt = list(range(16))
+        g0 = a.try_alloc(0, 16)
+        g1 = a.try_alloc(1, 16)
+        assert idx.register(prompt, g0) == 1
+        assert idx.register(prompt, g1) == 0  # duplicate content skipped
+        assert idx.match(prompt)[0] == g0
+
+
+class TestSharingInterleavingProperties:
+    """Property sweep over random alloc/share/extend/CoW/release
+    interleavings (hypothesis draws the walk parameters; the conftest
+    stub supplies a deterministic drop-in when the real package is not
+    installed).  After EVERY step the pool must stay balanced — no group
+    lost, duplicated or left with a drifted refcount — and distinct
+    physical residency can never exceed the sum of logical
+    reservations."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**6),
+           st.sampled_from([4, 8, 16, 32]),
+           st.sampled_from([1, 2]))
+    def test_random_interleavings_stay_balanced(self, seed, pages, ppg):
+        rng = random.Random(seed)
+        a = PageAllocator(n_pages=pages, pages_per_group=ppg)
+        live = {}  # owner -> reserved token count
+        next_owner = 0
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.35 or not live:
+                toks = rng.randrange(1, a.usable_tokens + 1)
+                if a.try_alloc(next_owner, toks) is not None:
+                    live[next_owner] = toks
+                    next_owner += 1
+            elif op < 0.50:  # share a donor's leading groups
+                donor = rng.choice(sorted(live))
+                gids = a.owned_groups(donor)
+                k = rng.randrange(1, len(gids) + 1)
+                a.share(next_owner, gids[:k])
+                live[next_owner] = k * a.group_tokens
+                next_owner += 1
+            elif op < 0.65:  # CoW a shared logical position
+                owner = rng.choice(sorted(live))
+                gids = a.owned_groups(owner)
+                j = rng.randrange(len(gids))
+                if a.ref(gids[j]) >= 2:
+                    a.cow_split(owner, j)  # None (pool full) is fine
+            elif op < 0.80:  # on-demand growth
+                owner = rng.choice(sorted(live))
+                want = live[owner] + rng.randrange(1, 2 * a.group_tokens)
+                try:
+                    if a.extend(owner, want) is not None:
+                        live[owner] = want
+                except OversubscriptionError:
+                    pass  # pool can never hold it — legal, loud, no-op
+            else:  # preemption/completion: release mid-flight
+                owner = rng.choice(sorted(live))
+                a.release(owner)
+                del live[owner]
+            a.check_balanced()  # refs exact, no dup/lost/scratch groups
+            logical = sum(len(a.owned_groups(o)) for o in live)
+            assert a.groups_in_use <= logical
+            assert all(a.ref(g) >= 1
+                       for o in live for g in a.owned_groups(o))
+        for owner in sorted(live):
+            a.release(owner)
+        a.check_balanced()
+        assert a.groups_in_use == 0
