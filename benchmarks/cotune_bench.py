@@ -69,6 +69,15 @@ def _tune_serve_alone(p: CotuneParams, budget: int, seed: int,
     return Tuner(sut.space(), sut, budget=budget, seed=seed).run()
 
 
+def trials_to_best(report) -> int:
+    """Charged-test index at which the run first scored its best value
+    (the paper's convergence-speed lens on the same trial stream).
+    Trial values are the minimized objective (sign-normalized), so the
+    best is taken from the history itself."""
+    best = min(t.value for t in report.history)
+    return min(t.test_index for t in report.history if t.value == best)
+
+
 def one_seed(p: CotuneParams, budget: int, seed: int) -> Dict[str, Any]:
     half = budget // 2
 
@@ -87,21 +96,42 @@ def one_seed(p: CotuneParams, budget: int, seed: int) -> Dict[str, Any]:
     parts = sut.space().split(jrep.best_config)
     joint = coupled_serve_metrics(parts["serve"], parts["kernel"], p)
 
+    # PR 7 ablation: the same joint tune with static feasibility pruning
+    # disabled — infeasible candidates (serve configs below the KV-page
+    # deployability floor) are charged tests instead of pruned for free
+    sut_np = make_cotune_sut(p)
+    jrep_np = Tuner(sut_np.space(), sut_np, budget=budget, seed=seed,
+                    optimizer="subspace_rr", feasibility=False).run()
+    parts_np = sut_np.space().split(jrep_np.best_config)
+    joint_np = coupled_serve_metrics(parts_np["serve"],
+                                     parts_np["kernel"], p)
+
     return {
         "seed": seed,
         "independent": {"tput": indep.value,
                         "objective": indep.objective(),
                         "serve": srep.best_config,
-                        "kernel": krep.best_config},
+                        "kernel": krep.best_config,
+                        "n_infeasible_pruned": srep.n_infeasible_pruned
+                        + krep.n_infeasible_pruned},
         "sequential": {"tput": seq.value, "objective": seq.objective(),
                        "serve": srep_seq.best_config,
-                       "kernel": krep.best_config},
+                       "kernel": krep.best_config,
+                       "n_infeasible_pruned": srep_seq.n_infeasible_pruned
+                       + krep.n_infeasible_pruned},
         # evaluator_calls << n_tests: batched composite rounds dispatch as
         # single test_batch calls through the CompositeSUT
         "joint": {"tput": joint.value, "objective": joint.objective(),
                   "serve": parts["serve"], "kernel": parts["kernel"],
                   "n_tests": jrep.n_tests,
-                  "evaluator_calls": jtuner.n_evaluator_calls},
+                  "evaluator_calls": jtuner.n_evaluator_calls,
+                  "n_infeasible_pruned": jrep.n_infeasible_pruned,
+                  "trials_to_best": trials_to_best(jrep)},
+        "joint_no_pruning": {"tput": joint_np.value,
+                             "n_tests": jrep_np.n_tests,
+                             "n_infeasible_pruned":
+                                 jrep_np.n_infeasible_pruned,
+                             "trials_to_best": trials_to_best(jrep_np)},
     }
 
 
@@ -122,6 +152,19 @@ def bench(budget: int = DEFAULT_BUDGET,
                                                        1e-12),
         "joint_wins": sum(r["joint"]["tput"] >= r["independent"]["tput"]
                           for r in per_seed),
+        # PR 7: static-feasibility pruning accounting (pruned candidates
+        # are free; the ablation re-runs the joint arm with pruning off)
+        "pruning": {
+            "joint_pruned_mean": float(np.mean(
+                [r["joint"]["n_infeasible_pruned"] for r in per_seed])),
+            "joint_trials_to_best_mean": float(np.mean(
+                [r["joint"]["trials_to_best"] for r in per_seed])),
+            "no_pruning_trials_to_best_mean": float(np.mean(
+                [r["joint_no_pruning"]["trials_to_best"]
+                 for r in per_seed])),
+            "no_pruning_tput_mean": float(np.mean(
+                [r["joint_no_pruning"]["tput"] for r in per_seed])),
+        },
     }
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
@@ -137,6 +180,11 @@ def rows_from(result: Dict[str, Any]) -> List[Row]:
         ("cotune_joint_over_independent", 0.0,
          f"{result['joint_over_independent']:.2f}x "
          f"({result['joint_wins']}/{len(result['seeds'])} seeds)"),
+        ("cotune_joint_pruning", 0.0,
+         f"{result['pruning']['joint_pruned_mean']:.1f} pruned free, "
+         f"to-best {result['pruning']['joint_trials_to_best_mean']:.0f} "
+         f"vs {result['pruning']['no_pruning_trials_to_best_mean']:.0f} "
+         "trials (pruning on vs off)"),
     ]
 
 

@@ -80,9 +80,41 @@ def _bench_batched_engine(seed: int = 0, repeats: int = 5) -> List[Row]:
     ]
 
 
+def _bench_pruning(budget: int = 32) -> List[Row]:
+    """Static feasibility pruning (PR 7) on a VMEM-constrained kernel
+    tune: pruned candidates are free, so at equal budget the pruned run
+    reaches its best in no more charged trials than the unpruned one."""
+    from repro.autotune.sut import KernelSUT
+
+    # D=2048 puts the largest flash tiles over VMEM while the default
+    # and mid-size tiles stay finite — the pruning path genuinely acts
+    dims = {"B": 2, "S": 8192, "SK": 8192, "H": 8, "KV": 8, "D": 2048}
+
+    def tune(feasibility):
+        sut = KernelSUT("flash_attention", dims, mode="model")
+        return Tuner(sut.space(), sut, budget=budget, seed=0,
+                     feasibility=feasibility).run()
+
+    def to_best(rep):
+        best = min(t.value for t in rep.history)
+        return min(t.test_index for t in rep.history if t.value == best)
+
+    t0 = time.time()
+    on, off = tune(None), tune(False)
+    us = (time.time() - t0) * 1e6 / (2 * budget)
+    assert on.best_metric.value <= off.best_metric.value
+    return [
+        ("pruned_kernel_tune_flash", us,
+         f"{on.n_infeasible_pruned} pruned free, {on.n_tests} charged, "
+         f"to-best {to_best(on)} vs {to_best(off)} trials "
+         "(pruning on vs off)"),
+    ]
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     rows += _bench_batched_engine()
+    rows += _bench_pruning()
     sphere_space = ParameterSpace(
         [FloatParam(f"x{i}", -5, 5, default=4.0) for i in range(8)])
     rows += _bench_fn("sphere8d", lambda c: sum(v * v for v in c.values()),

@@ -19,7 +19,7 @@ fi
 
 # Post-PR6 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=464
+MIN_COLLECTED=534
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -35,6 +35,48 @@ python -m pytest "${PYTEST_ARGS[@]}"
 
 echo "=== determinism matrix: every optimizer × dispatch mode × seed ==="
 python -m pytest -q tests/test_determinism_matrix.py
+
+echo "=== lint gate: jit/Pallas/allocator static analysis (zero findings) ==="
+# Machine-readable AST lint over the whole package (repro.analysis.lint):
+# jit retrace hazards, pallas_call arity contracts, allocator unwind
+# discipline.  Exits non-zero on ANY finding; the committed baseline is
+# zero, so a new finding is a regression, not noise.
+python -m repro.analysis.lint --check src/repro
+echo "lint gate OK (zero findings)"
+
+echo "=== smoke: static feasibility pruning (zero-budget infeasible) ==="
+# A kernel tune over a shape whose biggest tiles blow VMEM: infeasible
+# configs must be pruned WITHOUT charging budget (counted instead), every
+# charged trial must be statically feasible and finitely scored, and the
+# pruned trial stream must reproduce under its seed.
+timeout 60 python - <<'EOF'
+import math
+
+from repro.analysis.feasibility import kernel_feasibility
+from repro.autotune.sut import KernelSUT
+from repro.core.tuner import Tuner
+
+DIMS = {"ROWS": 8192, "D": 6144}  # block_rows >= 512 exceeds VMEM
+
+def run():
+    sut = KernelSUT("rmsnorm", DIMS, mode="model")
+    return Tuner(sut.space(), sut, budget=24, optimizer="rrs",
+                 seed=0).run()
+
+rep, rep2 = run(), run()
+model = kernel_feasibility("rmsnorm", DIMS, "float32")
+assert rep.n_infeasible_pruned > 0, "pruning never engaged"
+assert all(model(t.config) for t in rep.history[1:]), \
+    "an infeasible config was charged a test"
+assert all(math.isfinite(t.value) for t in rep.history[1:]), \
+    "a charged trial scored inf"
+trace = lambda r: [(sorted(t.config.items()), t.value) for t in r.history]
+assert trace(rep) == trace(rep2) \
+    and rep.n_infeasible_pruned == rep2.n_infeasible_pruned, \
+    "pruning broke seeded determinism"
+print(f"pruning smoke OK ({rep.n_infeasible_pruned} pruned for free, "
+      f"{rep.n_tests} charged, best={rep.best_config})")
+EOF
 
 echo "=== smoke: batched tuning engine (budget 500, ~seconds) ==="
 timeout 30 python - <<'EOF'

@@ -1,0 +1,33 @@
+"""Static analysis for the tuning stack: feasibility models + the repo lint.
+
+Two halves, both *static* in the ACTS sense — they spend zero test budget:
+
+* ``repro.analysis.feasibility`` — declarative per-space feasibility
+  models.  The kernel predicates are the SAME functions the roofline cost
+  models evaluate (VMEM tile footprint vs ``VMEM_BYTES``), so "statically
+  infeasible" and "cost == inf" can never drift apart; the serve
+  predicates encode the ``apply_serve_knobs`` deployability floor so the
+  config the tuner scores is the config that deploys.  ``BudgetedRun``
+  consumes these models to prune candidates *without charging budget*.
+* ``repro.analysis.lint`` — a stdlib-``ast`` lint over the repo's own
+  runtime invariants: jit retrace hazards, ``pallas_call`` contract
+  arity, allocator acquire/release balance.  ``python -m
+  repro.analysis.lint --check src/repro`` is the CI gate.
+"""
+from .feasibility import (
+    CompositeFeasibility,
+    FeasibilityModel,
+    Predicate,
+    Violation,
+    kernel_feasibility,
+    serve_feasibility,
+)
+
+__all__ = [
+    "Predicate",
+    "Violation",
+    "FeasibilityModel",
+    "CompositeFeasibility",
+    "kernel_feasibility",
+    "serve_feasibility",
+]

@@ -1,0 +1,257 @@
+"""Declarative feasibility models for tuning spaces.
+
+A ``FeasibilityModel`` is a named bag of ``Predicate``s over concrete
+configs.  ``error``-severity predicates define feasibility (the tuner
+prunes violators before they reach the SUT, charging no budget);
+``warn``-severity predicates surface quality hazards — e.g. sublane
+misalignment, which the cost model penalizes *finitely* — without
+excluding the config, so the invariant
+
+    ``model(config)  ⇔  cost_model(config) < inf``
+
+holds exactly for the kernel models (pinned by the property test in
+``tests/test_feasibility.py``).
+
+The kernel predicates are built on the SAME per-kernel VMEM-footprint
+functions the roofline cost models call (``KernelDef.vmem_footprint``) —
+one predicate, two consumers, no drift.  The serve predicates encode the
+``apply_serve_knobs``/``min_pages_for`` deployability floor: a config
+below the floor would be silently mutated at deployment (tuned !=
+deployed), so fresh tuning runs never score one.  ``CompositeFeasibility``
+composes member models under the composite space's prefixed keys.
+
+Everything here is numpy/stdlib-only and imports jax-touching modules
+lazily, so building a model never initializes an accelerator backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+__all__ = [
+    "Predicate",
+    "Violation",
+    "FeasibilityModel",
+    "CompositeFeasibility",
+    "kernel_feasibility",
+    "serve_feasibility",
+]
+
+Config = Dict[str, Any]
+
+# A predicate check returns None when the config passes and a human-readable
+# reason string when it does not.
+CheckFn = Callable[[Config], Optional[str]]
+
+
+@dataclass(frozen=True)
+class Violation:
+    predicate: str
+    reason: str
+    severity: str = "error"  # "error" => infeasible; "warn" => hazard only
+
+
+@dataclass(frozen=True)
+class Predicate:
+    name: str
+    check: CheckFn
+    severity: str = "error"
+
+    def __post_init__(self):
+        if self.severity not in ("error", "warn"):
+            raise ValueError(f"severity must be error|warn, "
+                             f"got {self.severity!r}")
+
+
+class FeasibilityModel:
+    """Named predicates over one parameter space's concrete configs.
+
+    Calling the model answers the tuner's question — is this config worth
+    a test? — from the ``error`` predicates alone.  ``check`` returns every
+    violation (warnings included) for reporting and for the lint-style
+    ``explain`` string.
+    """
+
+    def __init__(self, name: str, predicates: Sequence[Predicate]):
+        self.name = name
+        self.predicates = tuple(predicates)
+        names = [p.name for p in self.predicates]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate predicate names in {name!r}: "
+                             f"{names}")
+
+    def __call__(self, config: Mapping[str, Any]) -> bool:
+        return all(p.check(dict(config)) is None
+                   for p in self.predicates if p.severity == "error")
+
+    def check(self, config: Mapping[str, Any]) -> List[Violation]:
+        cfg = dict(config)
+        out: List[Violation] = []
+        for p in self.predicates:
+            reason = p.check(cfg)
+            if reason is not None:
+                out.append(Violation(p.name, reason, p.severity))
+        return out
+
+    def explain(self, config: Mapping[str, Any]) -> str:
+        vs = self.check(config)
+        if not vs:
+            return f"{self.name}: feasible"
+        return "\n".join(f"{self.name}.{v.predicate} [{v.severity}]: "
+                         f"{v.reason}" for v in vs)
+
+    def __repr__(self) -> str:
+        return (f"FeasibilityModel({self.name!r}, "
+                f"{[p.name for p in self.predicates]})")
+
+
+class CompositeFeasibility:
+    """Member feasibility models composed under prefixed keys.
+
+    Mirrors ``CompositeSpace``: a joint config's ``f"{member}{sep}{knob}"``
+    keys are routed to each member's model with the prefix stripped, and
+    violations come back with the member prefix on the predicate name.
+    Joint feasibility is the conjunction of member feasibilities — a
+    member with no model constrains nothing.
+    """
+
+    def __init__(self, members: Mapping[str, FeasibilityModel],
+                 sep: str = "."):
+        if not members:
+            raise ValueError("CompositeFeasibility needs at least one "
+                             "member model")
+        self.members = dict(members)
+        self.sep = sep
+        self.name = "+".join(self.members)
+
+    def _split(self, config: Mapping[str, Any]) -> Dict[str, Config]:
+        out: Dict[str, Config] = {n: {} for n in self.members}
+        for key, v in config.items():
+            name, _, knob = key.partition(self.sep)
+            if knob and name in out:
+                out[name][knob] = v
+        return out
+
+    def __call__(self, config: Mapping[str, Any]) -> bool:
+        parts = self._split(config)
+        return all(model(parts[name])
+                   for name, model in self.members.items())
+
+    def check(self, config: Mapping[str, Any]) -> List[Violation]:
+        parts = self._split(config)
+        out: List[Violation] = []
+        for name, model in self.members.items():
+            for v in model.check(parts[name]):
+                out.append(Violation(f"{name}{self.sep}{v.predicate}",
+                                     v.reason, v.severity))
+        return out
+
+    def explain(self, config: Mapping[str, Any]) -> str:
+        vs = self.check(config)
+        if not vs:
+            return f"{self.name}: feasible"
+        return "\n".join(f"{v.predicate} [{v.severity}]: {v.reason}"
+                         for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# kernel models: predicates factored out of the roofline cost models
+# ---------------------------------------------------------------------------
+
+# Which (knob, clamp dim) pairs each kernel's cost model runs through
+# _align_penalty — the warn-severity alignment predicates read the exact
+# same clamped block the penalty term sees.  paged_attention tiles in
+# PAGE_TOKENS multiples, so its block is always sublane-aligned and it
+# carries no alignment predicate.
+_ALIGN_KNOBS: Dict[str, Sequence] = {
+    "flash_attention": (("block_q", "S"), ("block_kv", "SK")),
+    "decode_attention": (("block_kv", "S"),),
+    "gla": (("chunk", "S"),),
+    "rmsnorm": (("block_rows", "ROWS"),),
+    "paged_attention": (),
+}
+
+
+def kernel_feasibility(kernel: str, dims: Mapping[str, int],
+                       dtype: str = "float32") -> FeasibilityModel:
+    """The feasibility model of one kernel × problem signature.
+
+    * ``vmem_fits`` (error) — the tile set's VMEM footprint, computed by
+      the SAME ``KernelDef.vmem_footprint`` function the roofline cost
+      model uses, must fit ``VMEM_BYTES``.  This is the *only* source of
+      ``inf`` in the cost model, which is what makes the model's boolean
+      agree exactly with cost finiteness.
+    * ``sublane_aligned`` (warn) — blocks off the Mosaic (sublane, 128)
+      tile grid waste fractional-tile compute; the cost model charges a
+      finite ``_align_penalty``, so this is a hazard, not infeasibility.
+    """
+    from repro.autotune.space import (
+        KERNELS, VMEM_BYTES, KernelSpace, _align_penalty, _sublane)
+
+    kdef = KERNELS[kernel]  # KeyError on unknown kernel is the right error
+    d = KernelSpace(kernel).validate_dims(dict(dims))
+
+    def vmem_fits(cfg: Config) -> Optional[str]:
+        v = float(kdef.vmem_footprint(cfg, d, dtype))
+        if v > VMEM_BYTES:
+            return (f"VMEM tile footprint {v / 2**20:.1f} MiB exceeds the "
+                    f"{VMEM_BYTES / 2**20:.0f} MiB budget "
+                    f"(cost model returns inf)")
+        return None
+
+    def sublane_aligned(cfg: Config) -> Optional[str]:
+        sub = _sublane(dtype)
+        bad = []
+        for knob, dim_key in _ALIGN_KNOBS[kernel]:
+            block = min(int(cfg[knob]), d[dim_key])
+            if _align_penalty(block, dtype) > 1.0:
+                bad.append(f"{knob}={block} not a multiple of the "
+                           f"{dtype} sublane {sub}")
+        return "; ".join(bad) or None
+
+    return FeasibilityModel(
+        f"kernel[{kernel}]",
+        [Predicate("vmem_fits", vmem_fits),
+         Predicate("sublane_aligned", sublane_aligned, severity="warn")])
+
+
+# ---------------------------------------------------------------------------
+# serve model: the apply_serve_knobs deployability floor
+# ---------------------------------------------------------------------------
+def serve_feasibility(max_seq: int = 2048, *, runtime: str = "continuous",
+                      kv_layout: str = "paged",
+                      kv_page_block: int = 1) -> FeasibilityModel:
+    """The serve knob space's deployability predicates.
+
+    ``kv_pages_floor`` (error) encodes exactly the floor
+    ``apply_serve_knobs`` raises ``kv_cache_pages`` to when building a
+    ``ServeConfig``: under the paged continuous runtime one ``max_seq``
+    request (+ the scratch group) must fit (``min_pages_for``); dense
+    layouts allocate the full ``slots × max_seq`` footprint.  A config
+    below the floor would be silently mutated at deployment — the tuner
+    would score one config and deploy another — so it is statically
+    infeasible and never charged a test.
+
+    Parameterized on the deployment base's layout fields (not on a
+    ``ServeConfig``) so the model stays numpy-only and jax-free.
+    """
+    from repro.serve.paging import PAGE_TOKENS, min_pages_for
+
+    paged = runtime == "continuous" and kv_layout == "paged"
+
+    def kv_pages_floor(cfg: Config) -> Optional[str]:
+        pages = int(cfg["kv_cache_pages"])
+        slots = int(cfg["max_batch"])
+        if paged:
+            floor = min_pages_for(max_seq, kv_page_block)
+        else:
+            floor = -(-slots * max_seq // PAGE_TOKENS)
+        if pages < floor:
+            return (f"kv_cache_pages={pages} below the deployable floor "
+                    f"{floor} for max_seq={max_seq} "
+                    f"({runtime}/{kv_layout}): apply_serve_knobs would "
+                    f"raise it, so tuned != deployed")
+        return None
+
+    return FeasibilityModel(
+        "serve", [Predicate("kv_pages_floor", kv_pages_floor)])

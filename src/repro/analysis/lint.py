@@ -1,0 +1,710 @@
+"""Repo-wide static lint for jit/Pallas/allocator discipline.
+
+Pure stdlib-``ast`` analysis — nothing here imports jax or executes repo
+code, so the lint runs in CI before any accelerator is touched.  Three
+rule families, each encoding a contract this codebase actually relies on:
+
+jit retrace hazards (the engine holds 11 jit sites; a retrace per step
+silently turns a served model into a compiler benchmark):
+
+* ``jit-static-missing``    — a name listed in ``static_argnames`` that is
+  not a parameter of the jitted function: jax raises only when the arg is
+  passed, so the typo hides until a call site exercises it.
+* ``jit-static-mutable-default`` — a static parameter whose default is a
+  mutable literal (list/dict/set): unhashable the first time the default
+  is used, and a shared-state bug besides.
+* ``jit-traced-str-default`` — a parameter *not* marked static whose
+  default is a ``str`` literal: strings cannot be traced, so the default
+  aborts at trace time (or forces a retrace per distinct value when
+  threaded through).
+
+``pallas_call`` contract checks (Mosaic reports arity mismatches as deep
+lowering errors, long after the mistake):
+
+* ``pallas-operand-arity``  — the immediate call's operand count must be
+  ``num_scalar_prefetch + len(in_specs)``.
+* ``pallas-index-map-arity`` — every ``BlockSpec`` index_map lambda must
+  take ``len(grid) + num_scalar_prefetch`` arguments.
+* ``pallas-kernel-arity``   — the kernel's positional (ref) parameters
+  must number ``num_scalar_prefetch + n_in + n_out + n_scratch``
+  (``functools.partial`` keyword bindings and keyword-only config
+  parameters are excluded; positional partial bindings consume leading
+  slots).
+* ``pallas-vmem-scratch``   — (warning) constant-shaped ``pltpu.VMEM``
+  scratch totalling more than the per-core VMEM budget.
+
+Allocator discipline (a page group leaked on an error path silently
+shrinks every later run's pool):
+
+* ``alloc-try-no-release``  — an acquire call (``reserve`` / ``extend`` /
+  ``share`` / ``try_alloc`` / ``cow_split``) on an allocator-looking
+  receiver, lexically inside a ``try`` body whose handlers/finally never
+  call ``release``/``release_all``.
+
+Every check is *resolve-or-skip*: when a piece (grid length, spec list,
+kernel def, static names) is not statically resolvable, the site is
+skipped rather than guessed at — findings are high-confidence by
+construction.  False positives are suppressed per line with a same-line
+pragma::
+
+    alloc.reserve(rid, n)  # lint: ignore[alloc-try-no-release]
+    risky_call()           # lint: ignore          (all rules)
+
+Usage (machine-readable JSON on stdout)::
+
+    python -m repro.analysis.lint src/repro            # report
+    python -m repro.analysis.lint --check src/repro    # CI gate: exit 1
+                                                       # on any finding
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+__all__ = ["Finding", "RULES", "lint_file", "lint_paths", "main"]
+
+# rule -> (severity, one-line description)
+RULES: Dict[str, Tuple[str, str]] = {
+    "jit-static-missing": (
+        "error", "static_argnames entry is not a parameter of the "
+                 "jitted function"),
+    "jit-static-mutable-default": (
+        "error", "static parameter has a mutable (unhashable) default"),
+    "jit-traced-str-default": (
+        "error", "traced parameter has a str default (untraceable; "
+                 "retrace hazard)"),
+    "pallas-operand-arity": (
+        "error", "pallas_call operand count != num_scalar_prefetch + "
+                 "len(in_specs)"),
+    "pallas-index-map-arity": (
+        "error", "index_map arity != len(grid) + num_scalar_prefetch"),
+    "pallas-kernel-arity": (
+        "error", "kernel positional params != prefetch + inputs + "
+                 "outputs + scratch"),
+    "pallas-vmem-scratch": (
+        "warning", "constant VMEM scratch shapes exceed the per-core "
+                   "VMEM budget"),
+    "alloc-try-no-release": (
+        "error", "allocator acquire inside try with no release on the "
+                 "unwind path"),
+}
+
+try:  # single source of truth when the package is importable
+    from repro.autotune.space import VMEM_BYTES
+except Exception:  # pragma: no cover - standalone invocation
+    VMEM_BYTES = 16 * 2 ** 20
+
+_ACQUIRE = frozenset({"reserve", "extend", "share", "try_alloc",
+                      "cow_split"})
+_RELEASE = frozenset({"release", "release_all"})
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*ignore(?:\[([^\]]*)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line, "col": self.col,
+                "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers (resolve-or-None everywhere)
+# ---------------------------------------------------------------------------
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute chains / Names; None when unresolvable."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _last(node: ast.AST) -> Optional[str]:
+    d = _dotted(node)
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+def _segments(node: ast.AST) -> List[str]:
+    """All name segments along an attribute chain, skipping opaque parts
+    (calls, subscripts) — 'self._alloc[i].reserve' -> [self, _alloc]."""
+    out: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            out.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Name):
+            out.append(node.id)
+            return out
+        elif isinstance(node, (ast.Subscript, ast.Call)):
+            node = node.value if isinstance(node, ast.Subscript) \
+                else node.func
+        else:
+            return out
+
+
+def _str_elements(node: ast.AST) -> Optional[List[str]]:
+    """A str literal or tuple/list of str literals -> the names."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _int_elements(node: ast.AST) -> Optional[List[int]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _positional_params(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+
+def _all_params(fn: ast.FunctionDef) -> List[str]:
+    return (_positional_params(fn)
+            + [a.arg for a in fn.args.kwonlyargs])
+
+
+def _defaults_by_name(fn: ast.FunctionDef) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    pos = fn.args.posonlyargs + fn.args.args
+    for name, default in zip([a.arg for a in pos[-len(fn.args.defaults):]]
+                             if fn.args.defaults else [],
+                             fn.args.defaults):
+        out[name] = default
+    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if d is not None:
+            out[a.arg] = d
+    return out
+
+
+def _pragmas(source: str) -> Dict[int, Optional[FrozenSet[str]]]:
+    """line (1-based) -> frozenset of suppressed rules, or None = all."""
+    out: Dict[int, Optional[FrozenSet[str]]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        if "lint:" not in text:
+            continue
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = m.group(1)
+        if rules is None:
+            out[i] = None
+        else:
+            out[i] = frozenset(
+                r.strip() for r in rules.split(",") if r.strip())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-file linter
+# ---------------------------------------------------------------------------
+class _FileLinter:
+    def __init__(self, path: str, tree: ast.Module, source: str):
+        self.path = path
+        self.tree = tree
+        self.pragmas = _pragmas(source)
+        self.findings: List[Finding] = []
+        # name -> def / simple-assignment value, for resolve-by-name.
+        # File-global and last-wins: a heuristic, but resolution failure
+        # only ever *skips* a check, and kernel names are file-unique.
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        self.assigns: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                self.assigns[node.targets[0].id] = node.value
+
+    # -- plumbing ----------------------------------------------------------
+    def report(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        suppressed = self.pragmas.get(line, frozenset())
+        if suppressed is None or rule in suppressed:
+            return
+        self.findings.append(Finding(
+            rule=rule, severity=RULES[rule][0], path=self.path,
+            line=line, col=getattr(node, "col_offset", 0),
+            message=message))
+
+    def run(self) -> List[Finding]:
+        self._check_jit_sites()
+        self._check_pallas_sites()
+        self._check_alloc_discipline()
+        self.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+        return self.findings
+
+    # -- jit rules ---------------------------------------------------------
+    def _jit_sites(self):
+        """Yield (jitted FunctionDef, static-names set | None, site node).
+
+        statics None means the site had no resolvable static spec and
+        only the bare-jit checks apply; unresolvable *targets* are not
+        yielded at all.
+        """
+        for fn in self.defs.values():
+            for deco in fn.decorator_list:
+                statics = self._statics_from_decorator(deco, fn)
+                if statics is not None:
+                    yield fn, statics, deco
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and _last(node.func) == "jit"
+                    and node.args):
+                continue
+            target = node.args[0]
+            fn = None
+            if isinstance(target, ast.Name):
+                fn = self.defs.get(target.id)
+            if fn is None:
+                continue  # attribute/call targets: skip, don't guess
+            statics = self._parse_statics(node.keywords, fn)
+            if statics is not None:
+                yield fn, statics, node
+
+    def _statics_from_decorator(self, deco, fn):
+        # @jax.jit
+        if _last(deco) == "jit":
+            return set()
+        if not isinstance(deco, ast.Call):
+            return None
+        # @functools.partial(jax.jit, static_argnames=...)
+        if _last(deco.func) == "partial" and deco.args \
+                and _last(deco.args[0]) == "jit":
+            return self._parse_statics(deco.keywords, fn)
+        # @jax.jit(static_argnames=...)  (decorator-factory form)
+        if _last(deco.func) == "jit":
+            return self._parse_statics(deco.keywords, fn)
+        return None
+
+    def _parse_statics(self, keywords, fn):
+        """static names from jit(...) keywords; None = unresolvable."""
+        names: set = set()
+        positional = _positional_params(fn)
+        for kw in keywords:
+            if kw.arg == "static_argnames":
+                got = _str_elements(kw.value)
+                if got is None:
+                    return None
+                names.update(got)
+            elif kw.arg == "static_argnums":
+                nums = _int_elements(kw.value)
+                if nums is None:
+                    return None
+                for n in nums:
+                    if 0 <= n < len(positional):
+                        names.add(positional[n])
+                    else:
+                        return None  # out of range: let jax complain
+        return names
+
+    def _check_jit_sites(self) -> None:
+        seen = set()
+        for fn, statics, site in self._jit_sites():
+            key = (fn.name, id(site))
+            if key in seen:
+                continue
+            seen.add(key)
+            params = set(_all_params(fn))
+            has_var = fn.args.vararg is not None \
+                or fn.args.kwarg is not None
+            defaults = _defaults_by_name(fn)
+            for s in sorted(statics):
+                if s not in params and not has_var:
+                    self.report(
+                        "jit-static-missing", site,
+                        f"static_argnames entry {s!r} is not a "
+                        f"parameter of {fn.name}()")
+            for name, default in defaults.items():
+                if name in statics and isinstance(
+                        default, (ast.List, ast.Dict, ast.Set)):
+                    self.report(
+                        "jit-static-mutable-default", default,
+                        f"static parameter {name!r} of {fn.name}() has "
+                        "a mutable default (unhashable under jit)")
+                if name not in statics \
+                        and isinstance(default, ast.Constant) \
+                        and isinstance(default.value, str):
+                    self.report(
+                        "jit-traced-str-default", default,
+                        f"parameter {name!r} of {fn.name}() defaults "
+                        f"to str {default.value!r} but is not in "
+                        "static_argnames")
+
+    # -- pallas rules ------------------------------------------------------
+    def _check_pallas_sites(self) -> None:
+        immediate: Dict[int, ast.Call] = {}
+        pallas_calls: List[ast.Call] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _last(node.func) == "pallas_call":
+                pallas_calls.append(node)
+            elif isinstance(node.func, ast.Call) \
+                    and _last(node.func.func) == "pallas_call":
+                immediate[id(node.func)] = node
+        for pc in pallas_calls:
+            self._check_one_pallas(pc, immediate.get(id(pc)))
+
+    def _grid_spec_fields(self, pc: ast.Call):
+        """(k, grid_node, in_specs, out_specs, out_shape, scratch) with
+        None for any field that is absent or unresolvable; k None means
+        the whole spec is opaque."""
+        fields = {kw.arg: kw.value for kw in pc.keywords if kw.arg}
+        k: Optional[int] = 0
+        spec = fields.get("grid_spec")
+        if spec is not None:
+            if not (isinstance(spec, ast.Call)
+                    and _last(spec.func) == "PrefetchScalarGridSpec"):
+                return None, None, None, None, None, None
+            inner = {kw.arg: kw.value for kw in spec.keywords if kw.arg}
+            n = inner.get("num_scalar_prefetch")
+            if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                k = n.value
+            elif n is not None:
+                k = None
+            fields = dict(fields)
+            fields.update(inner)
+        return (k, fields.get("grid"), fields.get("in_specs"),
+                fields.get("out_specs"), fields.get("out_shape"),
+                fields.get("scratch_shapes"))
+
+    @staticmethod
+    def _spec_count(node: Optional[ast.AST]) -> Optional[int]:
+        if node is None:
+            return None
+        if isinstance(node, (ast.List, ast.Tuple)):
+            return len(node.elts)
+        if isinstance(node, ast.Call):  # single BlockSpec / SDS
+            return 1
+        return None
+
+    @staticmethod
+    def _index_maps(node: Optional[ast.AST]) -> List[ast.Lambda]:
+        """index_map lambdas of the BlockSpec(s) in node."""
+        specs: List[ast.AST] = []
+        if isinstance(node, (ast.List, ast.Tuple)):
+            specs = list(node.elts)
+        elif isinstance(node, ast.Call):
+            specs = [node]
+        out: List[ast.Lambda] = []
+        for s in specs:
+            if not (isinstance(s, ast.Call)
+                    and _last(s.func) == "BlockSpec"):
+                continue
+            cand: Optional[ast.AST] = None
+            if len(s.args) > 1:
+                cand = s.args[1]
+            else:
+                for kw in s.keywords:
+                    if kw.arg == "index_map":
+                        cand = kw.value
+            if isinstance(cand, ast.Lambda):
+                out.append(cand)
+        return out
+
+    def _resolve_kernel(self, node: ast.AST, depth: int = 0):
+        """(FunctionDef, n_positional_bound, keyword-bound names) | None."""
+        if depth > 4:
+            return None
+        if isinstance(node, ast.Name):
+            if node.id in self.defs:
+                return self.defs[node.id], 0, set()
+            target = self.assigns.get(node.id)
+            return None if target is None \
+                else self._resolve_kernel(target, depth + 1)
+        if isinstance(node, ast.Call) and _last(node.func) == "partial" \
+                and node.args:
+            inner = self._resolve_kernel(node.args[0], depth + 1)
+            if inner is None:
+                return None
+            fn, n_pos, kw_names = inner
+            return (fn, n_pos + len(node.args) - 1,
+                    kw_names | {kw.arg for kw in node.keywords
+                                if kw.arg})
+        return None
+
+    def _scratch_bytes(self, node: Optional[ast.AST]) -> Optional[int]:
+        """Total bytes of VMEM scratch, when every shape is constant."""
+        if not isinstance(node, (ast.List, ast.Tuple)) or not node.elts:
+            return None
+        total = 0
+        for e in node.elts:
+            if not (isinstance(e, ast.Call) and _last(e.func) == "VMEM"
+                    and len(e.args) >= 2):
+                return None
+            dims = _int_elements(e.args[0])
+            dtype = _last(e.args[1])
+            if dims is None or dtype not in _DTYPE_BYTES:
+                return None
+            n = _DTYPE_BYTES[dtype]
+            for d in dims:
+                n *= d
+            total += n
+        return total
+
+    def _check_one_pallas(self, pc: ast.Call,
+                          operands: Optional[ast.Call]) -> None:
+        k, grid, in_specs, out_specs, out_shape, scratch = \
+            self._grid_spec_fields(pc)
+        grid_len = len(grid.elts) \
+            if isinstance(grid, (ast.Tuple, ast.List)) else None
+        n_in = self._spec_count(in_specs)
+        n_out = self._spec_count(out_specs)
+        if n_out is None:
+            n_out = self._spec_count(out_shape)
+        n_scratch = self._spec_count(scratch)
+        if n_scratch is None and scratch is None:
+            n_scratch = 0
+
+        # pallas-index-map-arity
+        if k is not None and grid_len is not None:
+            want = grid_len + k
+            for lam in (self._index_maps(in_specs)
+                        + self._index_maps(out_specs)):
+                if lam.args.vararg is not None:
+                    continue
+                got = len(lam.args.posonlyargs) + len(lam.args.args)
+                if got != want:
+                    self.report(
+                        "pallas-index-map-arity", lam,
+                        f"index_map takes {got} args; grid has "
+                        f"{grid_len} dims + {k} scalar-prefetch "
+                        f"operands = {want} expected")
+
+        # pallas-operand-arity
+        if operands is not None and k is not None and n_in is not None \
+                and not any(isinstance(a, ast.Starred)
+                            for a in operands.args) \
+                and not operands.keywords:
+            want = k + n_in
+            got = len(operands.args)
+            if got != want:
+                self.report(
+                    "pallas-operand-arity", operands,
+                    f"pallas_call invoked with {got} operands; "
+                    f"{k} scalar-prefetch + {n_in} in_specs = "
+                    f"{want} expected")
+
+        # pallas-kernel-arity
+        if pc.args and None not in (k, n_in, n_out, n_scratch):
+            resolved = self._resolve_kernel(pc.args[0])
+            if resolved is not None:
+                fn, n_bound, kw_bound = resolved
+                if fn.args.vararg is None:
+                    slots = [p for p in _positional_params(fn)
+                             if p not in kw_bound][n_bound:]
+                    want = k + n_in + n_out + n_scratch
+                    if len(slots) != want:
+                        self.report(
+                            "pallas-kernel-arity", pc,
+                            f"kernel {fn.name}() exposes {len(slots)} "
+                            f"positional ref params; {k} prefetch + "
+                            f"{n_in} in + {n_out} out + {n_scratch} "
+                            f"scratch = {want} expected")
+
+        # pallas-vmem-scratch (warning)
+        total = self._scratch_bytes(scratch)
+        if total is not None and total > VMEM_BYTES:
+            self.report(
+                "pallas-vmem-scratch", scratch,
+                f"VMEM scratch totals {total / 2**20:.1f} MiB, over "
+                f"the {VMEM_BYTES / 2**20:.0f} MiB per-core budget")
+
+    # -- allocator rule ----------------------------------------------------
+    @staticmethod
+    def _is_alloc_receiver(func: ast.Attribute) -> bool:
+        return any("alloc" in seg.lower()
+                   for seg in _segments(func.value))
+
+    def _has_release(self, nodes: Sequence[ast.AST]) -> bool:
+        for root in nodes:
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _RELEASE:
+                    return True
+        return False
+
+    @staticmethod
+    def _own_expr_nodes(stmt: ast.AST):
+        """Expression nodes belonging to this statement itself —
+        excluding nested statement bodies and nested scopes."""
+        roots: List[ast.AST] = []
+        for field, value in ast.iter_fields(stmt):
+            if field in ("body", "orelse", "finalbody", "handlers"):
+                continue
+            if isinstance(value, ast.AST):
+                roots.append(value)
+            elif isinstance(value, list):
+                roots.extend(v for v in value
+                             if isinstance(v, ast.AST))
+        stack = roots
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _check_alloc_discipline(self) -> None:
+        self._walk_alloc(self.tree.body, try_stack=[])
+
+    def _walk_alloc(self, body: Sequence[ast.AST],
+                    try_stack: List[ast.Try]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                # a nested scope's body doesn't run inside this try
+                self._walk_alloc(stmt.body, try_stack=[])
+                continue
+            if isinstance(stmt, ast.Try):
+                self._walk_alloc(stmt.body, try_stack + [stmt])
+                for h in stmt.handlers:
+                    self._walk_alloc(h.body, try_stack)
+                self._walk_alloc(stmt.orelse, try_stack)
+                self._walk_alloc(stmt.finalbody, try_stack)
+                continue
+            # this statement's own expressions (nested statement bodies
+            # are handled by the recursion below; lambda bodies only
+            # *define* an acquire, they don't run it here)
+            for node in self._own_expr_nodes(stmt):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _ACQUIRE \
+                        and self._is_alloc_receiver(node.func) \
+                        and try_stack:
+                    guard = try_stack[-1]
+                    unwinders: List[ast.AST] = list(guard.finalbody)
+                    for h in guard.handlers:
+                        unwinders.extend(h.body)
+                    if not self._has_release(unwinders):
+                        self.report(
+                            "alloc-try-no-release", node,
+                            f"'.{node.func.attr}(...)' acquires pages "
+                            "inside a try whose handlers/finally never "
+                            "call release/release_all — a failure here "
+                            "leaks the reservation")
+            # recurse into compound statements
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub:
+                    self._walk_alloc(sub, try_stack)
+
+
+# ---------------------------------------------------------------------------
+# file discovery + CLI
+# ---------------------------------------------------------------------------
+def lint_file(path: Path) -> List[Finding]:
+    source = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [Finding(rule="syntax-error", severity="error",
+                        path=str(path), line=exc.lineno or 1,
+                        col=exc.offset or 0,
+                        message=f"file does not parse: {exc.msg}")]
+    return _FileLinter(str(path), tree, source).run()
+
+
+def _discover(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(
+                f for f in path.rglob("*.py")
+                if "__pycache__" not in f.parts))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def lint_paths(paths: Sequence[str]) -> Tuple[List[Finding], int]:
+    files = _discover(paths)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, len(files)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="jit/Pallas/allocator static lint (JSON output)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: src/repro, "
+                         "falling back to '.')")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any finding (error or warning) "
+                         "survives pragmas")
+    ap.add_argument("--compact", action="store_true",
+                    help="single-line JSON (default pretty-prints)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths
+    if not paths:
+        default = Path("src/repro")
+        paths = [str(default)] if default.is_dir() else ["."]
+
+    findings, n_files = lint_paths(paths)
+    n_err = sum(1 for f in findings if f.severity == "error")
+    n_warn = len(findings) - n_err
+    doc = {
+        "version": 1,
+        "files_checked": n_files,
+        "n_errors": n_err,
+        "n_warnings": n_warn,
+        "findings": [f.to_dict() for f in findings],
+    }
+    json.dump(doc, sys.stdout,
+              indent=None if args.compact else 2)
+    sys.stdout.write("\n")
+    if args.check and findings:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,11 +180,13 @@ def autotune_kernel(
         "value": report.best_metric.value,
         "default_value": report.default_metric.value,
         "n_tests": report.n_tests,
+        "n_infeasible_pruned": report.n_infeasible_pruned,
         "mode": sut.mode,
     }
     cache.put(kernel, sig, dtype, summary["backend"], summary["config"],
               summary["value"],
               meta={"mode": sut.mode, "n_tests": report.n_tests,
+                    "n_infeasible_pruned": report.n_infeasible_pruned,
                     "default_value": summary["default_value"]})
     return summary
 

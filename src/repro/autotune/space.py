@@ -116,6 +116,13 @@ class KernelDef:
     make_inputs: Callable[[Dict[str, int], str, np.random.Generator], tuple]
     call: Callable[[tuple, Dict[str, Any], bool], Any]
     model_cost: Callable[[Dict[str, Any], Dict[str, int], str], float]
+    # (config, dims, dtype) -> VMEM bytes of the kernel's resident tile
+    # set.  The SINGLE source of the cost model's hard infeasibility
+    # (``_roofline_s`` returns inf iff this exceeds ``VMEM_BYTES``) and of
+    # the static feasibility predicate (``repro.analysis.feasibility``) —
+    # sharing the function is what keeps ``feasible(cfg) ⇔ cost < inf``
+    # exact instead of a re-derivation that drifts.
+    vmem_footprint: Callable[[Dict[str, Any], Dict[str, int], str], float]
 
 
 def _rand(rng, shape, dtype):
@@ -166,6 +173,14 @@ def _fa_call(inputs, config, interpret):
                                   **_launch_kw(config))
 
 
+def _fa_vmem(config, d, dtype):
+    """Resident tiles: q + double-buffered k/v blocks + f32 m/l/acc rows."""
+    bq = min(config["block_q"], d["S"])
+    bk = min(config["block_kv"], d["SK"])
+    ib = _dtype_bytes(dtype)
+    return (bq * d["D"] + 2 * bk * d["D"]) * ib + bq * (2 + d["D"]) * 4
+
+
 def _fa_cost(config, d, dtype):
     B, S, SK, H, D = d["B"], d["S"], d["SK"], d["H"], d["D"]
     bq = min(config["block_q"], S)
@@ -185,7 +200,7 @@ def _fa_cost(config, d, dtype):
     hbm = (B * H * nq * bq * D * ib          # q tiles
            + 2.0 * live * bk * D * ib        # streamed k/v tiles
            + B * H * S * D * ib)             # output (S query rows)
-    vmem = (bq * D + 2 * bk * D) * ib + bq * (2 + D) * 4
+    vmem = _fa_vmem(config, d, dtype)
     return _roofline_s(flops, hbm, n_steps, vmem, config, bq * bk)
 
 
@@ -213,6 +228,14 @@ def _fd_call(inputs, config, interpret):
                                **_launch_kw(config))
 
 
+def _fd_vmem(config, d, dtype):
+    """Resident tiles: k/v blocks + per-group f32 m/l/acc + query group."""
+    G = max(d["H"] // d["KV"], 1)
+    bk = min(config["block_kv"], d["S"])
+    ib = _dtype_bytes(dtype)
+    return 2 * bk * d["D"] * ib + G * (2 + d["D"]) * 4 + G * d["D"] * ib
+
+
 def _fd_cost(config, d, dtype):
     B, S, H, KV, D = d["B"], d["S"], d["H"], d["KV"], d["D"]
     G = max(H // KV, 1)
@@ -222,7 +245,7 @@ def _fd_cost(config, d, dtype):
     ib = _dtype_bytes(dtype)
     flops = n_steps * 4.0 * G * bk * D * _align_penalty(bk, dtype)
     hbm = 2.0 * B * KV * nk * bk * D * ib  # stream the cache once
-    vmem = 2 * bk * D * ib + G * (2 + D) * 4 + G * D * ib
+    vmem = _fd_vmem(config, d, dtype)
     return _roofline_s(flops, hbm, n_steps, vmem, config, bk * D)
 
 
@@ -252,6 +275,14 @@ def _gla_call(inputs, config, interpret):
                       interpret=interpret, **_launch_kw(config))[0]
 
 
+def _gla_vmem(config, d, dtype):
+    """Resident tiles: q/k/v/g chunk + f32 recurrent state + (L,L) scores."""
+    L = min(config["chunk"], d["S"])
+    DK, DV = d["DK"], d["DV"]
+    ib = _dtype_bytes(dtype)
+    return (L * (2 * DK + 2 * DV) + L) * ib + DK * DV * 4 + L * L * 4
+
+
 def _gla_cost(config, d, dtype):
     B, S, H, DK, DV = d["B"], d["S"], d["H"], d["DK"], d["DV"]
     L = min(config["chunk"], S)
@@ -263,7 +294,7 @@ def _gla_cost(config, d, dtype):
     flops = n_steps * (2.0 * L * L * DK + 2.0 * L * L * DV
                        + 4.0 * L * DK * DV) * pad
     hbm = n_steps * L * (2 * DK + 2 * DV + 1) * ib
-    vmem = (L * (2 * DK + 2 * DV) + L) * ib + DK * DV * 4 + L * L * 4
+    vmem = _gla_vmem(config, d, dtype)
     return _roofline_s(flops, hbm, n_steps, vmem, config, L * L)
 
 
@@ -290,6 +321,12 @@ def _rn_call(inputs, config, interpret):
                           interpret=interpret, **_launch_kw(config))
 
 
+def _rn_vmem(config, d, dtype):
+    """Resident tiles: input + output row blocks (f32 accumulate) + scale."""
+    br = min(config["block_rows"], d["ROWS"])
+    return 2 * br * d["D"] * max(_dtype_bytes(dtype), 4) + d["D"] * 4
+
+
 def _rn_cost(config, d, dtype):
     rows, D = d["ROWS"], d["D"]
     br = min(config["block_rows"], rows)
@@ -298,7 +335,7 @@ def _rn_cost(config, d, dtype):
     pad = _align_penalty(br, dtype)
     flops = n * 4.0 * br * D * pad  # VPU work; counted at MXU scale below
     hbm = 2.0 * rows * D * ib + n * D * 4
-    vmem = 2 * br * D * max(ib, 4) + D * 4
+    vmem = _rn_vmem(config, d, dtype)
     # rmsnorm is pure VPU: scale compute down to VPU throughput (~1/8 MXU)
     return _roofline_s(flops * 8.0, hbm, n, vmem, config, br * D)
 
@@ -351,6 +388,14 @@ def _pa_call(inputs, config, interpret):
         num_warps=config.get("num_warps"), interpret=interpret)
 
 
+def _pa_vmem(config, d, dtype):
+    """Resident tiles: k/v page blocks + per-group f32 m/l/acc + queries."""
+    G = max(d["H"] // d["KV"], 1)
+    T = min(int(config["pages_per_block"]) * PAGE_TOKENS, d["S"])
+    ib = _dtype_bytes(dtype)
+    return 2 * T * d["D"] * ib + G * (2 + d["D"]) * 4 + G * d["D"] * ib
+
+
 def _pa_cost(config, d, dtype):
     B, S, H, KV, D = d["B"], d["S"], d["H"], d["KV"], d["D"]
     G = max(H // KV, 1)
@@ -362,7 +407,7 @@ def _pa_cost(config, d, dtype):
     # stream the pool once + the page-table walk (one SMEM-indexed DMA
     # program per group — small but real, and it shrinks as T grows)
     hbm = 2.0 * B * KV * ng * T * D * ib + n_steps * 64.0
-    vmem = 2 * T * D * ib + G * (2 + D) * 4 + G * D * ib
+    vmem = _pa_vmem(config, d, dtype)
     return _roofline_s(flops, hbm, n_steps, vmem, config, T * D)
 
 
@@ -373,23 +418,23 @@ KERNELS: Dict[str, KernelDef] = {
     "flash_attention": KernelDef(
         "flash_attention", ("B", "S", "SK", "H", "KV", "D"),
         ("block_q", "block_kv", "dim_semantics"),
-        _fa_space, _fa_inputs, _fa_call, _fa_cost),
+        _fa_space, _fa_inputs, _fa_call, _fa_cost, _fa_vmem),
     "decode_attention": KernelDef(
         "decode_attention", ("B", "S", "H", "KV", "D"),
         ("block_kv", "dim_semantics"),
-        _fd_space, _fd_inputs, _fd_call, _fd_cost),
+        _fd_space, _fd_inputs, _fd_call, _fd_cost, _fd_vmem),
     "paged_attention": KernelDef(
         "paged_attention", ("B", "S", "H", "KV", "D"),
         ("pages_per_block", "dim_semantics"),
-        _pa_space, _pa_inputs, _pa_call, _pa_cost),
+        _pa_space, _pa_inputs, _pa_call, _pa_cost, _pa_vmem),
     "gla": KernelDef(
         "gla", ("B", "S", "H", "DK", "DV"),
         ("chunk", "dim_semantics"),
-        _gla_space, _gla_inputs, _gla_call, _gla_cost),
+        _gla_space, _gla_inputs, _gla_call, _gla_cost, _gla_vmem),
     "rmsnorm": KernelDef(
         "rmsnorm", ("ROWS", "D"),
         ("block_rows", "dim_semantics"),
-        _rn_space, _rn_inputs, _rn_call, _rn_cost),
+        _rn_space, _rn_inputs, _rn_call, _rn_cost, _rn_vmem),
 }
 
 

@@ -67,6 +67,21 @@ class KernelSUT:
     def space(self) -> ParameterSpace:
         return self.kspace.space()
 
+    @property
+    def feasibility_model(self):
+        """Static feasibility of a block config on this problem signature.
+
+        Auto-detected by the ``Tuner``: statically-VMEM-infeasible tilings
+        are pruned before they burn a test (in ``mode="time"`` they would
+        compile-and-crash on real hardware; in ``mode="model"`` they would
+        spend a budget unit to learn ``inf``).  Built on the same
+        ``vmem_footprint`` the cost model evaluates, so pruning never
+        disagrees with cost-model finiteness.
+        """
+        from repro.analysis.feasibility import kernel_feasibility
+
+        return kernel_feasibility(self.kernel, self.dims, self.dtype)
+
     # ------------------------------------------------------------------
     def _get_inputs(self) -> tuple:
         if self._inputs is None:

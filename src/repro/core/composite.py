@@ -34,8 +34,8 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
-from .base import BatchObjective, BudgetedRun, BudgetExhausted, Objective, \
-    TuningResult
+from .base import BatchObjective, BudgetedRun, BudgetExhausted, \
+    Feasible, Objective, TuningResult
 from .optimizers import OPTIMIZERS
 from .params import Config, Parameter, ParameterSpace
 from .sampling import lhs_unit
@@ -236,10 +236,19 @@ class CompositeSUT:
     standalone evaluator runs for it — for subsystems whose contribution
     only exists in composition (no meaningful isolated measurement, or one
     the scalarizer would recompute anyway).
+
+    Member feasibility models compose: every member exposing a
+    ``feasibility_model`` contributes its predicates under the member's
+    prefixed keys (``feasibility`` adds/overrides models per member name —
+    the only way to constrain a config-only member, which has no SUT
+    object to hang a model on).  The composed model is what the ``Tuner``
+    auto-detects, so a joint candidate whose ANY subconfig is statically
+    infeasible is pruned before a single member evaluates.
     """
 
     def __init__(self, members: Mapping[str, Any], scalarize: Scalarizer,
-                 name: Optional[str] = None, sep: str = "."):
+                 name: Optional[str] = None, sep: str = ".",
+                 feasibility: Optional[Mapping[str, Any]] = None):
         if not members:
             raise ValueError("CompositeSUT needs at least one member")
         self.members = dict(members)
@@ -254,6 +263,20 @@ class CompositeSUT:
                 self._evaluated.append(n)
         self._space = CompositeSpace(spaces, sep=sep)
         self.name = name or "+".join(self.members)
+        models: Dict[str, Any] = {}
+        for n, m in self.members.items():
+            model = getattr(m, "feasibility_model", None)
+            if model is not None:
+                models[n] = model
+        for n, model in dict(feasibility or {}).items():
+            if n not in self.members:
+                raise ValueError(f"feasibility for unknown member {n!r}")
+            models[n] = model
+        self.feasibility_model = None
+        if models:
+            from repro.analysis.feasibility import CompositeFeasibility
+
+            self.feasibility_model = CompositeFeasibility(models, sep=sep)
         # dispatch accounting (the quantity the batched engine minimizes)
         self.member_batch_calls = {n: 0 for n in self._evaluated}
         self.member_test_calls = {n: 0 for n in self._evaluated}
@@ -332,8 +355,10 @@ class SubspaceRoundRobinOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
-        run = BudgetedRun(space, objective, budget, batch_objective)
+        run = BudgetedRun(space, objective, budget, batch_objective,
+                          feasible=feasible)
         dim = space.dim
         if isinstance(space, CompositeSpace):
             groups = [np.asarray(g) for g in space.column_groups().values()]

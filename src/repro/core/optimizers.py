@@ -33,8 +33,8 @@ from typing import Dict, List, Optional, Sequence, Type
 
 import numpy as np
 
-from .base import BatchObjective, BudgetedRun, BudgetExhausted, Objective, \
-    Trial, TuningResult
+from .base import BatchObjective, BudgetedRun, BudgetExhausted, \
+    Feasible, Objective, Trial, TuningResult
 from .params import Config, ParameterSpace
 from .rrs import RRSOptimizer
 from .sampling import lhs_unit
@@ -65,8 +65,10 @@ class RandomSearchOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget, batch_objective)
+        run = _BudgetedRun(space, objective, budget, batch_objective,
+                           feasible=feasible)
         try:
             if init_unit_points is not None:
                 run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
@@ -89,8 +91,10 @@ class LHSOnlyOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget, batch_objective)
+        run = _BudgetedRun(space, objective, budget, batch_objective,
+                           feasible=feasible)
         try:
             if init_unit_points is not None:
                 run.evaluate_batch(np.atleast_2d(init_unit_points), "explore")
@@ -128,8 +132,10 @@ class SmartHillClimbingOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget, batch_objective)
+        run = _BudgetedRun(space, objective, budget, batch_objective,
+                           feasible=feasible)
         dim = space.dim
         try:
             if init_unit_points is not None:
@@ -178,8 +184,10 @@ class CoordinateSearchOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
-        run = _BudgetedRun(space, objective, budget, batch_objective)
+        run = _BudgetedRun(space, objective, budget, batch_objective,
+                           feasible=feasible)
         dim = space.dim
         try:
             if init_unit_points is not None:

@@ -47,8 +47,8 @@ from typing import List, Optional
 
 import numpy as np
 
-from .base import BatchObjective, BudgetExhausted, Objective, Trial, \
-    TuningResult
+from .base import BatchObjective, BudgetExhausted, Feasible, \
+    Objective, Trial, TuningResult
 from .base import BudgetedRun as _BudgetedRun
 from .params import Config, ParameterSpace
 from .sampling import get_sampler
@@ -92,11 +92,13 @@ class RRSOptimizer:
         rng: np.random.Generator,
         init_unit_points: Optional[np.ndarray] = None,
         batch_objective: Optional[BatchObjective] = None,
+        feasible: Optional[Feasible] = None,
     ) -> TuningResult:
         """Minimize ``objective`` over ``space`` within ``budget`` tests."""
         dim = space.dim
         sampler = get_sampler(self.explore_sampler)
-        run = _BudgetedRun(space, objective, budget, batch_objective)
+        run = _BudgetedRun(space, objective, budget, batch_objective,
+                           feasible=feasible)
         explore_values: List[float] = []
 
         def threshold() -> float:

@@ -151,6 +151,10 @@ class TuningReport:
     history: List[Trial]
     optimizer: str
     sampler: str
+    # candidates the static feasibility model rejected before the SUT —
+    # uncharged, unrecorded; the budget they would have burned went to
+    # feasible candidates instead (0 when no model is attached)
+    n_infeasible_pruned: int = 0
 
     @property
     def improvement(self) -> float:
@@ -176,6 +180,7 @@ class TuningReport:
                 "sampler": self.sampler,
                 "budget": self.budget,
                 "n_tests": self.n_tests,
+                "n_infeasible_pruned": self.n_infeasible_pruned,
                 "wall_seconds": self.wall_seconds,
                 "default": {
                     "config": _jsonable(self.default_config),
@@ -234,6 +239,15 @@ class Tuner:
     the identical trial sequence — same seed + budget gives the same best
     config and test count — because the optimizers generate candidates
     round-by-round independent of how rounds are scored.
+
+    ``feasibility`` attaches a static feasibility model (a ``Config ->
+    bool`` callable; see ``repro.analysis.feasibility``): candidates it
+    rejects are pruned inside the optimizer's ``BudgetedRun`` without
+    charging budget or touching the SUT, and the count surfaces as
+    ``TuningReport.n_infeasible_pruned``.  ``None`` (default) auto-detects
+    the SUT's ``feasibility_model`` attribute; ``False`` disables pruning
+    outright.  The default configuration is still tested unconditionally —
+    the ACTS contract anchors on the given config, feasible or not.
     """
 
     def __init__(
@@ -248,12 +262,21 @@ class Tuner:
         optimizer_kwargs: Optional[Dict[str, Any]] = None,
         verbose: bool = False,
         batch: Optional[bool] = None,
+        feasibility: Any = None,
     ):
         if budget < 1:
             raise ValueError("budget (resource limit) must be >= 1")
         self.space = space
         self.sut = sut
         self.budget = budget
+        if feasibility is None:
+            feasibility = getattr(sut, "feasibility_model", None)
+        elif feasibility is False:
+            feasibility = None
+        if feasibility is not None and not callable(feasibility):
+            raise TypeError("feasibility must be callable (Config -> "
+                            f"bool), False, or None; got {feasibility!r}")
+        self.feasibility = feasibility
         self.optimizer_name = optimizer
         self.sampler_name = sampler
         self.init_fraction = init_fraction
@@ -364,6 +387,7 @@ class Tuner:
 
         opt = get_optimizer(self.optimizer_name, **self.optimizer_kwargs)
         remaining = self.budget - self._n_tests
+        n_pruned = 0
         if remaining > 0:
             # The optimizer gets head-room over the real limit because cached
             # (duplicate) configs don't consume SUT tests; the tuner's own
@@ -375,7 +399,9 @@ class Tuner:
                 rng=rng,
                 init_unit_points=init_points,
                 batch_objective=batch_objective,
+                feasible=self.feasibility,
             )
+            n_pruned = result.n_infeasible_pruned
             # Re-index trials to global test counters (optimizer counts its own).
             offset = len(history)
             for t in result.history:
@@ -400,4 +426,5 @@ class Tuner:
             history=history,
             optimizer=self.optimizer_name,
             sampler=self.sampler_name,
+            n_infeasible_pruned=n_pruned,
         )

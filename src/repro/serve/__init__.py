@@ -21,6 +21,7 @@ _SPACE_NAMES = (
     "ServeSurrogate",
     "apply_serve_knobs",
     "coupled_serve_metrics",
+    "kv_floor_raise_count",
     "make_cotune_sut",
     "make_live_cotune_sut",
     "serve_knob_space",

@@ -55,6 +55,7 @@ __all__ = [
     "PAGE_POLICIES",
     "serve_knob_space",
     "apply_serve_knobs",
+    "kv_floor_raise_count",
     "CotuneParams",
     "coupled_serve_metrics",
     "ServeSurrogate",
@@ -122,6 +123,22 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
     ])
 
 
+# apply_serve_knobs floor-raise accounting: raising a tuned kv_cache_pages
+# to the deployable floor means the deployed config is NOT the config the
+# tuner scored.  Fresh tuning runs can no longer produce one (the serve
+# feasibility predicate prunes below-floor candidates), but pre-existing
+# cached winners still pass through here — so the mutation warns once per
+# process and stays countable instead of silent.
+_floor_raise_count = 0
+_floor_raise_warned = False
+
+
+def kv_floor_raise_count() -> int:
+    """How many times ``apply_serve_knobs`` raised tuned pages this
+    process (0 for any winner produced by a feasibility-pruned run)."""
+    return _floor_raise_count
+
+
 def apply_serve_knobs(config: Config, base: Optional[Any] = None):
     """Tuned serve knobs -> a ``ServeConfig`` (lazy engine import: the
     tuning path itself never needs jax).
@@ -133,6 +150,11 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
     resident, so the tuner legitimately explores small pools (scored as
     low occupancy by the real engine); the dense layouts allocate the
     full ``slots × max_seq`` footprint, so the floor covers it.
+
+    A raise means tuned != deployed, so it is observable: counted in
+    ``kv_floor_raise_count`` and warned once per process.  Runs tuned
+    under ``serve_feasibility`` never trigger it — the predicate encodes
+    this exact floor — but pre-PR7 cached winners may.
     """
     from .engine import ServeConfig
 
@@ -144,11 +166,27 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
         min_pages = min_pages_for(base.max_seq, base.kv_page_block)
     else:
         min_pages = -(-slots * base.max_seq // PAGE_TOKENS)
+    tuned_pages = int(config["kv_cache_pages"])
+    if tuned_pages < min_pages:
+        global _floor_raise_count, _floor_raise_warned
+        _floor_raise_count += 1
+        if not _floor_raise_warned:
+            _floor_raise_warned = True
+            import warnings
+
+            warnings.warn(
+                f"apply_serve_knobs raised tuned kv_cache_pages "
+                f"{tuned_pages} to the deployable floor {min_pages} "
+                f"(max_seq={base.max_seq}, {base.runtime}/"
+                f"{base.kv_layout}): the deployed config is not the "
+                f"config the tuner scored — re-tune under "
+                f"serve_feasibility to make the winner deployable as-is",
+                RuntimeWarning, stacklevel=2)
     return replace(
         base,
         batch_slots=slots,
         prefill_chunk=int(config["prefill_chunk"]),
-        kv_cache_pages=max(int(config["kv_cache_pages"]), min_pages),
+        kv_cache_pages=max(tuned_pages, min_pages),
         schedule=str(config["schedule"]),
         # absent in pre-PR5 cached winners: keep the base's policy then
         page_policy=str(config.get("page_policy", base.page_policy)),
@@ -411,6 +449,15 @@ class ServeSurrogate(Surrogate):
     def space(self) -> ParameterSpace:
         return serve_knob_space(self.params.max_seq)
 
+    @property
+    def feasibility_model(self):
+        """Deployability floor of the paged continuous runtime the
+        surrogate models — configs ``apply_serve_knobs`` would mutate are
+        pruned before they burn a test."""
+        from repro.analysis.feasibility import serve_feasibility
+
+        return serve_feasibility(self.params.max_seq)
+
     def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
         return [coupled_serve_metrics(c, self.kernel_cfg, self.params)
                 for c in configs]
@@ -489,6 +536,20 @@ class LiveServeSUT:
 
     def space(self) -> ParameterSpace:
         return serve_knob_space(self.base.max_seq, self.max_slots)
+
+    @property
+    def feasibility_model(self):
+        """The deployability floor of THIS deployment base: a below-floor
+        candidate would not build the engine the knobs describe
+        (``apply_serve_knobs`` would silently resize it), and on the live
+        path each such trial would also pay an XLA compile to score a
+        mutated config."""
+        from repro.analysis.feasibility import serve_feasibility
+
+        return serve_feasibility(
+            self.base.max_seq, runtime=self.base.runtime,
+            kv_layout=self.base.kv_layout,
+            kv_page_block=self.base.kv_page_block)
 
     def test(self, config: Config) -> PerfMetric:
         from repro.core.sut_jax import median_wall_clock
@@ -630,6 +691,7 @@ def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
     still runs — its microbenchmark cost is the ``kernel_alone_s``
     provenance in every joint metric.
     """
+    from repro.analysis.feasibility import serve_feasibility
     from repro.autotune.sut import KernelSUT
 
     params = params or CotuneParams()
@@ -645,4 +707,8 @@ def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
         },
         scalarize=ServeKernelCoupling(params),
         name="serve+kernel",
+        # the serve member is config-only (a bare space has no SUT to
+        # carry a model), so its deployability predicates attach here;
+        # the kernel member's model is auto-detected off the KernelSUT
+        feasibility={"serve": serve_feasibility(params.max_seq)},
     )

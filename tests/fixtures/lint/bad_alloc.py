@@ -1,0 +1,34 @@
+"""Lint fixture: planted allocator-discipline violation.  Never
+imported — the lint parses it as text.  Expected findings:
+
+* alloc-try-no-release  (the first try acquires but its handler only
+                         logs; the second function's unwind path calls
+                         release_all and must NOT be flagged)
+"""
+
+
+def leaky(alloc, rid, n):
+    try:
+        pages = alloc.reserve(rid, n)
+        return pages
+    except RuntimeError:
+        return None
+
+
+def disciplined(alloc, rid, n):
+    try:
+        pages = alloc.reserve(rid, n)
+        more = alloc.extend(rid, n)
+        return pages, more
+    except BaseException:
+        alloc.release_all()
+        raise
+
+
+def untried(values, alloc_log):
+    # extend on a non-allocator receiver inside a try: not a finding
+    try:
+        values.extend([1, 2, 3])
+    except TypeError:
+        pass
+    return values

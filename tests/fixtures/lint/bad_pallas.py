@@ -1,0 +1,36 @@
+"""Lint fixture: planted pallas_call contract violations.  Never
+imported — the lint parses it as text.  Expected findings:
+
+* pallas-index-map-arity  (second in_spec lambda takes 2 args, grid has 3)
+* pallas-operand-arity    (immediate call passes 3 operands for 2 specs)
+* pallas-kernel-arity     (kernel exposes 5 refs; 2 in + 1 out + 1
+                           scratch = 4 expected)
+* pallas-vmem-scratch     (warning: constant 32 MiB scratch over budget)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, s_ref, o_ref, scratch_ref, extra_ref, *, eps):
+    o_ref[...] = x_ref[...] * s_ref[...] + eps
+
+
+def bad_call(x, scale):
+    n, d = 8, 128
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=1e-6),
+        grid=(n, 2, 2),
+        in_specs=[
+            pl.BlockSpec((8, d), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((8, d), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2048, 4096), jnp.float32),
+        ],
+    )(x, scale, scale)

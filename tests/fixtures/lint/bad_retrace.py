@@ -1,0 +1,25 @@
+"""Lint fixture: planted jit retrace hazards.  Never imported — the lint
+parses it as text.  Expected findings:
+
+* jit-static-missing       (line ~14: 'block_size' is not a param)
+* jit-static-mutable-default (line ~22: static 'shape' defaults to a list)
+* jit-traced-str-default   (line ~30: traced 'mode' defaults to a str)
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_size"))
+def attention(q, k, v, *, causal=True):
+    return q + k + v if causal else q
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def windowed(x, *, shape=[128, 128]):
+    return x.reshape(shape)
+
+
+@jax.jit
+def normalize(x, mode="rms"):
+    return x if mode == "rms" else -x

@@ -9,12 +9,18 @@ property for the whole optimizer registry at once:
 * batched and sequential dispatch score the identical trial sequence
   (generalizing the RRS-only parity pin in ``test_batched_tuner.py``),
 * different seeds ⇒ different trial sequences (the run is seed-driven,
-  not accidentally constant).
+  not accidentally constant),
+* (PR 7) all of the above with static feasibility pruning active: the
+  pruning path drops candidates deterministically — same seed ⇒ the
+  identical charged-trial stream AND the identical pruned count, in
+  both dispatch modes, with no budget charged to pruned configs.
 
 The matrix iterates ``repro.core.optimizers.OPTIMIZERS`` dynamically, so a
 newly registered optimizer inherits the whole determinism contract with no
 test changes — if it cannot satisfy it, this file is the failing gate.
 """
+import zlib
+
 import numpy as np
 import pytest
 
@@ -25,10 +31,21 @@ BUDGET = 60
 SEEDS = (0, 1)
 
 
-def _run(optimizer, seed, batch):
+def _hash_feasible(config):
+    """A deterministic, config-pure predicate rejecting ~1/4 of configs.
+
+    crc32 (not ``hash``) so the verdict is stable across processes —
+    the pruning arm's trial streams must reproduce run-to-run exactly
+    like the unpruned ones.
+    """
+    key = repr(tuple(sorted(config.items()))).encode()
+    return zlib.crc32(key) % 4 != 0
+
+
+def _run(optimizer, seed, batch, feasibility=None):
     sut = MySQLSurrogate()
     tuner = Tuner(sut.space(), sut, budget=BUDGET, optimizer=optimizer,
-                  seed=seed, batch=batch)
+                  seed=seed, batch=batch, feasibility=feasibility)
     return tuner.run()
 
 
@@ -76,3 +93,29 @@ class TestDeterminismMatrix:
         traces = {seed: _trace(_run(optimizer, seed, batch=True))
                   for seed in SEEDS}
         assert traces[SEEDS[0]] != traces[SEEDS[1]]
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize("batch", [True, False])
+    def test_pruning_preserves_determinism(self, optimizer, seed, batch):
+        r1 = _run(optimizer, seed, batch, feasibility=_hash_feasible)
+        r2 = _run(optimizer, seed, batch, feasibility=_hash_feasible)
+        assert _trace(r1) == _trace(r2)
+        assert r1.n_infeasible_pruned == r2.n_infeasible_pruned
+        assert r1.best_config == r2.best_config
+        # pruning must actually engage, charge no budget for pruned
+        # configs, and never record an infeasible trial (beyond the
+        # contractually-tested default config)
+        assert r1.n_infeasible_pruned > 0
+        assert r1.n_tests == BUDGET
+        assert all(_hash_feasible(t.config) for t in r1.history[1:])
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_pruning_batched_sequential_parity(self, optimizer, seed):
+        rb = _run(optimizer, seed, batch=True,
+                  feasibility=_hash_feasible)
+        rs = _run(optimizer, seed, batch=False,
+                  feasibility=_hash_feasible)
+        assert _trace(rb) == _trace(rs)
+        assert rb.n_infeasible_pruned == rs.n_infeasible_pruned
+        assert rb.best_config == rs.best_config
+        assert rb.n_tests == rs.n_tests

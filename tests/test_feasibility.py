@@ -1,0 +1,289 @@
+"""Static feasibility: the predicate layer and zero-budget pruning.
+
+Pins the PR-7 contracts:
+
+* feasible ⇔ finite cost — for EVERY ``KERNELS`` entry, the feasibility
+  model and the roofline cost model agree on hard infeasibility over
+  random configs (they share one ``vmem_footprint``, so disagreement
+  means the factoring regressed),
+* pruning charges no budget — a tune over a space with statically
+  infeasible configs spends its full budget on feasible configs only,
+  counts the pruned ones, and stays exactly seed-deterministic,
+* the serve deployability floor — ``serve_feasibility`` rejects
+  precisely the configs ``apply_serve_knobs`` would mutate, so fresh
+  tuning cannot produce a floor raise (the warn-once path stays
+  reachable only for pre-PR7 cached winners),
+* composite routing — ``CompositeFeasibility`` evaluates member models
+  on their prefixed subconfigs.
+"""
+import math
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.feasibility import (CompositeFeasibility,
+                                        FeasibilityModel, Predicate,
+                                        kernel_feasibility,
+                                        serve_feasibility)
+from repro.autotune.space import KERNELS, VMEM_BYTES, KernelSpace
+from repro.autotune.sut import KernelSUT
+from repro.core.tuner import Tuner
+
+# Shapes chosen so the VMEM budget genuinely splits each kernel's space:
+# large model dims make the biggest tiles infeasible while the small ones
+# stay finite — the iff below is then exercised on both sides.
+DIMS = {
+    "flash_attention": {"B": 2, "S": 8192, "SK": 8192, "H": 8, "KV": 8,
+                        "D": 1024},
+    "decode_attention": {"B": 8, "S": 8192, "H": 8, "KV": 1, "D": 1024},
+    "paged_attention": {"B": 8, "S": 8192, "H": 8, "KV": 1, "D": 2048},
+    "gla": {"B": 2, "S": 8192, "H": 4, "DK": 1024, "DV": 1024},
+    "rmsnorm": {"ROWS": 8192, "D": 6144},
+}
+
+RMSNORM_DIMS = {"ROWS": 8192, "D": 6144}  # block_rows 512+ blows VMEM
+
+
+def _cfg(kernel, seed):
+    space = KernelSpace(kernel).space()
+    rng = np.random.default_rng(seed)
+    return space.from_unit_vector(rng.random(space.dim))
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+class TestFeasibleIffFiniteCost:
+    @settings(max_examples=40)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_iff(self, kernel, seed):
+        dims = KernelSpace(kernel).validate_dims(DIMS[kernel])
+        model = kernel_feasibility(kernel, dims, "float32")
+        cfg = _cfg(kernel, seed)
+        cost = float(KERNELS[kernel].model_cost(cfg, dims, "float32"))
+        assert model(cfg) == (cost < math.inf), (
+            f"feasibility/cost disagree on {kernel} cfg={cfg}: "
+            f"feasible={model(cfg)} cost={cost}")
+
+    def test_footprint_is_the_only_inf_source(self, kernel):
+        """cost == inf exactly when the shared footprint exceeds VMEM."""
+        dims = KernelSpace(kernel).validate_dims(DIMS[kernel])
+        kdef = KERNELS[kernel]
+        for seed in range(64):
+            cfg = _cfg(kernel, seed)
+            over = kdef.vmem_footprint(cfg, dims, "float32") > VMEM_BYTES
+            cost = float(kdef.model_cost(cfg, dims, "float32"))
+            assert (cost == math.inf) == over
+
+
+def test_split_is_real():
+    """The rmsnorm probe shape has both feasible and infeasible configs
+    (otherwise the pruning tests below exercise nothing)."""
+    model = kernel_feasibility("rmsnorm", RMSNORM_DIMS, "float32")
+    verdicts = {model({"block_rows": br, "dim_semantics": None})
+                for br in (128, 256, 512, 1024)}
+    assert verdicts == {True, False}
+
+
+def test_alignment_is_warn_only():
+    """A misaligned-but-fitting tile is feasible (finite cost penalty),
+    but ``check`` surfaces the warning."""
+    dims = {"ROWS": 100, "D": 512}  # 100 % 8 != 0: sublane-misaligned
+    model = kernel_feasibility("rmsnorm", dims, "float32")
+    cfg = {"block_rows": 128, "dim_semantics": None}
+    assert model(cfg)
+    sevs = {v.severity for v in model.check(cfg)}
+    assert sevs == {"warn"}
+    assert "sublane" in model.explain(cfg)
+
+
+# ---------------------------------------------------------------------------
+# zero-budget pruning through the Tuner
+# ---------------------------------------------------------------------------
+def _tune(budget=24, seed=0, **kw):
+    sut = KernelSUT("rmsnorm", RMSNORM_DIMS, mode="model")
+    return Tuner(sut.space(), sut, budget=budget, optimizer="rrs",
+                 seed=seed, **kw).run()
+
+
+def _trace(report):
+    return [(tuple(sorted(t.config.items())), t.value)
+            for t in report.history]
+
+
+class TestPruning:
+    def test_no_budget_charged_to_infeasible(self):
+        rep = _tune()
+        model = kernel_feasibility("rmsnorm", RMSNORM_DIMS, "float32")
+        space = KernelSpace("rmsnorm").space()
+        n_feasible = sum(
+            model({"block_rows": br, "dim_semantics": ds})
+            for br in space["block_rows"].grid(10**6)
+            for ds in space["dim_semantics"].grid(10**6))
+        assert rep.n_infeasible_pruned > 0
+        # pruning + config dedup explore exactly the feasible region:
+        # the budget of 24 cannot be filled by 16 - 4 distinct configs
+        assert 0 < n_feasible < 24
+        assert rep.n_tests == n_feasible
+        # the default config is contractually tested even if infeasible;
+        # every *searched* trial must be feasible and finitely scored
+        for t in rep.history[1:]:
+            assert model(t.config), t.config
+            assert math.isfinite(t.value)
+
+    def test_pruning_is_seed_deterministic(self):
+        for seed in (0, 1):
+            r1, r2 = _tune(seed=seed), _tune(seed=seed)
+            assert _trace(r1) == _trace(r2)
+            assert r1.n_infeasible_pruned == r2.n_infeasible_pruned
+            assert r1.best_config == r2.best_config
+
+    def test_feasibility_false_disables(self):
+        rep = _tune(feasibility=False)
+        assert rep.n_infeasible_pruned == 0
+        # without pruning the searcher pays for inf configs
+        assert any(not math.isfinite(t.value) for t in rep.history)
+
+    def test_pruned_run_never_worse(self):
+        on, off = _tune(), _tune(feasibility=False)
+        assert on.best_metric.value <= off.best_metric.value
+
+    def test_non_callable_feasibility_rejected(self):
+        sut = KernelSUT("rmsnorm", RMSNORM_DIMS, mode="model")
+        with pytest.raises(TypeError):
+            Tuner(sut.space(), sut, budget=4, feasibility=42)
+
+    def test_empty_feasible_region_terminates(self):
+        sut = KernelSUT("rmsnorm", RMSNORM_DIMS, mode="model")
+        tuner = Tuner(sut.space(), sut, budget=8,
+                      feasibility=lambda cfg: False)
+        with warnings.catch_warnings():
+            # every round scores all-inf: numpy's percentile math emits
+            # a benign invalid-subtract warning in this degenerate case
+            warnings.simplefilter("ignore", RuntimeWarning)
+            rep = tuner.run()  # MAX_CONSECUTIVE_PRUNED ends the search
+        # only the unconditional default test is charged
+        assert rep.n_tests == 1
+        assert rep.n_infeasible_pruned > 0
+
+
+# ---------------------------------------------------------------------------
+# serve deployability floor
+# ---------------------------------------------------------------------------
+class TestServeFloor:
+    def test_paged_floor_boundary(self):
+        from repro.serve.paging import min_pages_for
+
+        floor = min_pages_for(2048, 1)
+        model = serve_feasibility(2048)
+        base = {"max_batch": 8}
+        assert not model({**base, "kv_cache_pages": floor - 1})
+        assert model({**base, "kv_cache_pages": floor})
+
+    def test_dense_floor_scales_with_slots(self):
+        from repro.serve.paging import PAGE_TOKENS
+
+        model = serve_feasibility(2048, kv_layout="dense")
+        need = 8 * 2048 // PAGE_TOKENS
+        assert not model({"max_batch": 8, "kv_cache_pages": need - 1})
+        assert model({"max_batch": 8, "kv_cache_pages": need})
+        assert model({"max_batch": 1, "kv_cache_pages": 2048 // PAGE_TOKENS})
+
+    def test_feasible_configs_deploy_unmutated(self):
+        """The predicate encodes apply_serve_knobs' floor exactly: a
+        feasible config round-trips with its tuned page count intact."""
+        import repro.serve.space as sspace
+        from repro.serve.engine import ServeConfig
+
+        base = ServeConfig(runtime="continuous", kv_layout="paged")
+        model = serve_feasibility(base.max_seq, runtime=base.runtime,
+                                  kv_layout=base.kv_layout,
+                                  kv_page_block=base.kv_page_block)
+        space = sspace.serve_knob_space(base.max_seq)
+        rng = np.random.default_rng(7)
+        checked = 0
+        for _ in range(200):
+            cfg = space.from_unit_vector(rng.random(space.dim))
+            if not model(cfg):
+                continue
+            before = sspace.kv_floor_raise_count()
+            deployed = sspace.apply_serve_knobs(cfg, base=base)
+            assert sspace.kv_floor_raise_count() == before
+            assert deployed.kv_cache_pages == int(cfg["kv_cache_pages"])
+            checked += 1
+        assert checked > 0
+
+    def test_floor_raise_warns_once_and_counts(self):
+        import repro.serve.space as sspace
+        from repro.serve.engine import ServeConfig
+
+        base = ServeConfig(runtime="continuous", kv_layout="paged")
+        below = {"max_batch": 4, "prefill_chunk": 128,
+                 "kv_cache_pages": 1, "schedule": "fifo",
+                 "page_policy": "reserve", "share_prefix": 0,
+                 "draft_len": 0}
+        sspace._floor_raise_warned = False  # re-arm the once-latch
+        before = sspace.kv_floor_raise_count()
+        with pytest.warns(RuntimeWarning, match="deployable floor"):
+            sspace.apply_serve_knobs(below, base=base)
+        assert sspace.kv_floor_raise_count() == before + 1
+        # second raise counts but does not warn again
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            sspace.apply_serve_knobs(below, base=base)
+        assert sspace.kv_floor_raise_count() == before + 2
+
+    def test_fresh_surrogate_tuning_cannot_raise(self):
+        """A winner tuned under the auto-detected serve feasibility is
+        deployable as-is."""
+        import repro.serve.space as sspace
+        from repro.serve.engine import ServeConfig
+
+        sut = sspace.ServeSurrogate()
+        rep = Tuner(sut.space(), sut, budget=32, optimizer="rrs",
+                    seed=3).run()
+        assert sut.feasibility_model(rep.best_config)
+        base = ServeConfig(runtime="continuous", kv_layout="paged")
+        before = sspace.kv_floor_raise_count()
+        sspace.apply_serve_knobs(rep.best_config, base=base)
+        assert sspace.kv_floor_raise_count() == before
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+class TestComposite:
+    def test_prefix_routing(self):
+        kernel = kernel_feasibility("rmsnorm", RMSNORM_DIMS, "float32")
+        serve = serve_feasibility(2048)
+        joint = CompositeFeasibility({"kernel": kernel, "serve": serve})
+        good = {"kernel.block_rows": 256, "kernel.dim_semantics": None,
+                "serve.max_batch": 8, "serve.kv_cache_pages": 512}
+        assert joint(good)
+        assert not joint({**good, "kernel.block_rows": 1024})
+        assert not joint({**good, "serve.kv_cache_pages": 1})
+        names = {v.predicate for v in joint.check(
+            {**good, "kernel.block_rows": 1024,
+             "serve.kv_cache_pages": 1})}
+        assert {"kernel.vmem_fits", "serve.kv_pages_floor"} <= names
+
+    def test_cotune_sut_composes_serve_floor(self):
+        from repro.serve.space import make_cotune_sut
+
+        sut = make_cotune_sut()
+        model = sut.feasibility_model
+        assert model is not None
+        cfg = sut.space().default_config()
+        assert model(cfg)
+        bad = dict(cfg)
+        bad["serve.kv_cache_pages"] = 1
+        assert not model(bad)
+
+    def test_predicate_severity_validated(self):
+        with pytest.raises(ValueError):
+            Predicate("p", lambda c: None, severity="fatal")
+        # a valid model built from valid predicates round-trips
+        model = FeasibilityModel("m", predicates=[
+            Predicate("p", lambda c: None)])
+        assert model({})
