@@ -26,17 +26,40 @@ shared arm must clear >= 2x the unshared arm's end-to-end
 (prefill+decode) tokens/sec — with bit-identical tokens, strictly fewer
 prefill dispatches (the noise-free signal) and a balanced allocator.
 
+A fourth, *drifting* workload pins the online-retuning claim (PR 8): the
+request mix starts as the distinct-long-prompt traffic the deployed knobs
+were tuned under, then shifts to shared-prefix short-tail bursts.  The
+**stale** arm spends its whole tuning budget offline before the drift and
+serves the shifted phase on those knobs; the **retune** arm splits the
+SAME total budget across an earlier deployment's cached winner (the
+nearest-signature donor), an offline phase-A winner, and an online
+mid-run retune fed by the live window's MEASURED fingerprint.  The
+retuned arm must clear >= 1.15x the stale arm's end-to-end tokens/sec in
+strictly fewer decode steps (the noise-free occupancy signal), with
+bit-identical tokens across the mid-stream knob swap, the retuned
+``spec_accept`` within 0.1 of the measured acceptance rate, and the
+online winner persisted under its workload signature.
+
+A standalone drafting-cost row pins the bounded-lookback satellite: with
+``draft_window`` the n-gram drafter's per-call cost is flat in history
+length (16x longer history < 3x cost) instead of linear.
+
 ``BENCH_serve.json`` is the cross-PR perf artifact; ``--check`` exits
 non-zero if continuous+paged underperforms wave at equal engine config,
-if ``on_demand`` loses to ``reserve`` on the oversubscribed arm, or if
-sharing loses its 2x on the repeated-prefix arm — wired into CI.
+if ``on_demand`` loses to ``reserve`` on the oversubscribed arm, if
+sharing loses its 2x on the repeated-prefix arm, or if online retuning
+loses its 1.15x (or any of its invariants) on the drift arm — wired
+into CI.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
+import shutil
 import sys
+import tempfile
 import time
 from types import SimpleNamespace
 from typing import Any, Dict, List
@@ -65,6 +88,23 @@ OVERSUB_POOL = 6
 # sharing's win IS the dispatches it skips
 SHARED_PREFIX_LEN = 32
 SHARED_PREFILL_CHUNK = 4
+# drifting-workload arm: a SMALL pool (7 groups) is what couples the
+# knobs to the workload — phase A's 3-group worst-case footprints cap
+# residency at 2, so offline tuning on phase A lands on a narrow
+# max_batch; the drifted phase's shared-prefix requests shrink to ~1
+# private group each, so the retuned winner goes wide (and shares) where
+# the stale one keeps admitting 2 at a time.  DRIFT_BUDGET is the
+# per-component tuning budget: the stale arm spends 3x offline, the
+# retune arm splits the same 3x across donor + offline + online
+DRIFT_MAX_SEQ = 48
+DRIFT_SLOTS = 8
+DRIFT_PAGES = 7
+DRIFT_BUDGET = 8
+# bounded-drafting row: lookback window vs history lengths, timed reps
+DRAFT_WINDOW = 256
+DRAFT_SHORT = 1024
+DRAFT_LONG = 16384
+DRAFT_COST_REPS = 2000
 
 
 def _tiny_model():
@@ -197,6 +237,261 @@ def _arm_stats(tokens, res, wall: float, lats: List[float]) -> Dict[str, Any]:
     }
 
 
+def _drifting_workload(seed: int = SEED):
+    """Phase A (distinct long prompts, long generations — the traffic the
+    deployed knobs were tuned under; 30+12 tokens = 3 worst-case page
+    groups), then phase B (shared-prefix short tails, short generations,
+    many concurrent) — the drift the online retuner must catch mid-run."""
+    rng = np.random.default_rng(seed + 3)
+    pa = [rng.integers(1, 512, size=30).tolist() for _ in range(4)]
+    head = rng.integers(1, 512, size=32).tolist()
+    pb = [head + rng.integers(1, 512, size=3).tolist() for _ in range(28)]
+    return pa + pb, [12] * 4 + [6] * 28
+
+
+def _phase_a_workload(seed: int = SEED):
+    """Phase-A-shaped traffic on its own: what both arms tune offline
+    against, and the signature the deployed knobs carry.  The SAME
+    request count as the drift run, so the measured baseline reflects
+    the queue depth and arrival rate the live detector will see while
+    the traffic still matches — detection then keys on the workload
+    SHAPE shifting, not on deployment conditions mismatching."""
+    rng = np.random.default_rng(seed + 4)
+    return ([rng.integers(1, 512, size=30).tolist() for _ in range(24)],
+            [12] * 24)
+
+
+def _pilot_workload(seed: int = SEED):
+    """An earlier deployment's traffic: shared-head short tails like
+    phase B but a different head, different tails and shorter
+    generations — its measured signature lands NEAR the live drifted one
+    without ever being exact, so the transfer the retune arm gets is the
+    nearest-signature kind, not a lookup hit."""
+    rng = np.random.default_rng(seed + 5)
+    head = rng.integers(1, 512, size=32).tolist()
+    return ([head + rng.integers(1, 512, size=2).tolist()
+             for _ in range(8)], [4] * 8)
+
+
+_DRIFT_RETUNE_KW = dict(retune=True, retune_budget=DRIFT_BUDGET,
+                        retune_threshold=0.18, retune_window=8,
+                        retune_cooldown=200, retune_check_every=2,
+                        retune_min_requests=6)
+
+
+def _drift_engine(model, params, knobs=None, **extra):
+    from repro.serve import ServeConfig, ServeEngine
+
+    kw: Dict[str, Any] = dict(
+        max_seq=DRIFT_MAX_SEQ, batch_slots=DRIFT_SLOTS, kv_layout="paged",
+        kv_cache_pages=DRIFT_PAGES, prefill_chunk=PREFILL_CHUNK,
+        seed=SEED)
+    if knobs is not None:
+        # deploy tuned knobs the way the online swap does: admission
+        # width via slot_cap (the compiled dispatch stays at
+        # DRIFT_SLOTS lanes in both arms, so decode steps compare
+        # apples to apples), everything else directly
+        kw.update(slot_cap=min(int(knobs["max_batch"]), DRIFT_SLOTS),
+                  prefill_chunk=int(knobs["prefill_chunk"]),
+                  schedule=str(knobs["schedule"]),
+                  page_policy=str(knobs["page_policy"]),
+                  share_prefix=bool(int(knobs["share_prefix"])),
+                  draft_len=int(knobs["draft_len"]))
+    kw.update(extra)
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+def _measured_fingerprint(model, params, prompts, gens):
+    """What the engine's own window measures on this traffic: run it with
+    the shift detector anchored but inert (threshold no drift reaches)
+    and read the anchored baseline back."""
+    eng = _drift_engine(model, params,
+                        **dict(_DRIFT_RETUNE_KW, retune_threshold=10.0))
+    eng.generate(prompts, gens)
+    return eng.last_retuner.baseline
+
+
+def _offline_retune(model, fp, budget, sig_dims=None, seed=SEED):
+    """One offline tuning run over the SAME frozen knob space the
+    engine's online retuner optimizes (kv pool pinned to the allocated
+    one), against the measured fingerprint — with ``sig_dims`` the winner
+    is persisted under its workload signature like any tuning session."""
+    from repro.serve.space import CotuneParams, serve_knob_space
+    from repro.serve.workload import OnlineRetuner
+
+    mcfg = model.cfg
+    space = serve_knob_space(DRIFT_MAX_SEQ, max_slots=DRIFT_SLOTS).freeze(
+        {"kv_cache_pages": DRIFT_PAGES})
+    rt = OnlineRetuner(
+        space, CotuneParams.from_model(mcfg, max_seq=DRIFT_MAX_SEQ),
+        budget=budget, seed=seed, sig_dims=sig_dims,
+        dtype=mcfg.compute_dtype)
+    return rt.retune(fp)
+
+
+def _finite_or_none(obj):
+    """json-safe copy: non-finite floats (nan acceptance before any
+    draft data) become null instead of bare NaN literals."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _finite_or_none(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite_or_none(v) for v in obj]
+    return obj
+
+
+def _drift_bench(model, params) -> Dict[str, Any]:
+    """The drifting-workload comparison at equal total tuning budget."""
+    from repro import autotune
+    from repro.serve.workload import fingerprint_sig
+
+    mcfg = model.cfg
+    dims = {"S": DRIFT_MAX_SEQ, "H": mcfg.padded_heads,
+            "KV": mcfg.n_kv_heads, "D": mcfg.head_dim_}
+    prompts, gens = _drifting_workload()
+    old_cache = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    tmp = tempfile.mkdtemp(prefix="repro-drift-bench-")
+    cpath = os.path.join(tmp, "cache.json")
+    try:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = cpath
+        autotune.reset_default_cache()
+
+        # the signatures each side tuned under, as the live window
+        # measures them (shadow-probe acceptance included)
+        fp_a = _measured_fingerprint(model, params, *_phase_a_workload())
+        fp_pilot = _measured_fingerprint(model, params, *_pilot_workload())
+        sig_a = fingerprint_sig(fp_a)
+
+        # stale arm: the whole budget spent offline, before the drift
+        ev_stale = _offline_retune(model, fp_a, 3 * DRIFT_BUDGET)
+        # retune arm, same total: an earlier deployment's winner cached
+        # under its own signature (the donor nearest-signature transfer
+        # will find), an offline phase-A winner to deploy, and the
+        # online retune's budget at drift time
+        ev_donor = _offline_retune(model, fp_pilot, DRIFT_BUDGET,
+                                   sig_dims=dims, seed=SEED + 1)
+        ev_init = _offline_retune(model, fp_a, DRIFT_BUDGET)
+        with open(cpath, "rb") as f:
+            seeded = f.read()  # pre-drift cache: the donor entry only
+
+        def run(knobs, **extra):
+            eng = _drift_engine(model, params, knobs, **extra)
+            deployed = {f: getattr(eng.cfg, f) for f in
+                        ("schedule", "page_policy", "prefill_chunk",
+                         "draft_len", "share_prefix")}
+            eng.generate(prompts, gens)  # warmup: jit (incl. swap shapes)
+            # the warmup run's own retune swapped the engine's live knobs
+            # and persisted a winner; each timed repeat starts over from
+            # the deployed knobs and the pre-drift cache, so it measures
+            # a fresh deployment (with the swap's jit shapes warm).
+            # Steps and tokens are deterministic across repeats; the
+            # median serve time damps CPU wall-clock noise
+            runs = []
+            for _ in range(3):
+                for field, v in deployed.items():
+                    setattr(eng.cfg, field, v)
+                with open(cpath, "wb") as fh:
+                    fh.write(seeded)
+                autotune.reset_default_cache()
+                t0 = time.time()
+                res = eng.generate(prompts, gens)
+                runs.append((time.time() - t0, res))
+            runs.sort(key=lambda wr: (wr[1].prefill_seconds
+                                      + wr[1].decode_seconds))
+            wall, res = runs[len(runs) // 2]
+            stats = _arm_stats(res.tokens, res, wall,
+                               [r["latency_s"] for r in res.per_request])
+            eng.last_alloc.check_balanced()
+            stats["leaked_groups"] = int(eng.last_alloc.groups_in_use)
+            stats["prefill_chunks"] = int(res.prefill_chunks)
+            stats["shared_prefix_tokens"] = int(res.shared_prefix_tokens)
+            stats["preemptions"] = int(res.preemptions)
+            stats["retunes"] = res.retunes
+            return stats
+
+        stale = run(ev_stale["config"])
+        retuned = run(ev_init["config"], tuned_signature=sig_a,
+                      **_DRIFT_RETUNE_KW)
+        cands = autotune.serve_config_candidates(dims, mcfg.compute_dtype)
+    finally:
+        if old_cache is None:
+            os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_CACHE"] = old_cache
+        autotune.reset_default_cache()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    parity = stale["tokens"] == retuned["tokens"]
+    events = retuned.pop("retunes")
+    stale.pop("retunes")
+    ev = events[0] if events else {}
+    entry = cands.get(ev.get("signature"))
+    cached_ok = bool(entry
+                     and entry["meta"].get("source") == "online_retune"
+                     and entry["config"] == ev.get("config"))
+
+    def _rate(s):
+        return s["generated"] / max(s["prefill_s"] + s["decode_s"], 1e-9)
+
+    return {
+        "drift_workload": {
+            "max_seq": DRIFT_MAX_SEQ, "slots": DRIFT_SLOTS,
+            "prompt_lens": [len(p) for p in prompts], "gen_lens": gens,
+            "tuned_signature": sig_a,
+            "donor_signature": ev_donor["signature"]},
+        "drift_arms": {"stale": {k: v for k, v in stale.items()
+                                 if k != "tokens"},
+                       "retune": {k: v for k, v in retuned.items()
+                                  if k != "tokens"}},
+        "drift_token_parity": bool(parity),
+        "drift_retune_events": [_finite_or_none(e) for e in events],
+        "drift_stale_knobs": ev_stale["config"],
+        "drift_retune_init_knobs": ev_init["config"],
+        "drift_budget": {"stale_offline": int(ev_stale["n_tests"]),
+                         "retune_offline": int(ev_init["n_tests"]),
+                         "retune_donor": int(ev_donor["n_tests"]),
+                         "retune_online": int(ev.get("n_tests", 0))},
+        "retune_over_stale_serve": _rate(retuned) / _rate(stale),
+        "drift_signature_cached": cached_ok,
+        "drift_leaked_groups": (stale["leaked_groups"]
+                                + retuned["leaked_groups"]),
+    }
+
+
+def _draft_cost() -> Dict[str, Any]:
+    """The bounded-drafting row: ``draft_window`` makes the n-gram
+    drafter's per-call cost a function of the window, not the history —
+    16x more history must stay under 3x the cost (the unbounded contrast
+    column shows what the bound is buying)."""
+    from repro.serve import ServeEngine
+
+    rng = np.random.default_rng(SEED)
+    hists = {n: rng.integers(0, 8, size=n).tolist()
+             for n in (DRAFT_SHORT, DRAFT_LONG)}
+
+    def per_call(hist, window):
+        ServeEngine._ngram_draft(hist, 4, window=window)  # warm caches
+        t0 = time.perf_counter()
+        for _ in range(DRAFT_COST_REPS):
+            ServeEngine._ngram_draft(hist, 4, window=window)
+        return (time.perf_counter() - t0) / DRAFT_COST_REPS
+
+    bounded = {n: per_call(h, DRAFT_WINDOW) for n, h in hists.items()}
+    unbounded_long = per_call(hists[DRAFT_LONG], 0)
+    return {
+        "window": DRAFT_WINDOW, "reps": DRAFT_COST_REPS,
+        "short_len": DRAFT_SHORT, "long_len": DRAFT_LONG,
+        "bounded_short_us": bounded[DRAFT_SHORT] * 1e6,
+        "bounded_long_us": bounded[DRAFT_LONG] * 1e6,
+        "unbounded_long_us": unbounded_long * 1e6,
+        "bounded_ratio": (bounded[DRAFT_LONG]
+                          / max(bounded[DRAFT_SHORT], 1e-12)),
+        "unbounded_over_bounded": (unbounded_long
+                                   / max(bounded[DRAFT_LONG], 1e-12)),
+    }
+
+
 def bench() -> Dict[str, Any]:
     model, params = _tiny_model()
     prompts, gens = _workload()
@@ -277,7 +572,9 @@ def bench() -> Dict[str, Any]:
                                        / _serve_rate(sharing["unshared"])),
         "sharing_leaked_groups": (sharing["shared"]["leaked_groups"]
                                   + sharing["unshared"]["leaked_groups"]),
+        "draft_cost": _draft_cost(),
     }
+    out.update(_drift_bench(model, params))
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     return out
@@ -326,6 +623,29 @@ def rows_from(result: Dict[str, Any]) -> List[Row]:
                  "ok" if (result["sharing_token_parity"]
                           and result["sharing_leaked_groups"] == 0)
                  else "MISMATCH"))
+    for arm in ("stale", "retune"):
+        s = result["drift_arms"][arm]
+        rows.append((f"serve_drift_{arm}", 0.0,
+                     f"{s['generated'] / max(s['prefill_s'] + s['decode_s'], 1e-9):.0f} tok/s "
+                     f"steps={s['steps']} occ={s['occupancy']:.2f}"))
+    evs = result["drift_retune_events"]
+    ev = evs[0] if evs else {}
+    rows.append(("serve_retune_over_stale", 0.0,
+                 f"{result['retune_over_stale_serve']:.2f}x "
+                 f"prefill+decode tok/s at equal tuning budget "
+                 f"[{ev.get('warm_source', 'no retune')}"
+                 f" @step {ev.get('step', '-')}]"))
+    rows.append(("serve_drift_parity", 0.0,
+                 "ok" if (result["drift_token_parity"]
+                          and result["drift_leaked_groups"] == 0
+                          and result["drift_signature_cached"])
+                 else "MISMATCH"))
+    dc = result["draft_cost"]
+    rows.append(("serve_draft_cost_flat", 0.0,
+                 f"{dc['bounded_short_us']:.0f}us@{dc['short_len']} vs "
+                 f"{dc['bounded_long_us']:.0f}us@{dc['long_len']} "
+                 f"(x{dc['bounded_ratio']:.2f} bounded; unbounded "
+                 f"x{dc['unbounded_over_bounded']:.1f} dearer)"))
     return rows
 
 
@@ -409,11 +729,74 @@ def main(argv=None) -> int:
                   f"{sh_ratio:.2f}x unshared at an equal pool "
                   "(must be >= 2.0x)", file=sys.stderr)
             return 1
+        # ---- drifting-workload arm gates (PR 8) ----------------------
+        if not result["drift_token_parity"]:
+            print("CHECK FAILED: per-request tokens differ across the "
+                  "mid-stream retune knob swap", file=sys.stderr)
+            return 1
+        if result["drift_leaked_groups"]:
+            print("CHECK FAILED: page groups leaked on the drifting "
+                  "workload", file=sys.stderr)
+            return 1
+        evs = result["drift_retune_events"]
+        if len(evs) != 1:
+            print(f"CHECK FAILED: expected exactly one online retune on "
+                  f"the drift arm, got {len(evs)}", file=sys.stderr)
+            return 1
+        ev = evs[0]
+        if not str(ev.get("warm_source", "")).startswith("near("):
+            print(f"CHECK FAILED: the online retune was not warm-started "
+                  f"by nearest-signature transfer "
+                  f"(warm_source={ev.get('warm_source')!r})",
+                  file=sys.stderr)
+            return 1
+        sa, ma = ev.get("spec_accept"), ev.get("measured_accept")
+        if sa is None or ma is None or abs(sa - ma) > 0.1:
+            print(f"CHECK FAILED: retuned spec_accept {sa} is not within "
+                  f"0.1 of the measured acceptance rate {ma}",
+                  file=sys.stderr)
+            return 1
+        # noise-free first: the retuned knobs must finish the same
+        # tokens in strictly fewer batched decode steps
+        rt_steps = result["drift_arms"]["retune"]["steps"]
+        st_steps = result["drift_arms"]["stale"]["steps"]
+        if rt_steps >= st_steps:
+            print(f"CHECK FAILED: online retuning took {rt_steps} decode "
+                  f"steps vs the stale winner's {st_steps} "
+                  "(the swap gained nothing)", file=sys.stderr)
+            return 1
+        dr_ratio = result["retune_over_stale_serve"]
+        if dr_ratio < 1.15:
+            print(f"CHECK FAILED: online retuning served {dr_ratio:.2f}x "
+                  "the stale offline winner at equal total tuning budget "
+                  "(must be >= 1.15x)", file=sys.stderr)
+            return 1
+        if not result["drift_signature_cached"]:
+            print("CHECK FAILED: the online winner was not persisted "
+                  "under its workload signature", file=sys.stderr)
+            return 1
+        b = result["drift_budget"]
+        spent = (b["retune_offline"] + b["retune_donor"]
+                 + b["retune_online"])
+        if b["stale_offline"] != spent:
+            print(f"CHECK FAILED: tuning budgets differ — stale "
+                  f"{b['stale_offline']} tests vs retune arm "
+                  f"{spent}", file=sys.stderr)
+            return 1
+        dc_ratio = result["draft_cost"]["bounded_ratio"]
+        if dc_ratio >= 3.0:
+            print(f"CHECK FAILED: bounded n-gram drafting cost grew "
+                  f"{dc_ratio:.2f}x from {DRAFT_SHORT} to {DRAFT_LONG} "
+                  "tokens of history (must stay < 3x: the lookback "
+                  "bound is not bounding)", file=sys.stderr)
+            return 1
         print(f"check OK: continuous+paged = {ratio:.2f}x wave decode "
               f"throughput; on_demand = {od_ratio:.2f}x reserve at "
               f"{OVERSUB_POOL} pages; share_prefix = {sh_ratio:.2f}x "
-              "unshared on the repeated-prefix arm; token parity holds, "
-              "pool balanced")
+              f"unshared on the repeated-prefix arm; online retune = "
+              f"{dr_ratio:.2f}x the stale winner at equal budget "
+              f"({st_steps}->{rt_steps} steps, drafting cost flat at "
+              f"{dc_ratio:.2f}x); token parity holds, pool balanced")
     return 0
 
 

@@ -17,9 +17,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
-# Post-PR6 baseline: CI fails if the collected count ever drops below it
+# Post-PR8 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=534
+MIN_COLLECTED=634
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -257,7 +257,83 @@ print(f"sharing+speculation smoke OK ({shared.shared_prefix_tokens} shared "
       "tokens, no leaks)")
 EOF
 
-echo "=== check: continuous+paged >= wave; on_demand >= reserve; shared >= 2x ==="
-timeout 300 python -m benchmarks.serve_bench --check
+echo "=== smoke: online workload-aware retuning (~30s) ==="
+# A drifting workload (distinct long prompts, then shared-prefix short
+# tails) through the live engine with --retune semantics: the shift
+# detector MUST fire exactly once, the mid-run knob swap MUST leave
+# generated tokens bit-identical to a never-retuned run, the measured
+# draft acceptance MUST reach the retune's surrogate (spec_accept within
+# 0.1), and the winner MUST persist under its workload signature.
+REPRO_AUTOTUNE_CACHE="$CI_TMP/retune_smoke.json" timeout 120 python - <<'EOF'
+import math
+
+import jax, numpy as np
+from repro import autotune
+from repro.configs import ModelConfig
+from repro.models import Model
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.workload import fingerprint_sig
+
+cfg = ModelConfig(
+    name="ci-tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+    param_dtype="float32", compute_dtype="float32", vocab_pad_multiple=64,
+    rope_theta=10_000.0)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+BASE = dict(max_seq=48, batch_slots=8, kv_layout="paged", seed=0,
+            prefill_chunk=8, slot_cap=3)
+RETUNE = dict(retune=True, retune_budget=8, retune_threshold=0.3,
+              retune_window=10, retune_cooldown=200,
+              retune_check_every=2, retune_min_requests=6)
+
+# the signature the deployed knobs were (notionally) tuned under:
+# measured from a phase-A-only run with the detector anchored but inert
+rng = np.random.default_rng(0)
+pa = [rng.integers(1, 500, size=20).tolist() for _ in range(6)]
+eng = ServeEngine(model, params, ServeConfig(
+    **BASE, retune=True, retune_threshold=10.0, retune_min_requests=6,
+    retune_window=10))
+eng.generate(pa, [12] * 6)
+sig_a = fingerprint_sig(eng.last_retuner.baseline)
+
+# phase A then a shift to shared-prefix short-tail bursts
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, 500, size=20).tolist() for _ in range(3)]
+shared = rng.integers(1, 500, size=32).tolist()
+prompts += [shared + rng.integers(1, 500, size=3).tolist()
+            for _ in range(12)]
+gens = [12] * 3 + [6] * 12
+
+autotune.reset_default_cache()
+eng = ServeEngine(model, params, ServeConfig(
+    **BASE, tuned_signature=sig_a, **RETUNE))
+res = eng.generate(prompts, gens)
+eng.last_alloc.check_balanced()
+base = ServeEngine(model, params,
+                   ServeConfig(**BASE)).generate(prompts, gens)
+assert len(res.retunes) == 1, f"retune fired {len(res.retunes)}x, not once"
+ev = res.retunes[0]
+assert ev["applied"], "the retune moved no knob"
+assert res.tokens == base.tokens, "knob swap changed generated tokens"
+assert math.isfinite(ev["measured_accept"]) and \
+    abs(ev["spec_accept"] - ev["measured_accept"]) <= 0.1, \
+    "measured acceptance never reached the retune surrogate"
+cands = autotune.serve_config_candidates(
+    {"S": 48, "H": cfg.padded_heads, "KV": cfg.n_kv_heads,
+     "D": cfg.head_dim_}, cfg.compute_dtype)
+entry = cands.get(ev["signature"])
+assert entry is not None, "winner not cached under its workload signature"
+assert entry["config"] == ev["config"]
+assert entry["meta"]["source"] == "online_retune"
+moved = ", ".join(f"{k} {o}->{n}" for k, (o, n) in ev["applied"].items())
+print(f"retune smoke OK (drift {ev['distance']:.2f} @step {ev['step']} "
+      f"[{ev['warm_source']}] -> {moved}; accept "
+      f"{ev['measured_accept']:.2f}, identical tokens, winner cached)")
+EOF
+
+echo "=== check: continuous+paged >= wave; on_demand >= reserve; shared >= 2x;"
+echo "===        online retune >= 1.15x stale winner at equal budget ==="
+timeout 450 python -m benchmarks.serve_bench --check
 
 echo "CI OK"

@@ -25,6 +25,7 @@ from .api import (
     put_serve_config,
     put_train_config,
     resolve_blocks,
+    serve_config_candidates,
 )
 from .cache import AutotuneCache, SCHEMA_VERSION, default_cache, \
     reset_default_cache
@@ -50,5 +51,6 @@ __all__ = [
     "put_train_config",
     "reset_default_cache",
     "resolve_blocks",
+    "serve_config_candidates",
     "shape_sig",
 ]

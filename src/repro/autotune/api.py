@@ -23,8 +23,9 @@ from .sut import KernelSUT
 
 __all__ = ["autotune_kernel", "ensure_tuned", "resolve_blocks",
            "cached_blocks", "backend_name", "put_serve_config",
-           "cached_serve_config", "SERVE_SYSTEM", "put_train_config",
-           "cached_train_config", "TRAIN_SYSTEM"]
+           "cached_serve_config", "serve_config_candidates",
+           "SERVE_SYSTEM", "put_train_config", "cached_train_config",
+           "TRAIN_SYSTEM"]
 
 logger = logging.getLogger("repro.autotune")
 
@@ -93,29 +94,47 @@ def put_serve_config(sig_dims: Dict[str, int], dtype: str,
                      config: Dict[str, Any], value: float,
                      cache: Optional[AutotuneCache] = None,
                      backend: Optional[str] = None,
-                     meta: Optional[Dict[str, Any]] = None) -> str:
+                     meta: Optional[Dict[str, Any]] = None,
+                     workload: str = "") -> str:
     """Persist a tuned serve-engine knob config (the joint mode's winner).
 
     Keyed like a kernel entry — (``SERVE_SYSTEM``, model-shape signature,
     dtype, backend) — so serve knobs and kernel blocks live in one cache
-    file.  Returns the signature used.
+    file.  ``workload`` is the fingerprint signature the knobs were
+    tuned under (``repro.serve.workload.fingerprint_sig``); empty means
+    workload-generic, the offline mode's entry.  Returns the shape
+    signature used.
     """
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
     cache = cache or default_cache()
     cache.put(SERVE_SYSTEM, sig, dtype, backend or backend_name(),
-              dict(config), value, meta=meta)
+              dict(config), value, meta=meta, workload=workload)
     return sig
 
 
 def cached_serve_config(sig_dims: Dict[str, int], dtype: str,
                         cache: Optional[AutotuneCache] = None,
-                        backend: Optional[str] = None
+                        backend: Optional[str] = None,
+                        workload: str = ""
                         ) -> Optional[Dict[str, Any]]:
-    """The tuned serve-engine knobs for this model shape, or None."""
+    """The tuned serve-engine knobs for this model shape (at this exact
+    workload signature; generic when omitted), or None."""
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
     cache = cache or default_cache()
     return cache.get_config(SERVE_SYSTEM, sig, dtype,
-                            backend or backend_name())
+                            backend or backend_name(), workload=workload)
+
+
+def serve_config_candidates(sig_dims: Dict[str, int], dtype: str,
+                            cache: Optional[AutotuneCache] = None,
+                            backend: Optional[str] = None
+                            ) -> Dict[str, Dict[str, Any]]:
+    """Every cached serve winner at this model shape, keyed by workload
+    signature (``-`` = generic) — the nearest-signature transfer set."""
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = cache or default_cache()
+    return cache.scan_workloads(SERVE_SYSTEM, sig, dtype,
+                                backend or backend_name())
 
 
 def put_train_config(sig_dims: Dict[str, int], dtype: str,

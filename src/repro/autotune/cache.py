@@ -39,10 +39,13 @@ __all__ = ["AutotuneCache", "SCHEMA_VERSION", "default_cache",
 # Bump whenever the key schema changes meaning.  v2: flash_attention
 # signatures gained the SK (KV sequence length) dim — v1 entries were keyed
 # without it, so cross-attention / cache-prefill problems with different KV
-# lengths collided on one entry.  Keys carry the version, so stale entries
-# can never be resolved; ``_load`` additionally drops them from the
-# in-memory view and the next write rewrites the file without them.
-SCHEMA_VERSION = 2
+# lengths collided on one entry.  v3: every key gained a trailing
+# workload-signature component (``-`` = workload-generic) so serve winners
+# tuned under different live request mixes coexist; v2 entries carry the
+# same meaning at the generic signature, so ``_load``/``_save`` MIGRATE
+# them (rewritten under ``v3|...|-``) instead of dropping them — only
+# pre-v2 keys remain unresolvable and disappear on the next write.
+SCHEMA_VERSION = 3
 
 
 def _default_path() -> str:
@@ -63,24 +66,66 @@ class AutotuneCache:
 
     # ------------------------------------------------------------------
     @staticmethod
-    def key(kernel: str, sig: str, dtype: str, backend: str) -> str:
-        return f"v{SCHEMA_VERSION}|{kernel}|{sig}|{dtype}|{backend}"
+    def key(kernel: str, sig: str, dtype: str, backend: str,
+            workload: str = "") -> str:
+        """The canonical cache key.  Every component is coerced through
+        ``str`` and the workload signature is ``|``-sanitized, so keys
+        serialize identically from every producer — a formatting mismatch
+        here is a silent cache miss (and, since v3, one the
+        nearest-signature fallback would quietly paper over).
+        ``workload`` defaults to ``-``: the workload-generic entry
+        offline tuning writes and migrated v2 entries land on."""
+        w = str(workload or "-").replace("|", "/")
+        return (f"v{SCHEMA_VERSION}|{kernel}|{sig}|{str(dtype)}"
+                f"|{str(backend)}|{w}")
 
     @staticmethod
-    def _stale(key: str) -> bool:
-        """True for keys from an OLDER schema (unversioned v1 included).
+    def _upgrade(key: str) -> Optional[str]:
+        """The current-schema key a stored key maps to, or None.
 
-        Newer-schema keys are preserved: a shared cache file touched by
-        binaries of different versions must not lose the newer entries
-        (they are inert here — lookups only ever use the current prefix).
+        Identity for current and NEWER schemas (a shared cache file
+        touched by binaries of different versions must not lose the
+        newer entries — they are inert here, lookups only ever use the
+        current prefix).  v2 keys migrate to v3 under the generic ``-``
+        workload signature (same meaning, new shape).  Anything older
+        (unversioned v1 included) is unresolvable: None.
         """
         head = key.split("|", 1)[0]
         if not head.startswith("v"):
-            return True  # v1 keys carried no version
+            return None  # v1 keys carried no version
         try:
-            return int(head[1:]) < SCHEMA_VERSION
+            version = int(head[1:])
         except ValueError:
-            return True
+            return None
+        if version >= SCHEMA_VERSION:
+            return key
+        if version == 2:
+            parts = key.split("|")
+            if len(parts) == 5:  # v2|kernel|sig|dtype|backend
+                return "|".join([f"v{SCHEMA_VERSION}"] + parts[1:] + ["-"])
+        return None
+
+    @classmethod
+    def _stale(cls, key: str) -> bool:
+        """True for keys that neither resolve nor migrate (pre-v2)."""
+        return cls._upgrade(key) is None
+
+    @classmethod
+    def _migrate(cls, raw: Dict[str, Any]) -> Dict[str, Any]:
+        """Raw file contents -> current-schema view: stale keys drop,
+        v2 keys are rewritten in place (the migration), and a native
+        current-schema key always wins over a migrated one (second pass
+        overwrites), so re-tuned entries are never shadowed by their
+        pre-migration ancestors."""
+        out: Dict[str, Any] = {}
+        for k, v in raw.items():
+            nk = cls._upgrade(k)
+            if nk is not None and nk != k:
+                out[nk] = v
+        for k, v in raw.items():
+            if cls._upgrade(k) == k:
+                out[k] = v
+        return out
 
     def _load(self) -> Dict[str, Any]:
         if self._data is None:
@@ -89,10 +134,10 @@ class AutotuneCache:
                     raw = json.load(f)
             except (FileNotFoundError, json.JSONDecodeError):
                 raw = {}
-            # Invalidate entries from older key schemas: they drop here
-            # and physically disappear from the file on the next _save.
-            self._data = {k: v for k, v in raw.items()
-                          if not self._stale(k)}
+            # Migrate/invalidate entries from older key schemas: v2
+            # entries re-key to the current schema here (and physically
+            # on the next _save); pre-v2 entries drop.
+            self._data = self._migrate(raw)
         return self._data
 
     def reload(self) -> None:
@@ -101,23 +146,37 @@ class AutotuneCache:
             self._data = None
 
     # ------------------------------------------------------------------
-    def get(self, kernel: str, sig: str, dtype: str,
-            backend: str) -> Optional[Dict[str, Any]]:
+    def get(self, kernel: str, sig: str, dtype: str, backend: str,
+            workload: str = "") -> Optional[Dict[str, Any]]:
         """The cached entry ({config, value, ...}) or None."""
         with self._lock:
-            entry = self._load().get(self.key(kernel, sig, dtype, backend))
+            entry = self._load().get(self.key(kernel, sig, dtype, backend,
+                                              workload))
         return dict(entry) if entry else None
 
-    def get_config(self, kernel: str, sig: str, dtype: str,
-                   backend: str) -> Optional[Dict[str, Any]]:
-        entry = self.get(kernel, sig, dtype, backend)
+    def get_config(self, kernel: str, sig: str, dtype: str, backend: str,
+                   workload: str = "") -> Optional[Dict[str, Any]]:
+        entry = self.get(kernel, sig, dtype, backend, workload)
         return dict(entry["config"]) if entry else None
+
+    def scan_workloads(self, kernel: str, sig: str, dtype: str,
+                       backend: str) -> Dict[str, Dict[str, Any]]:
+        """Every entry at this (kernel, shape, dtype, backend), keyed by
+        its workload-signature component (``-`` = workload-generic) —
+        the candidate set the online retuner's nearest-signature
+        transfer searches."""
+        prefix = self.key(kernel, sig, dtype, backend, "\0")[:-1]
+        with self._lock:
+            data = self._load()
+            return {k[len(prefix):]: dict(v) for k, v in data.items()
+                    if k.startswith(prefix)}
 
     def put(self, kernel: str, sig: str, dtype: str, backend: str,
             config: Dict[str, Any], value: float,
-            meta: Optional[Dict[str, Any]] = None) -> None:
+            meta: Optional[Dict[str, Any]] = None,
+            workload: str = "") -> None:
         with self._lock:
-            key = self.key(kernel, sig, dtype, backend)
+            key = self.key(kernel, sig, dtype, backend, workload)
             entry = {
                 "config": dict(config),
                 "value": float(value),
@@ -167,9 +226,10 @@ class AutotuneCache:
         (the classic lost update) or revert keys it re-tuned to our stale
         values.  Under the cross-process file lock the file is re-read and
         only the delta overlaid: our modified keys win, every other key
-        keeps whatever the file now holds, older-schema keys stay dropped,
-        and the in-memory view is refreshed to the merged state so
-        subsequent gets observe the file's reality.
+        keeps whatever the file now holds, older-schema keys migrate
+        (v2) or stay dropped (pre-v2), and the in-memory view is
+        refreshed to the merged state so subsequent gets observe the
+        file's reality.
         """
         with self._file_lock():
             try:
@@ -177,7 +237,7 @@ class AutotuneCache:
                     disk = json.load(f)
             except (FileNotFoundError, json.JSONDecodeError):
                 disk = {}
-            merged = {k: v for k, v in disk.items() if not self._stale(k)}
+            merged = self._migrate(disk)
             merged.update(delta)
             self._data = merged
             d = os.path.dirname(self.path)

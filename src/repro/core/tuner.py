@@ -248,6 +248,17 @@ class Tuner:
     the SUT's ``feasibility_model`` attribute; ``False`` disables pruning
     outright.  The default configuration is still tested unconditionally —
     the ACTS contract anchors on the given config, feasible or not.
+
+    ``warm_start`` seeds the run with prior winners (transfer from a
+    related tuning context — another workload signature, an earlier
+    deployment): each seed is tested right after the default, before any
+    sampling, and joins the history as an ordinary ``"warm"`` trial — so
+    the "best tested config" contract returns a seed that still holds up
+    even when the budget leaves no room for search, and the optimizer's
+    budget share shrinks by exactly the seeds' test cost.  Seeds must
+    validate in ``space`` (snap out-of-space transfers first — see
+    ``repro.serve.workload.coerce_config``); statically infeasible seeds
+    are skipped uncharged.
     """
 
     def __init__(
@@ -263,6 +274,7 @@ class Tuner:
         verbose: bool = False,
         batch: Optional[bool] = None,
         feasibility: Any = None,
+        warm_start: Optional[Sequence[Config]] = None,
     ):
         if budget < 1:
             raise ValueError("budget (resource limit) must be >= 1")
@@ -283,6 +295,7 @@ class Tuner:
         self.seed = seed
         self.optimizer_kwargs = dict(optimizer_kwargs or {})
         self.verbose = verbose
+        self.warm_start = [dict(c) for c in (warm_start or [])]
         if batch is None:
             batch = callable(getattr(sut, "test_batch", None))
         self.batch = bool(batch)
@@ -370,6 +383,24 @@ class Tuner:
             Trial(default_cfg, default_metric.objective(), self._n_tests, "default",
                   metrics=dict(default_metric.metrics))
         )
+
+        # 1b. Warm-start round: transfer seeds are tested before any
+        # sampling and join the history like ordinary trials.  Duplicate
+        # seeds (and seeds equal to the default) are cache hits — free;
+        # statically infeasible seeds are skipped uncharged; a short
+        # _test_many prefix means the budget ran out mid-round.  The rng
+        # is untouched, so seeding never perturbs the sampled sequence
+        # beyond the budget it consumes.
+        if self.warm_start:
+            seeds = []
+            for cfg in self.warm_start:
+                self.space.validate(cfg)
+                if self.feasibility is None or self.feasibility(cfg):
+                    seeds.append(cfg)
+            for cfg, metric in zip(seeds, self._test_many(seeds)):
+                history.append(
+                    Trial(cfg, metric.objective(), self._n_tests, "warm",
+                          metrics=dict(metric.metrics)))
 
         # 2. Initial LHS round (§4.3): coverage at any budget.
         n_init = min(

@@ -50,6 +50,21 @@ RUNTIMES = ("continuous", "wave")
 KV_LAYOUTS = ("dense", "paged")
 
 
+def _tail_history(prompt: Sequence[int], out: List[int],
+                  window: int) -> List[int]:
+    """The trailing ``window`` tokens of prompt+generated WITHOUT
+    materialising the full concatenation — the list build itself was the
+    other O(T) term in the per-step drafting cost (``list(prompt) +
+    out`` every decode step).  ``window <= 0`` keeps the historical
+    unbounded behaviour."""
+    if window <= 0:
+        return list(prompt) + out
+    if window <= len(out):
+        return out[-window:]
+    head = list(prompt[-(window - len(out)):]) if len(prompt) else []
+    return head + out
+
+
 @dataclass
 class ServeConfig:
     max_seq: int = 2048
@@ -124,6 +139,34 @@ class ServeConfig:
     # same (rid, token-index) sampling keys, so generated tokens stay
     # bit-identical at any draft_len; only the dispatch count drops.
     draft_len: int = 0
+    # n-gram draft lookback bound: only the trailing draft_window tokens
+    # of prompt+generated are scanned per draft, so host-side drafting
+    # cost stays flat in generation length (it used to rescan the whole
+    # history — O(T^2) over a generation).  Tokens never depend on it:
+    # a truncated match only changes WHAT gets drafted, and verification
+    # accepts exactly what single-token decode would have sampled.
+    draft_window: int = 256
+    # Effective admission cap <= batch_slots (None = all slots).  The
+    # online retuner's max_batch knob acts here: physical slot/dispatch
+    # shapes are compiled once, so capping ADMISSION is how max_batch
+    # swaps mid-run without draining or recompiling the engine.
+    slot_cap: Optional[int] = None
+    # Online workload-aware retuning (continuous runtime): fingerprint
+    # the live request window (repro.serve.workload), detect drift from
+    # the signature the deployed knobs were tuned under, and warm-start
+    # a retune whose winner swaps into the running loop at the next step
+    # boundary.  All trigger arithmetic counts decode steps (never
+    # wall-clock), so the retune step is deterministic per trace.
+    retune: bool = False
+    retune_budget: int = 16       # SUT tests per retune
+    retune_threshold: float = 0.25  # fingerprint distance that triggers
+    retune_window: int = 16       # admissions the fingerprint averages
+    retune_cooldown: int = 32     # min decode steps between retunes
+    retune_check_every: int = 4   # shift-check cadence in decode steps
+    retune_min_requests: int = 6  # admissions before fingerprints count
+    # the workload signature (fingerprint_sig string) the deployed knobs
+    # were tuned under; None anchors on the first full window instead
+    tuned_signature: Optional[str] = None
     # Tune/load Pallas block configs for this engine's decode shapes before
     # serving (persisted in the repro.autotune cache, so the compile-time
     # cost is paid once per (shape, dtype, backend)).
@@ -149,6 +192,20 @@ class ServeConfig:
             raise ValueError("kv_page_block must be >= 1")
         if self.draft_len < 0:
             raise ValueError("draft_len must be >= 0")
+        if self.draft_window < 2:
+            raise ValueError("draft_window must be >= 2 (an n-gram draft "
+                             "needs at least a 1-token suffix + 1 earlier "
+                             "token to match against)")
+        if self.slot_cap is not None and not (
+                1 <= self.slot_cap <= self.batch_slots):
+            raise ValueError(f"slot_cap must be in [1, batch_slots="
+                             f"{self.batch_slots}]; got {self.slot_cap}")
+        for knob in ("retune_budget", "retune_window", "retune_cooldown",
+                     "retune_check_every", "retune_min_requests"):
+            if getattr(self, knob) < 1:
+                raise ValueError(f"{knob} must be >= 1")
+        if self.retune_threshold < 0:
+            raise ValueError("retune_threshold must be >= 0")
         paged = self.runtime == "continuous" and self.kv_layout == "paged"
         needed = self.batch_slots * self.max_seq
         # remember auto-sizing: the engine re-derives a full-residency pool
@@ -207,11 +264,25 @@ class GenerationResult:
     cow_splits: int = 0
     drafted: int = 0
     accepted: int = 0
+    # online retune events (cfg.retune): one dict per swap — {"step",
+    # "distance", "signature", "fingerprint", "config", "value",
+    # "n_tests", "warm_source", "spec_accept", "measured_accept",
+    # "applied": {knob: (old, new)}}
+    retunes: List[Dict[str, Any]] = field(default_factory=list)
 
     @property
     def acceptance_rate(self) -> float:
-        """Fraction of proposed draft tokens that verification accepted."""
-        return self.accepted / max(self.drafted, 1)
+        """Fraction of proposed draft tokens that verification accepted.
+
+        ``nan`` when nothing was drafted: "no speculation ran" and "every
+        draft was rejected" are different facts, and the old 0.0-for-both
+        answer poisoned any feedback loop that treated it as a measured
+        rate (the online retuner would have pinned ``spec_accept`` to 0
+        on runs that simply had ``draft_len=0``).  Consumers must guard
+        with ``math.isnan`` before feeding it anywhere numeric."""
+        if self.drafted == 0:
+            return float("nan")
+        return self.accepted / self.drafted
 
     @property
     def decode_tokens_per_sec(self) -> float:
@@ -375,6 +446,50 @@ class ServeEngine:
             "rmsnorm", {"ROWS": B * prompt_len, "D": mcfg.d_model})
         self.kernel_blocks["rmsnorm_decode"] = self._ensure(
             "rmsnorm", {"ROWS": B, "D": mcfg.d_model})
+
+    def _make_retuner(self):
+        """The online workload-aware retuner for this engine (cfg.retune).
+
+        The retuner optimises over the same ``serve_knob_space`` the
+        offline joint mode tunes — with ``kv_cache_pages`` frozen to the
+        pool actually allocated (the device pool is compiled; resizing it
+        mid-run would recompile) — and keys its cache entries by the
+        SAME shape signature ``launch/tune.py`` uses, so online winners
+        and offline joint-tune winners transfer both ways through
+        nearest-signature lookup."""
+        from .space import CotuneParams, serve_knob_space
+        from .workload import OnlineRetuner
+
+        cfg, mcfg = self.cfg, self.model.cfg
+        B = cfg.batch_slots
+        base_params = CotuneParams.from_model(mcfg, max_seq=cfg.max_seq)
+        # clamp the allocated pool into the knob's range (the space uses
+        # the same page_per_seq arithmetic as serve_knob_space) so the
+        # frozen value always validates
+        lo = max(1, cfg.max_seq // PAGE_TOKENS)
+        pages = min(max(cfg.kv_cache_pages, lo), B * lo)
+        space = serve_knob_space(cfg.max_seq, max_slots=B).freeze(
+            {"kv_cache_pages": pages})
+        active = {
+            "max_batch": min(cfg.slot_cap or B, B),
+            "prefill_chunk": cfg.prefill_chunk,
+            "kv_cache_pages": pages,
+            "schedule": cfg.schedule,
+            "page_policy": cfg.page_policy,
+            "share_prefix": int(bool(cfg.share_prefix)),
+            "draft_len": cfg.draft_len,
+        }
+        # the exact dims launch/tune.py keys serve winners under
+        sig_dims = {"S": cfg.max_seq, "H": mcfg.padded_heads,
+                    "KV": mcfg.n_kv_heads, "D": mcfg.head_dim_}
+        return OnlineRetuner(
+            space, base_params, baseline=cfg.tuned_signature,
+            budget=cfg.retune_budget, threshold=cfg.retune_threshold,
+            min_requests=cfg.retune_min_requests,
+            cooldown=cfg.retune_cooldown,
+            check_every=cfg.retune_check_every, seed=cfg.seed,
+            active_config=active, sig_dims=sig_dims,
+            dtype=mcfg.compute_dtype)
 
     # ------------------------------------------------------------------
     def generate(
@@ -593,13 +708,23 @@ class ServeEngine:
             lambda l: l.at[:, dst].set(l[:, src]), blocks)
 
     @staticmethod
-    def _ngram_draft(history: List[int], k: int, max_n: int = 3) -> List[int]:
+    def _ngram_draft(history: List[int], k: int, max_n: int = 3,
+                     window: int = 0) -> List[int]:
         """Self-drafted continuation: find the most recent earlier
         occurrence of the longest (<= max_n) suffix of ``history`` and
         propose the <= k tokens that followed it.  Pure host-side
         heuristic — a wrong draft costs wasted verify columns, never
         correctness (verification accepts exactly what single-token
-        decode would have produced)."""
+        decode would have produced).
+
+        ``window`` bounds the lookback to the trailing ``window`` tokens
+        (0 = unbounded).  The unbounded scan was O(len(history)) per
+        decode step — O(T^2) over a generation, a real host-side drag on
+        long generations.  Generated tokens can NOT depend on the bound:
+        drafts only ever change which verify columns are issued, and
+        acceptance compares against what single-token decode samples."""
+        if window and len(history) > window:
+            history = history[-window:]
         L = len(history)
         if k <= 0 or L < 2:
             return []
@@ -649,10 +774,29 @@ class ServeEngine:
             alloc = PageAllocator(self.pool_groups * self.group_pages,
                                   PAGE_TOKENS, self.group_pages)
             page_tables = np.zeros((B, self.max_groups), np.int32)
-            if cfg.share_prefix:
+            # with retuning the registry is kept warm even while sharing
+            # is off, so a mid-run swap to share_prefix=1 has resident
+            # prompts to match against (matching itself is gated on the
+            # live cfg.share_prefix in shared_match)
+            if cfg.share_prefix or cfg.retune:
                 prefix = PrefixIndex(alloc)
-        on_demand = alloc is not None and sched.on_demand
+        # on_demand reservations persist after a mid-run swap back to
+        # "reserve": live prompt-only reservations still need the decode
+        # extend path until they drain, so the latch only ever sets
+        ever_on_demand = alloc is not None and sched.on_demand
         cache = self._init_continuous_cache()
+        # admission cap (the retuner's max_batch knob): only slots below
+        # the cap admit, so physical dispatch shapes never change
+        slot_cap = min(cfg.slot_cap or B, B)
+        window = retuner = None
+        retunes: List[Dict[str, Any]] = []
+        seen_rids: set = set()
+        if cfg.retune:
+            from .workload import WorkloadWindow
+
+            window = WorkloadWindow(capacity=cfg.retune_window)
+            retuner = self._make_retuner()
+        self.last_retuner = retuner
 
         # host-side slot state
         slot_req: List[Optional[Request]] = [None] * B
@@ -767,8 +911,11 @@ class ServeEngine:
         def admit_tokens(r: Request) -> int:
             """The admission reservation: worst-case prompt+max_new under
             ``reserve``, the actual prefill footprint under ``on_demand``
-            (decode extends group-by-group from there)."""
-            return r.resident_tokens if on_demand else r.total_tokens
+            (decode extends group-by-group from there).  Reads the LIVE
+            policy — a retune swap changes what new admissions reserve."""
+            if alloc is not None and sched.on_demand:
+                return r.resident_tokens
+            return r.total_tokens
 
         def shared_match(r: Request):
             """``(gids, covered, cow)`` the registry offers ``r``: live
@@ -777,8 +924,12 @@ class ServeEngine:
             footprint so at least one suffix token always runs through
             prefill (its logits seed sampling).  ``cow`` is set when the
             suffix's first write lands *inside* the last shared group —
-            that group must be split before admission completes."""
-            if prefix is None or r.frontend_embeds is not None:
+            that group must be split before admission completes.  Gated
+            on the LIVE ``cfg.share_prefix`` (a retune knob): with
+            sharing off the registry still registers (cheap, keeps it
+            warm for a swap) but never matches."""
+            if (prefix is None or not cfg.share_prefix
+                    or r.frontend_embeds is not None):
                 return [], 0, False
             toks = list(r.prompt) + list(r.generated)
             gids, covered = prefix.match(toks)
@@ -896,18 +1047,68 @@ class ServeEngine:
                 base_keys = base_keys.at[b].set(
                     self._base_key(slot_req[b].rid))
 
+        def apply_knobs(knob_cfg: Dict[str, Any]) -> Dict[str, Any]:
+            """Swap a retuned winner into the running loop at this step
+            boundary — no drain, no recompile of live dispatch shapes
+            (``max_batch`` caps ADMISSION; the physical slot count is
+            compiled; a new ``draft_len`` only keys a different verify
+            grid width, which jit caches per shape).  Tokens cannot
+            change: sampling keys on (rid, token-index) only, and every
+            knob here is token-parity-invariant by construction.
+            Returns {knob: (old, new)} for the knobs that moved."""
+            nonlocal slot_cap, ever_on_demand
+            applied: Dict[str, Any] = {}
+            new_cap = min(int(knob_cfg["max_batch"]), B)
+            if new_cap != slot_cap:
+                applied["max_batch"] = (slot_cap, new_cap)
+                slot_cap = new_cap
+            new_sched = str(knob_cfg["schedule"])
+            if new_sched != cfg.schedule:
+                applied["schedule"] = (cfg.schedule, new_sched)
+                sched.set_policy(new_sched)  # re-sorts pending
+                cfg.schedule = new_sched
+            new_pp = str(knob_cfg.get("page_policy", cfg.page_policy))
+            if alloc is not None and new_pp != cfg.page_policy:
+                applied["page_policy"] = (cfg.page_policy, new_pp)
+                sched.set_page_policy(new_pp)
+                cfg.page_policy = new_pp
+                if new_pp == "on_demand":
+                    ever_on_demand = True
+            new_chunk = int(knob_cfg["prefill_chunk"])
+            if new_chunk != cfg.prefill_chunk:
+                applied["prefill_chunk"] = (cfg.prefill_chunk, new_chunk)
+                cfg.prefill_chunk = new_chunk
+            new_draft = int(knob_cfg.get("draft_len", cfg.draft_len))
+            if new_draft != cfg.draft_len:
+                applied["draft_len"] = (cfg.draft_len, new_draft)
+                cfg.draft_len = new_draft
+            new_share = bool(int(knob_cfg.get(
+                "share_prefix", int(cfg.share_prefix))))
+            if alloc is not None and new_share != cfg.share_prefix:
+                applied["share_prefix"] = (cfg.share_prefix, new_share)
+                cfg.share_prefix = new_share
+            return applied
+
         def loop() -> None:
             nonlocal cache, decode_s, steps, shared_total, drafted, accepted
             while sched.has_pending or any(r is not None for r in slot_req):
                 progressed = False
-                # 1. admission into freed slots, in policy order
+                # 1. admission into freed slots, in policy order; only
+                # slots below slot_cap admit (the max_batch knob — slots
+                # at/above a lowered cap simply drain and stay empty)
                 for b in range(B):
+                    if b >= slot_cap:
+                        continue
                     if slot_req[b] is not None or not sched.has_pending:
                         continue
                     admitted = next_admission()
                     if admitted is None:
                         break  # pool full: wait for a release
                     head, groups, covered = admitted
+                    if window is not None and head.rid not in seen_rids:
+                        seen_rids.add(head.rid)  # re-admissions don't
+                        window.record_request(steps, head.prompt,
+                                              head.max_new)
                     if groups is not None:
                         page_tables[b, :] = PageAllocator.SCRATCH_GROUP
                         page_tables[b, :len(groups)] = groups
@@ -938,12 +1139,20 @@ class ServeEngine:
                     if not sched.interleave_prefill:
                         while slot_chunks[b] and slot_req[b] is not None:
                             run_chunk(b)
-                # 2. interleave: one prefill chunk per prefilling slot
-                if sched.interleave_prefill:
-                    for b in range(B):
-                        if slot_req[b] is not None and slot_chunks[b]:
+                # 2. pending prefill chunks: one per slot per step under
+                # interleave, drained back-to-back otherwise (the drain
+                # arm is only reachable after a retune swaps the policy
+                # AWAY from interleave mid-prefill — admission drains
+                # non-interleave slots inline above)
+                for b in range(B):
+                    if slot_req[b] is None or not slot_chunks[b]:
+                        continue
+                    if sched.interleave_prefill:
+                        run_chunk(b)
+                    else:
+                        while slot_chunks[b] and slot_req[b] is not None:
                             run_chunk(b)
-                            progressed = True
+                    progressed = True
                 # 3. one batched decode step over every decoding slot —
                 # with speculation, draft_len extra n-gram columns ride
                 # the same dispatch and the longest sample-matching draft
@@ -960,11 +1169,13 @@ class ServeEngine:
                         # never draft past the generation budget: tokens
                         # beyond max_new could not be accepted anyway
                         room = r.max_new - len(slot_out[b]) - 1
-                        d = self._ngram_draft(list(r.prompt) + slot_out[b],
-                                              min(cfg.draft_len, room))
+                        d = self._ngram_draft(
+                            _tail_history(r.prompt, slot_out[b],
+                                          cfg.draft_window),
+                            min(cfg.draft_len, room))
                         if d:
                             drafts[b] = d
-                if on_demand:
+                if ever_on_demand:
                     for b in active:
                         if slot_req[b] is None:
                             continue  # preempted as a victim this pass
@@ -1003,6 +1214,7 @@ class ServeEngine:
                     for b in active:
                         d = drafts.get(b, [])
                         drafted += len(d)
+                        acc_b = 0
                         # column 0 is the ordinary sampled token (always
                         # accepted); column i+1's logits are valid only
                         # if fed draft token d[i] matched the token
@@ -1015,10 +1227,13 @@ class ServeEngine:
                             accept_token(b, tok)
                             if i > 0:
                                 accepted += 1
+                                acc_b += 1
                             if slot_req[b] is None:
                                 break  # finished mid-chain
                             if i >= len(d) or tok != d[i]:
                                 break
+                        if window is not None and d:
+                            window.record_draft(len(d), acc_b)
                 elif active:
                     t = time.time()
                     logits, new_cache = self._decode_multi(
@@ -1039,7 +1254,31 @@ class ServeEngine:
                     for b in active:
                         lengths[b] += 1  # the fed token is now resident
                         first_tok_t.setdefault(slot_req[b].rid, time.time())
-                        accept_token(b, int(toks[b]))
+                        tok = int(toks[b])
+                        if window is not None:
+                            # shadow probe: what WOULD 1-token n-gram
+                            # drafting have proposed, and would it have
+                            # been accepted?  Feeds a measured
+                            # acceptance rate even while draft_len=0,
+                            # so the retuner can justify switching
+                            # speculation ON — without it the loop
+                            # could only ever turn it off.
+                            pred = self._ngram_draft(
+                                _tail_history(slot_req[b].prompt,
+                                              slot_out[b],
+                                              cfg.draft_window), 1)
+                            if pred:
+                                window.record_draft(
+                                    1, 1 if pred[0] == tok else 0)
+                        accept_token(b, tok)
+                if window is not None:
+                    window.record_depth(
+                        sched.queue_depth
+                        + sum(1 for r in slot_req if r is not None))
+                    hit = retuner.maybe_retune(window, steps)
+                    if hit is not None:
+                        hit["applied"] = apply_knobs(hit["config"])
+                        retunes.append(hit)
                 if not progressed:  # defensive: cannot happen (paging.py)
                     raise RuntimeError(
                         "continuous scheduler stalled: pending requests "
@@ -1063,7 +1302,8 @@ class ServeEngine:
             [list(t) for t in results], prefill_s, decode_s, steps,
             chunks_issued, [dict(r) for r in per_request],
             preemptions=preemptions, shared_prefix_tokens=shared_total,
-            cow_splits=cow_splits, drafted=drafted, accepted=accepted)
+            cow_splits=cow_splits, drafted=drafted, accepted=accepted,
+            retunes=retunes)
 
     def _sample_slot(self, logits, rid: int, produced: int):
         """Sample ONE request's next token from (1, S, V) logits, keyed by

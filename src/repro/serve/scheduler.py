@@ -135,6 +135,34 @@ class SlotScheduler:
         engine grows (and, under pressure, preempts) at decode time."""
         return self.page_policy == "on_demand"
 
+    def set_policy(self, policy: str) -> None:
+        """Swap the admission policy mid-run (the online retuner's
+        ``schedule`` knob): the pending queue re-sorts to the new order;
+        resubmitted requests keep their head-of-line priority and
+        ``arrival`` stamps are untouched, so fifo fairness and sjf
+        tie-breaks stay stable across the swap."""
+        if policy not in SCHEDULES:
+            raise ValueError(f"unknown schedule {policy!r}; "
+                             f"have {SCHEDULES}")
+        self.policy = policy
+        self._pending = admission_order(policy, self._pending)
+
+    def set_page_policy(self, policy: str) -> None:
+        """Swap the reservation policy mid-run: only NEW admissions
+        change meaning; live reservations keep their size (the engine's
+        extend path grows any prompt-only ones as decode crosses group
+        boundaries, a no-op for fully-reserved requests)."""
+        if policy not in PAGE_POLICIES:
+            raise ValueError(f"unknown page_policy {policy!r}; "
+                             f"have {PAGE_POLICIES}")
+        self.page_policy = policy
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (pending + preempted re-queued) —
+        the demand signal the workload fingerprint's depth averages."""
+        return len(self._resubmitted) + len(self._pending)
+
     def submit(self, requests: Sequence[Request]) -> None:
         for r in requests:
             if r.arrival < 0:  # first submission only: a re-submitted

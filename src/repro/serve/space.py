@@ -57,6 +57,7 @@ __all__ = [
     "apply_serve_knobs",
     "kv_floor_raise_count",
     "CotuneParams",
+    "params_for_fingerprint",
     "coupled_serve_metrics",
     "ServeSurrogate",
     "ServeKernelCoupling",
@@ -269,6 +270,32 @@ class CotuneParams:
 
     def kernel_space(self) -> ParameterSpace:
         return KERNELS["decode_attention"].make_space()
+
+
+def params_for_fingerprint(fp: Any, base: CotuneParams) -> CotuneParams:
+    """Measured workload feedback -> surrogate params.
+
+    ``fp`` is a ``repro.serve.workload.WorkloadFingerprint`` (duck-typed
+    so this module stays importable without it): the live window's
+    MEASURED acceptance rate replaces the ``spec_accept`` constant and
+    the measured prefix-share fraction replaces ``prefix_share_frac`` —
+    the two terms that were previously assumptions the engine never
+    corrected.  ``nan`` acceptance (no draft or probe data yet) keeps the
+    prior: absence of evidence must not collapse speculation's term to
+    zero.  The length/demand fields re-center the workload shape the
+    schedule and paging terms are derived from.
+    """
+    kw: Dict[str, Any] = {
+        "prompt_len": max(1, int(round(fp.prompt_mean))),
+        "gen_len": max(1, int(round(fp.gen_mean))),
+        "prompt_spread": float(min(max(fp.prompt_spread, 0.0), 1.0)),
+        "n_requests": max(1, int(round(fp.depth))),
+    }
+    if math.isfinite(fp.share_frac):
+        kw["prefix_share_frac"] = float(min(max(fp.share_frac, 0.0), 0.95))
+    if math.isfinite(fp.accept_rate):
+        kw["spec_accept"] = float(min(max(fp.accept_rate, 0.0), 0.99))
+    return replace(base, **kw)
 
 
 def _attn_step_seconds(kernel_cfg: Config, batch: int,

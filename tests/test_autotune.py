@@ -511,3 +511,167 @@ class TestServeConfigCache:
             sig_dims, "float32"))
         assert cfg2.share_prefix is True and cfg2.draft_len == 4
         assert cfg2.page_policy == "on_demand"
+
+
+class TestWorkloadKeyedEntries:
+    """(PR 8) v3 keys carry a trailing workload-signature component, so
+    serve winners tuned under different live request mixes coexist at one
+    model shape — the online retuner's transfer set."""
+
+    SIG_DIMS = {"S": 48, "H": 4, "KV": 2, "D": 16}
+    WS = "a0.50_d12_g8_p24_r0.35_s0.30_x0.60"
+
+    def test_workload_and_generic_entries_coexist(self, tmp_cache):
+        autotune.put_serve_config(self.SIG_DIMS, "float32",
+                                  {"max_batch": 4}, 100.0)
+        autotune.put_serve_config(self.SIG_DIMS, "float32",
+                                  {"max_batch": 8}, 200.0,
+                                  workload=self.WS)
+        generic = autotune.cached_serve_config(self.SIG_DIMS, "float32")
+        at_ws = autotune.cached_serve_config(self.SIG_DIMS, "float32",
+                                             workload=self.WS)
+        assert generic == {"max_batch": 4}
+        assert at_ws == {"max_batch": 8}
+        # an unknown signature is an exact-key miss (transfer is the
+        # caller's job, via serve_config_candidates)
+        assert autotune.cached_serve_config(
+            self.SIG_DIMS, "float32", workload="a9.99_d1_g1_p1_r0_s0_x0"
+        ) is None
+
+    def test_candidates_scan_by_signature(self, tmp_cache):
+        autotune.put_serve_config(self.SIG_DIMS, "float32",
+                                  {"max_batch": 4}, 100.0)
+        autotune.put_serve_config(self.SIG_DIMS, "float32",
+                                  {"max_batch": 8}, 200.0,
+                                  workload=self.WS)
+        # a different shape must not leak into the candidate set
+        autotune.put_serve_config(dict(self.SIG_DIMS, S=96), "float32",
+                                  {"max_batch": 2}, 50.0, workload=self.WS)
+        cands = autotune.serve_config_candidates(self.SIG_DIMS, "float32")
+        assert set(cands) == {"-", self.WS}
+        assert cands[self.WS]["config"] == {"max_batch": 8}
+        assert cands["-"]["config"] == {"max_batch": 4}
+
+    def test_workload_component_is_sanitized(self, tmp_cache):
+        """A ``|`` inside a workload string must not corrupt the key
+        layout (it is the key separator)."""
+        cache = autotune.default_cache()
+        cache.put("k", "s", "float32", "cpu", {"a": 1}, 1.0,
+                  workload="bad|sig")
+        assert cache.get("k", "s", "float32", "cpu",
+                         workload="bad|sig")["config"] == {"a": 1}
+        on_disk = json.load(open(os.environ["REPRO_AUTOTUNE_CACHE"]))
+        assert all(len(k.split("|")) == 6 for k in on_disk)
+        assert set(cache.scan_workloads("k", "s", "float32", "cpu")) == \
+            {"bad/sig"}
+
+
+class TestCacheKeyCanonicalization:
+    """(PR 8 satellite) Every producer must serialize the identical key
+    from equivalent inputs: numpy integer dims, python ints, and the
+    three entry kinds (kernel / serve / train) all round-trip through one
+    canonical form — a formatting mismatch is a silent cache miss."""
+
+    def test_numpy_dims_key_like_python_ints(self, tmp_cache):
+        np_dims = {"S": np.int64(48), "H": np.int32(4),
+                   "KV": np.int64(2), "D": np.int32(16)}
+        py_dims = {"S": 48, "H": 4, "KV": 2, "D": 16}
+        autotune.put_serve_config(np_dims, "float32", {"max_batch": 4},
+                                  1.0)
+        assert autotune.cached_serve_config(py_dims, "float32") == \
+            {"max_batch": 4}
+        autotune.put_train_config(dict(py_dims, B=np.int64(8)), "float32",
+                                  {"microbatches": 2}, 1.0)
+        assert autotune.cached_train_config(dict(py_dims, B=8),
+                                            "float32") == \
+            {"microbatches": 2}
+
+    def test_all_three_entry_kinds_round_trip(self, tmp_cache):
+        """One file, three producers, one schema: every entry written
+        through its public producer reloads from a FRESH cache object
+        (true disk round-trip) under the current schema version."""
+        kernel_sig = shape_sig({"ROWS": 8, "D": 32})
+        autotune.default_cache().put("rmsnorm", kernel_sig, "float32",
+                                     "cpu", {"block_rows": 8}, 10.0)
+        autotune.put_serve_config({"S": 48, "H": 4, "KV": 2, "D": 16},
+                                  "float32", {"max_batch": 4}, 20.0,
+                                  workload="a0.50_d1_g1_p1_r0.00_s0.00_x?")
+        autotune.put_train_config({"S": 32, "B": 8, "H": 4, "KV": 4,
+                                   "D": 16}, "float32",
+                                  {"microbatches": 2}, 30.0)
+        fresh = AutotuneCache(os.environ["REPRO_AUTOTUNE_CACHE"])
+        assert fresh.get_config("rmsnorm", kernel_sig, "float32",
+                                "cpu") == {"block_rows": 8}
+        assert autotune.cached_serve_config(
+            {"S": 48, "H": 4, "KV": 2, "D": 16}, "float32",
+            workload="a0.50_d1_g1_p1_r0.00_s0.00_x?",
+            cache=fresh) == {"max_batch": 4}
+        assert autotune.cached_train_config(
+            {"S": 32, "B": 8, "H": 4, "KV": 4, "D": 16}, "float32",
+            cache=fresh) == {"microbatches": 2}
+        on_disk = json.load(open(os.environ["REPRO_AUTOTUNE_CACHE"]))
+        assert len(on_disk) == 3
+        for k in on_disk:
+            parts = k.split("|")
+            assert parts[0] == f"v{autotune.SCHEMA_VERSION}"
+            assert len(parts) == 6  # workload component on EVERY key
+
+    def test_key_is_pure_string_function(self):
+        assert AutotuneCache.key("k", "s", "float32", "cpu") == \
+            AutotuneCache.key("k", "s", "float32", "cpu", workload="")
+        assert AutotuneCache.key("k", "s", "float32", "cpu").endswith("|-")
+
+
+class TestSchemaV2Migration:
+    """(PR 8) The v3 bump MIGRATES v2 entries (same meaning, generic
+    workload signature) instead of dropping them — a pre-PR8 tuned cache
+    keeps its winners."""
+
+    V2_KEY = "v2|rmsnorm|D32_ROWS8|float32|cpu"
+
+    def _seed_v2(self, path):
+        with open(path, "w") as f:
+            json.dump({self.V2_KEY: {
+                "config": {"block_rows": 8}, "value": 42.0,
+                "meta": {"mode": "est"}, "time": 0.0}}, f)
+
+    def test_v2_entry_resolves_at_generic_workload(self, tmp_cache):
+        self._seed_v2(tmp_cache)
+        cache = AutotuneCache(tmp_cache)
+        got = cache.get("rmsnorm", "D32_ROWS8", "float32", "cpu")
+        assert got and got["config"] == {"block_rows": 8}
+        assert got["value"] == 42.0
+
+    def test_migration_becomes_physical_on_write(self, tmp_cache):
+        self._seed_v2(tmp_cache)
+        cache = AutotuneCache(tmp_cache)
+        cache.put("other", "sig", "float32", "cpu", {"a": 1}, 1.0)
+        on_disk = json.load(open(tmp_cache))
+        assert self.V2_KEY not in on_disk
+        migrated = f"v{autotune.SCHEMA_VERSION}|rmsnorm|D32_ROWS8" \
+                   "|float32|cpu|-"
+        assert on_disk[migrated]["config"] == {"block_rows": 8}
+
+    def test_native_v3_wins_over_migrated_v2(self, tmp_cache):
+        """A re-tuned (native current-schema) entry must never be
+        shadowed by its pre-migration ancestor sharing the file."""
+        native = AutotuneCache.key("rmsnorm", "D32_ROWS8", "float32",
+                                   "cpu")
+        with open(tmp_cache, "w") as f:
+            json.dump({
+                self.V2_KEY: {"config": {"block_rows": 8}, "value": 42.0,
+                              "meta": {}, "time": 0.0},
+                native: {"config": {"block_rows": 16}, "value": 99.0,
+                         "meta": {}, "time": 1.0},
+            }, f)
+        cache = AutotuneCache(tmp_cache)
+        assert cache.get_config("rmsnorm", "D32_ROWS8", "float32",
+                                "cpu") == {"block_rows": 16}
+
+    def test_pre_v2_still_drops(self, tmp_cache):
+        with open(tmp_cache, "w") as f:
+            json.dump({"rmsnorm|D32_ROWS8|float32|cpu": {
+                "config": {"block_rows": 8}, "value": 1.0, "meta": {},
+                "time": 0.0}}, f)
+        cache = AutotuneCache(tmp_cache)
+        assert cache.get("rmsnorm", "D32_ROWS8", "float32", "cpu") is None

@@ -195,3 +195,68 @@ class TestPaperCaseStudies:
         assert space.dim == db.space().dim + fe.space().dim
         metric = comp.test(space.default_config())
         assert metric.metrics["bottleneck_member"] in ("db", "fe")
+
+
+class TestWarmStart:
+    """(PR 8) ``warm_start`` seeds a run with prior winners — the online
+    retuner's transfer mechanism, but a general Tuner feature with its
+    own contract: seeds are tested as ordinary budgeted trials right
+    after the default, infeasible seeds are skipped uncharged, and
+    seeding never perturbs determinism beyond the budget it consumes."""
+
+    def _seed(self):
+        sut = MySQLSurrogate()
+        # a known-good config: the winner of a generously funded run
+        return sut, Tuner(sut.space(), sut, budget=40, seed=5).run()
+
+    def test_seeds_join_history_as_warm_trials(self):
+        sut, donor = self._seed()
+        rep = Tuner(sut.space(), sut, budget=6, seed=0,
+                    warm_start=[donor.best_config]).run()
+        phases = [t.phase for t in rep.history]
+        assert phases[0] == "default" and phases[1] == "warm"
+        assert rep.history[1].config == donor.best_config
+        assert rep.n_tests == 6  # seeds charge the same budget
+
+    def test_best_config_contract_includes_seeds(self):
+        """With no room to search, the best TESTED config is the seed
+        when the seed holds up — never an untested promise."""
+        sut, donor = self._seed()
+        rep = Tuner(sut.space(), sut, budget=2, seed=0,
+                    warm_start=[donor.best_config]).run()
+        assert rep.best_metric.objective() <= \
+            rep.history[0].value  # never worse than the default
+        assert rep.best_config == donor.best_config or \
+            rep.best_metric.objective() <= donor.best_metric.objective()
+
+    def test_warm_run_beats_cold_at_tiny_budget(self):
+        sut, donor = self._seed()
+        warm = Tuner(sut.space(), sut, budget=4, seed=0,
+                     warm_start=[donor.best_config]).run()
+        cold = Tuner(sut.space(), sut, budget=4, seed=0).run()
+        assert warm.best_metric.objective() <= cold.best_metric.objective()
+
+    def test_seeding_is_deterministic(self):
+        sut, donor = self._seed()
+        runs = [Tuner(sut.space(), sut, budget=10, seed=1,
+                      warm_start=[donor.best_config]).run()
+                for _ in range(2)]
+        assert [(tuple(sorted(t.config.items())), t.value)
+                for t in runs[0].history] == \
+            [(tuple(sorted(t.config.items())), t.value)
+             for t in runs[1].history]
+
+    def test_invalid_seed_raises(self):
+        sut = MySQLSurrogate()
+        with pytest.raises(ValueError):
+            Tuner(sut.space(), sut, budget=4,
+                  warm_start=[{"nonsense": 1}]).run()
+
+    def test_infeasible_seed_skipped_uncharged(self):
+        sut = MySQLSurrogate()
+        seed_cfg = sut.space().default_config()
+        rep = Tuner(sut.space(), sut, budget=5, seed=0,
+                    warm_start=[seed_cfg],
+                    feasibility=lambda c: c != seed_cfg).run()
+        assert all(t.phase != "warm" for t in rep.history)
+        assert rep.n_tests == 5  # the skipped seed burned nothing

@@ -1,0 +1,503 @@
+"""Online workload-aware retuning: fingerprints, shift detection, warm
+transfer, and the mid-stream knob swap.
+
+The contract under test (ROADMAP direction 2, PR 8):
+
+* the workload fingerprint is measured, deterministic and step-counted —
+  the same request trace produces the same fingerprint, signature and
+  retune trigger step, every run;
+* ``nearest_workload`` transfers cached winners across *similar* (not
+  just identical) workload signatures, and a warm-started retune is
+  never worse than a cold restart at the same test budget;
+* the engine's mid-run knob swap moves scheduling/batching/speculation
+  knobs only — generated tokens stay bit-identical across the swap
+  (sampling keys on (rid, token-index), nothing else);
+* ``GenerationResult.acceptance_rate`` distinguishes "no drafts ran"
+  (nan) from "every draft was rejected" (0.0) — the bugfix that lets
+  measured acceptance feed ``CotuneParams.spec_accept`` safely.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.tuner import Tuner
+from repro.serve.space import (CotuneParams, ServeSurrogate,
+                               params_for_fingerprint, serve_knob_space)
+from repro.serve.workload import (OnlineRetuner, WorkloadFingerprint,
+                                  WorkloadWindow, coerce_config,
+                                  fingerprint_distance, fingerprint_sig,
+                                  nearest_workload, parse_sig)
+
+FP = WorkloadFingerprint(arrival_rate=0.5, prompt_mean=24.0,
+                         prompt_spread=0.35, gen_mean=8.0, depth=12.0,
+                         share_frac=0.30, accept_rate=0.60)
+
+
+class TestSignature:
+    def test_round_trip(self):
+        assert fingerprint_distance(FP, parse_sig(fingerprint_sig(FP))) \
+            < 1e-9
+
+    def test_canonical_form(self):
+        assert fingerprint_sig(FP) == "a0.50_d12_g8_p24_r0.35_s0.30_x0.60"
+
+    def test_nan_acceptance_round_trips(self):
+        fp = WorkloadFingerprint(0.5, 24.0, 0.35, 8.0, 12.0, 0.30,
+                                 float("nan"))
+        sig = fingerprint_sig(fp)
+        assert sig.endswith("x?")
+        back = parse_sig(sig)
+        assert math.isnan(back.accept_rate)
+
+    @pytest.mark.parametrize("junk", ["-", "", "v3|serve|x", "a0.5",
+                                      "a0.50_d12_g8_p24_r0.35_s0.30",
+                                      "z1_y2_x3_w4_v5_u6_t7"])
+    def test_non_signatures_parse_to_none(self, junk):
+        assert parse_sig(junk) is None
+
+    def test_distance_identity_and_symmetry(self):
+        other = WorkloadFingerprint(1.0, 30.0, 0.10, 6.0, 4.0, 0.80, 0.20)
+        assert fingerprint_distance(FP, FP) == 0.0
+        assert fingerprint_distance(FP, other) == \
+            fingerprint_distance(other, FP)
+        assert fingerprint_distance(FP, other) > 0.0
+
+    def test_missing_acceptance_is_not_a_shift(self):
+        """nan on either side drops the acceptance component instead of
+        reading 'no draft data yet' as workload drift."""
+        nodata = WorkloadFingerprint(0.5, 24.0, 0.35, 8.0, 12.0, 0.30,
+                                     float("nan"))
+        assert fingerprint_distance(FP, nodata) == 0.0
+
+
+class TestNearestWorkload:
+    def _entry(self, tag):
+        return {"config": {"max_batch": 4}, "value": 1.0, "meta": {"t": tag}}
+
+    def test_nearest_parseable_wins(self):
+        near = fingerprint_sig(WorkloadFingerprint(
+            0.55, 24.0, 0.35, 8.0, 12.0, 0.30, 0.60))
+        far = fingerprint_sig(WorkloadFingerprint(
+            2.0, 4.0, 0.0, 30.0, 1.0, 0.0, 0.0))
+        cands = {near: self._entry("near"), far: self._entry("far"),
+                 "-": self._entry("generic")}
+        ws, entry, d = nearest_workload(cands, FP, radius=0.75)
+        assert ws == near and entry["meta"]["t"] == "near"
+        assert d < 0.1
+
+    def test_generic_entry_is_the_fallback_at_radius(self):
+        """The offline winner's '-' signature sits AT the radius: used
+        when nothing parseable is nearer, beaten by anything that is."""
+        got = nearest_workload({"-": self._entry("generic")}, FP,
+                               radius=0.75)
+        assert got is not None
+        ws, _, d = got
+        assert ws == "-" and d == 0.75
+
+    def test_beyond_radius_returns_none(self):
+        far = fingerprint_sig(WorkloadFingerprint(
+            2.0, 4.0, 0.0, 30.0, 1.0, 0.0, 0.0))
+        assert nearest_workload({far: self._entry("far")}, FP,
+                                radius=0.3) is None
+
+    def test_empty_candidates(self):
+        assert nearest_workload({}, FP, radius=0.75) is None
+
+
+class TestCoerceConfig:
+    def test_out_of_space_values_snap(self):
+        """A deployed 512-token prefill_chunk must seed a 48-token
+        window's space as its largest valid choice, not explode."""
+        space = serve_knob_space(48, max_slots=8)
+        cfg = coerce_config(space, {"max_batch": 64, "prefill_chunk": 512,
+                                    "kv_cache_pages": 9999,
+                                    "schedule": "sjf",
+                                    "page_policy": "on_demand",
+                                    "share_prefix": 1, "draft_len": 4,
+                                    "bogus_knob": 7})
+        space.validate(cfg)  # raises if coercion failed
+        assert "bogus_knob" not in cfg
+        assert cfg["max_batch"] == 8
+        assert cfg["schedule"] == "sjf" and cfg["draft_len"] == 4
+
+    def test_invalid_enum_falls_to_default(self):
+        space = serve_knob_space(48, max_slots=8)
+        cfg = coerce_config(space, {"schedule": "not-a-policy"})
+        assert cfg["schedule"] == space["schedule"].default
+
+    def test_frozen_values_override(self):
+        space = serve_knob_space(48, max_slots=8).freeze(
+            {"kv_cache_pages": 12})
+        cfg = coerce_config(space, {"kv_cache_pages": 24})
+        assert cfg["kv_cache_pages"] == 12
+        space.validate(cfg)
+
+
+class TestWorkloadWindow:
+    def test_fingerprint_measures_the_trace(self):
+        w = WorkloadWindow(capacity=8)
+        for i in range(4):
+            w.record_request(step=i * 2, prompt=[1] * 20, max_new=10)
+        w.record_depth(3)
+        w.record_depth(5)
+        fp = w.fingerprint(step=7)
+        assert fp.prompt_mean == 20 and fp.gen_mean == 10
+        assert fp.arrival_rate == pytest.approx(4 / 8)
+        assert fp.depth == pytest.approx(4.0)
+        assert fp.prompt_spread == 0.0
+        # identical prompts: after the first, fully covered by the window
+        assert fp.share_frac > 0.5
+
+    def test_distinct_prompts_share_nothing(self):
+        rng = np.random.default_rng(0)
+        w = WorkloadWindow(capacity=8)
+        for i in range(5):
+            w.record_request(i, rng.integers(1, 500, size=16).tolist(), 4)
+        assert w.fingerprint(step=5).share_frac < 0.2
+
+    def test_acceptance_nan_until_drafts(self):
+        w = WorkloadWindow()
+        w.record_request(0, [1, 2, 3], 4)
+        assert math.isnan(w.fingerprint(0).accept_rate)
+        w.record_draft(4, 3)
+        assert w.fingerprint(0).accept_rate == pytest.approx(0.75)
+        w.record_draft(0, 0)  # no proposal: must not dilute the rate
+        assert w.fingerprint(0).accept_rate == pytest.approx(0.75)
+
+    def test_empty_window_has_no_fingerprint(self):
+        assert WorkloadWindow().fingerprint(0) is None
+
+    def test_window_slides(self):
+        w = WorkloadWindow(capacity=2)
+        w.record_request(0, [1] * 30, 2)
+        w.record_request(1, [1] * 6, 2)
+        w.record_request(2, [1] * 6, 2)
+        assert w.n_requests == 2
+        assert w.fingerprint(2).prompt_mean == 6.0
+
+
+def _retuner(optimizer="rrs", seed=0, batch=None, **kw):
+    space = serve_knob_space(48, max_slots=8)
+    params = CotuneParams(max_seq=48, prompt_len=24, gen_len=12)
+    defaults = dict(budget=8, threshold=0.25, min_requests=4, cooldown=8,
+                    check_every=2, optimizer=optimizer, seed=seed,
+                    batch=batch)
+    defaults.update(kw)
+    return OnlineRetuner(space, params, **defaults)
+
+
+def _drive(rt, *, shift_at=20, n_steps=40, trace_seed=7):
+    """A synthetic serve trace: steady long prompts, then a shift to
+    short shared-prefix bursts at ``shift_at``.  Returns the events."""
+    rng = np.random.default_rng(trace_seed)
+    w = WorkloadWindow(capacity=8)
+    shared = rng.integers(1, 500, size=20).tolist()
+    events = []
+    for step in range(n_steps):
+        if step % 4 == 0:
+            if step < shift_at:
+                w.record_request(step,
+                                 rng.integers(1, 500, size=24).tolist(), 12)
+            else:
+                for _ in range(3):  # burstier, short, shared
+                    w.record_request(
+                        step, shared + rng.integers(1, 500, size=2).tolist(),
+                        3)
+        w.record_depth(2 if step < shift_at else 8)
+        hit = rt.maybe_retune(w, step)
+        if hit is not None:
+            events.append(hit)
+    return events
+
+
+class TestShiftDetection:
+    def test_anchors_then_fires_once(self):
+        rt = _retuner(cooldown=1000)
+        events = _drive(rt)
+        assert len(events) == 1
+        assert events[0]["step"] >= 20  # never before the actual shift
+        assert events[0]["distance"] > rt.threshold
+
+    def test_no_shift_no_retune(self):
+        rt = _retuner()
+        events = _drive(rt, shift_at=10 ** 9)
+        assert events == [] and rt.n_retunes == 0
+
+    def test_cooldown_bounds_retune_rate(self):
+        eager = _retuner(threshold=0.05, cooldown=4)
+        lazy = _retuner(threshold=0.05, cooldown=1000)
+        n_eager = len(_drive(eager, n_steps=60))
+        n_lazy = len(_drive(lazy, n_steps=60))
+        assert n_lazy == 1 and n_eager >= 1
+
+    def test_min_requests_gates_the_fingerprint(self):
+        rt = _retuner(min_requests=10 ** 6, cooldown=1000)
+        assert _drive(rt) == []
+
+    def test_measured_acceptance_feeds_spec_accept(self):
+        """The tentpole's point: the retune's surrogate params carry the
+        MEASURED acceptance rate, not the 0.6 default constant."""
+        rt = _retuner(cooldown=1000)
+        fp = WorkloadFingerprint(0.5, 6.0, 0.1, 3.0, 8.0, 0.9, 0.85)
+        ev = rt.retune(fp, step=0)
+        assert ev["spec_accept"] == pytest.approx(0.85)
+        assert ev["measured_accept"] == pytest.approx(0.85)
+        # and without draft data the default survives (nan never lands)
+        params = params_for_fingerprint(
+            WorkloadFingerprint(0.5, 6.0, 0.1, 3.0, 8.0, 0.9,
+                                float("nan")),
+            CotuneParams(max_seq=48))
+        assert params.spec_accept == CotuneParams(max_seq=48).spec_accept
+
+    def test_same_trace_same_trigger(self):
+        runs = [_drive(_retuner(cooldown=1000)) for _ in range(2)]
+        assert [e["step"] for e in runs[0]] == \
+            [e["step"] for e in runs[1]]
+        assert runs[0][0]["config"] == runs[1][0]["config"]
+        assert runs[0][0]["signature"] == runs[1][0]["signature"]
+
+
+class TestWarmTransfer:
+    def _fp_b(self):
+        return WorkloadFingerprint(0.75, 22.0, 0.10, 3.0, 8.0, 0.90, 0.85)
+
+    def test_nearest_signature_beats_cold_at_equal_budget(self):
+        """The transfer claim: seeding from the nearest cached winner
+        reaches an at-least-as-good config as a cold restart spending
+        the same test budget."""
+        fp_b = self._fp_b()
+        params = params_for_fingerprint(fp_b, CotuneParams(max_seq=48))
+        space = serve_knob_space(48, max_slots=8)
+        # the donor: a well-funded earlier tune at a nearby workload
+        donor = Tuner(space, ServeSurrogate(params), budget=64,
+                      seed=3).run()
+        near_sig = fingerprint_sig(WorkloadFingerprint(
+            0.70, 22.0, 0.12, 3.0, 8.0, 0.88, 0.80))
+        rt_warm = _retuner(budget=6, cooldown=1000)
+        rt_warm._candidates = lambda: {
+            near_sig: {"config": dict(donor.best_config),
+                       "value": donor.best_metric.value}}
+        rt_warm.sig_dims = None  # no cache writes from the unit test
+        rt_cold = _retuner(budget=6, cooldown=1000)
+        ev_warm = rt_warm.retune(fp_b, step=0)
+        ev_cold = rt_cold.retune(fp_b, step=0)
+        assert ev_warm["warm_source"].startswith("near(")
+        assert ev_cold["warm_source"] == "cold"
+        assert ev_warm["n_tests"] == ev_cold["n_tests"] == 6
+        # equal budget: warm reaches at least the cold winner's quality
+        assert ev_warm["value"] >= ev_cold["value"]
+        # ... and at this tiny budget the donor transfer is a strict win
+        assert ev_warm["value"] > ev_cold["value"]
+
+    def test_exact_signature_hit_is_labelled(self):
+        fp_b = self._fp_b()
+        sig = fingerprint_sig(fp_b)
+        rt = _retuner(budget=6, cooldown=1000)
+        rt._candidates = lambda: {
+            sig: {"config": serve_knob_space(48, 8).default_config(),
+                  "value": 1.0}}
+        assert rt.retune(fp_b, step=0)["warm_source"] == "exact"
+
+    def test_retune_updates_baseline_and_active_config(self):
+        rt = _retuner(cooldown=1000)
+        fp_b = self._fp_b()
+        ev = rt.retune(fp_b, step=5)
+        assert rt.baseline == fp_b
+        assert rt.active_config == ev["config"]
+        assert rt.tests_spent == ev["n_tests"]
+        # immediately after, the same fingerprint is no longer a shift
+        assert fingerprint_distance(fp_b, rt.baseline) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine-level: the mid-stream swap, measured acceptance, bounded drafting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine_parts():
+    import jax
+
+    from repro.configs import ModelConfig
+    from repro.models import Model
+
+    cfg = ModelConfig(
+        name="tiny-retune", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0)), cfg
+
+
+def _drift_workload(seed=0):
+    """Phase A (distinct long prompts, long gens) then phase B (shared
+    prefix, short tails, short gens) — the drift the retuner must see."""
+    rng = np.random.default_rng(seed)
+    pa = [rng.integers(1, 500, size=20).tolist() for _ in range(3)]
+    shared = rng.integers(1, 500, size=32).tolist()
+    pb = [shared + rng.integers(1, 500, size=3).tolist()
+          for _ in range(12)]
+    return pa + pb, [12] * 3 + [6] * 12
+
+
+def _serve(model, params, prompts, max_new, tmp_path, monkeypatch,
+           **overrides):
+    from repro import autotune
+    from repro.serve import ServeConfig, ServeEngine
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "cache.json"))
+    autotune.reset_default_cache()
+    base = dict(max_seq=48, batch_slots=8, kv_layout="paged", seed=0,
+                prefill_chunk=8, slot_cap=3)
+    base.update(overrides)
+    eng = ServeEngine(model, params, ServeConfig(**base))
+    try:
+        return eng, eng.generate(prompts, max_new)
+    finally:
+        autotune.reset_default_cache()
+
+
+def _phase_a_sig(model, params, tmp_path, monkeypatch):
+    """The signature the (stale) offline winner was tuned under: measure
+    it from a phase-A-only run with the detector anchored but inert."""
+    rng = np.random.default_rng(0)
+    pa = [rng.integers(1, 500, size=20).tolist() for _ in range(6)]
+    eng, _ = _serve(model, params, pa, [12] * 6, tmp_path, monkeypatch,
+                    retune=True, retune_threshold=10.0,
+                    retune_min_requests=6, retune_window=10)
+    return fingerprint_sig(eng.last_retuner.baseline)
+
+
+RETUNE_KW = dict(retune=True, retune_budget=8, retune_threshold=0.3,
+                 retune_window=10, retune_cooldown=200,
+                 retune_check_every=2, retune_min_requests=6)
+
+
+class TestEngineRetune:
+    def test_swap_preserves_tokens_and_fires_once(
+            self, tiny_engine_parts, tmp_path, monkeypatch):
+        model, params, mcfg = tiny_engine_parts
+        sig_a = _phase_a_sig(model, params, tmp_path, monkeypatch)
+        prompts, max_new = _drift_workload()
+        eng, res = _serve(model, params, prompts, max_new, tmp_path,
+                          monkeypatch, tuned_signature=sig_a, **RETUNE_KW)
+        _, base = _serve(model, params, prompts, max_new, tmp_path,
+                         monkeypatch)
+        assert len(res.retunes) == 1
+        ev = res.retunes[0]
+        assert ev["distance"] > 0.3 and ev["applied"]
+        # the swap moved scheduling/batching knobs, never token content
+        assert res.tokens == base.tokens
+        # the allocator survived the mid-run policy swap balanced
+        eng.last_alloc.check_balanced()
+        # measured acceptance (the probe ran) reached the surrogate
+        assert math.isfinite(ev["measured_accept"])
+        assert abs(ev["spec_accept"] - ev["measured_accept"]) <= 0.1
+
+    def test_retune_step_is_deterministic(self, tiny_engine_parts,
+                                          tmp_path, monkeypatch):
+        model, params, mcfg = tiny_engine_parts
+        sig_a = _phase_a_sig(model, params, tmp_path, monkeypatch)
+        prompts, max_new = _drift_workload()
+        runs = [_serve(model, params, prompts, max_new, tmp_path,
+                       monkeypatch, tuned_signature=sig_a, **RETUNE_KW)[1]
+                for _ in range(2)]
+        assert [e["step"] for e in runs[0].retunes] == \
+            [e["step"] for e in runs[1].retunes]
+        assert runs[0].retunes[0]["config"] == runs[1].retunes[0]["config"]
+        assert runs[0].tokens == runs[1].tokens
+
+    def test_winner_persists_under_its_signature(
+            self, tiny_engine_parts, tmp_path, monkeypatch):
+        from repro import autotune
+
+        model, params, mcfg = tiny_engine_parts
+        sig_a = _phase_a_sig(model, params, tmp_path, monkeypatch)
+        prompts, max_new = _drift_workload()
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "persist.json"))
+        autotune.reset_default_cache()
+        try:
+            from repro.serve import ServeConfig, ServeEngine
+
+            eng = ServeEngine(model, params, ServeConfig(
+                max_seq=48, batch_slots=8, kv_layout="paged", seed=0,
+                prefill_chunk=8, slot_cap=3, tuned_signature=sig_a,
+                **RETUNE_KW))
+            res = eng.generate(prompts, max_new)
+            assert len(res.retunes) == 1
+            sig = res.retunes[0]["signature"]
+            cands = autotune.serve_config_candidates(
+                {"S": 48, "H": mcfg.padded_heads, "KV": mcfg.n_kv_heads,
+                 "D": mcfg.head_dim_}, mcfg.compute_dtype)
+            assert sig in cands
+            entry = cands[sig]
+            assert entry["config"] == res.retunes[0]["config"]
+            assert entry["meta"]["source"] == "online_retune"
+        finally:
+            autotune.reset_default_cache()
+
+    def test_slot_cap_caps_admission_not_tokens(
+            self, tiny_engine_parts, tmp_path, monkeypatch):
+        model, params, _ = tiny_engine_parts
+        prompts, max_new = _drift_workload()
+        _, capped = _serve(model, params, prompts, max_new, tmp_path,
+                           monkeypatch, slot_cap=2)
+        _, full = _serve(model, params, prompts, max_new, tmp_path,
+                         monkeypatch, slot_cap=None)
+        assert capped.tokens == full.tokens
+        assert capped.steps > full.steps  # fewer slots, more passes
+
+
+class TestAcceptanceRate:
+    def _res(self, drafted, accepted):
+        from repro.serve import GenerationResult
+
+        return GenerationResult([], 0.0, 0.0, 0, drafted=drafted,
+                                accepted=accepted)
+
+    def test_no_drafts_is_nan_not_zero(self):
+        assert math.isnan(self._res(0, 0).acceptance_rate)
+
+    def test_all_rejected_is_zero(self):
+        assert self._res(5, 0).acceptance_rate == 0.0
+
+    def test_measured_ratio(self):
+        assert self._res(8, 6).acceptance_rate == pytest.approx(0.75)
+
+
+class TestBoundedDrafting:
+    def test_tail_history_equals_suffix(self):
+        from repro.serve.engine import _tail_history
+
+        prompt, out = [1, 2, 3, 4, 5], [6, 7, 8]
+        full = prompt + out
+        for window in (1, 2, 3, 5, 7, 8, 100):
+            assert _tail_history(prompt, out, window) == full[-window:]
+        assert _tail_history(prompt, out, 0) == full
+        assert _tail_history([], out, 2) == [7, 8]
+
+    def test_windowed_draft_equals_draft_on_tail(self):
+        from repro.serve import ServeEngine
+
+        rng = np.random.default_rng(0)
+        hist = rng.integers(0, 6, size=500).tolist()
+        for window in (16, 64, 256):
+            assert ServeEngine._ngram_draft(hist, 4, window=window) == \
+                ServeEngine._ngram_draft(hist[-window:], 4)
+
+    def test_draft_window_never_changes_tokens(
+            self, tiny_engine_parts, tmp_path, monkeypatch):
+        """The satellite's pin: the lookback bound changes WHAT gets
+        drafted (dispatch counts), never what gets generated."""
+        model, params, _ = tiny_engine_parts
+        prompts, max_new = _drift_workload()
+        outs = {}
+        for window in (2, 24, 10 ** 6):
+            _, res = _serve(model, params, prompts, max_new, tmp_path,
+                            monkeypatch, draft_len=4, draft_window=window)
+            outs[window] = res
+        assert outs[2].tokens == outs[24].tokens == outs[10 ** 6].tokens
+
