@@ -44,6 +44,16 @@ A standalone drafting-cost row pins the bounded-lookback satellite: with
 ``draft_window`` the n-gram drafter's per-call cost is flat in history
 length (16x longer history < 3x cost) instead of linear.
 
+A fifth, *sharded* arm pins the tensor-parallel serving claims (PR 9) on
+8 fake host devices (``XLA_FLAGS`` is set at module import, before jax):
+the main workload re-runs at mesh (1,2) (pure TP), (2,1) (replicas) and
+(2,2) (grid) with the exact continuous+paged+fifo config.  Per-request
+tokens must stay bit-identical to the unsharded arm; the TP arm must
+issue EXACTLY the unsharded number of batched decode dispatches (TP
+splits each dispatch across devices, it never adds steps); the replica
+arm must finish in strictly fewer steps (the data axis widens admission
+capacity); and every arm's allocator must exit balanced.
+
 ``BENCH_serve.json`` is the cross-PR perf artifact; ``--check`` exits
 non-zero if continuous+paged underperforms wave at equal engine config,
 if ``on_demand`` loses to ``reserve`` on the oversubscribed arm, if
@@ -67,6 +77,15 @@ from typing import Any, Dict, List
 import numpy as np
 
 from .common import Row
+
+# the sharded arms need 8 fake host devices; this must land before the
+# first (lazy, in-function) jax import anywhere in this process
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+# sharded arms: (data, model) meshes the main workload re-runs under;
+# the tiny model's 4 heads / 2 kv_heads divide every model axis here
+SHARDED_MESHES = {"d1m2": (1, 2), "d2m1": (2, 1), "d2m2": (2, 2)}
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serve.json")
@@ -154,22 +173,23 @@ def _shared_workload(seed: int = SEED):
 
 def _engine(model, params, runtime: str, layout: str, schedule: str,
             page_policy: str = "reserve", pages=None,
-            share_prefix: bool = False, chunk: int = PREFILL_CHUNK):
+            share_prefix: bool = False, chunk: int = PREFILL_CHUNK,
+            mesh=None):
     from repro.serve import ServeConfig, ServeEngine
 
     return ServeEngine(model, params, ServeConfig(
         max_seq=MAX_SEQ, batch_slots=SLOTS, prefill_chunk=chunk,
         runtime=runtime, kv_layout=layout, schedule=schedule,
         page_policy=page_policy, kv_cache_pages=pages,
-        share_prefix=share_prefix))
+        share_prefix=share_prefix, mesh_shape=mesh))
 
 
 def _run_continuous(model, params, layout: str, schedule: str,
                     prompts, gens, page_policy: str = "reserve",
                     pages=None, share_prefix: bool = False,
-                    chunk: int = PREFILL_CHUNK) -> Dict[str, Any]:
+                    chunk: int = PREFILL_CHUNK, mesh=None) -> Dict[str, Any]:
     eng = _engine(model, params, "continuous", layout, schedule,
-                  page_policy, pages, share_prefix, chunk)
+                  page_policy, pages, share_prefix, chunk, mesh)
     eng.generate(prompts, gens)  # warmup: absorb jit specialization
     t0 = time.time()
     res = eng.generate(prompts, gens)
@@ -508,6 +528,19 @@ def bench() -> Dict[str, Any]:
     ref = arms["wave_fifo"]["tokens"]
     parity = all(arms[a]["tokens"] == ref for a in arms)
 
+    # ---- sharded arms: the continuous_paged_fifo config re-run over
+    # each mesh — sharding is the ONLY difference ------------------------
+    import jax
+
+    n_dev = len(jax.devices())
+    sharded: Dict[str, Dict[str, Any]] = {}
+    for sig, mesh in SHARDED_MESHES.items():
+        if mesh[0] * mesh[1] <= n_dev:
+            sharded[sig] = _run_continuous(
+                model, params, "paged", "fifo", prompts, gens, mesh=mesh)
+    sharded_parity = all(s["tokens"] == arms["continuous_paged_fifo"]["tokens"]
+                         for s in sharded.values())
+
     # ---- oversubscribed page-policy arm: equal (small) pool, the
     # reservation policy is the only difference -------------------------
     os_prompts, os_gens = _oversub_workload()
@@ -550,6 +583,12 @@ def bench() -> Dict[str, Any]:
                                         / baseline["decode_tok_per_s"]),
         "continuous_over_wave_wall": (headline["wall_tok_per_s"]
                                       / baseline["wall_tok_per_s"]),
+        "sharded_devices": n_dev,
+        "sharded_arms": {a: {k: v for k, v in s.items() if k != "tokens"}
+                         for a, s in sharded.items()},
+        "sharded_token_parity": bool(sharded_parity),
+        "sharded_leaked_groups": sum(s["leaked_groups"]
+                                     for s in sharded.values()),
         "oversub_workload": {"kv_cache_pages": OVERSUB_POOL,
                              "prompt_lens": [len(p) for p in os_prompts],
                              "gen_lens": os_gens},
@@ -596,6 +635,14 @@ def rows_from(result: Dict[str, Any]) -> List[Row]:
                  f"({result['continuous_over_wave_wall']:.2f}x wall)"))
     rows.append(("serve_token_parity", 0.0,
                  "ok" if result["token_parity"] else "MISMATCH"))
+    for sig, s in sorted(result["sharded_arms"].items()):
+        rows.append((f"serve_sharded_{sig}", 0.0,
+                     f"{s['decode_tok_per_s']:.0f} tok/s "
+                     f"steps={s['steps']} occ={s['occupancy']:.2f}"))
+    rows.append(("serve_sharded_parity", 0.0,
+                 "ok" if (result["sharded_token_parity"]
+                          and result["sharded_leaked_groups"] == 0)
+                 else "MISMATCH"))
     for policy in ("reserve", "on_demand"):
         s = result["oversub_arms"][policy]
         rows.append((f"serve_oversub_{policy}", 0.0,
@@ -675,6 +722,38 @@ def main(argv=None) -> int:
                   f"{ratio:.2f}x the wave baseline (< 1.0x)",
                   file=sys.stderr)
             return 1
+        # ---- sharded arm gates (PR 9) --------------------------------
+        if set(result["sharded_arms"]) != set(SHARDED_MESHES):
+            print(f"CHECK FAILED: sharded arms missing "
+                  f"(got {sorted(result['sharded_arms'])} on "
+                  f"{result['sharded_devices']} devices — XLA_FLAGS fake "
+                  "devices not in effect?)", file=sys.stderr)
+            return 1
+        if not result["sharded_token_parity"]:
+            print("CHECK FAILED: per-request tokens differ across meshes",
+                  file=sys.stderr)
+            return 1
+        if result["sharded_leaked_groups"]:
+            print("CHECK FAILED: page groups leaked on the sharded arms",
+                  file=sys.stderr)
+            return 1
+        # noise-free dispatch invariants: pure TP splits each batched
+        # decode dispatch across devices — it must never add steps —
+        # while a data axis widens admission and must strictly cut them
+        base_steps = result["arms"]["continuous_paged_fifo"]["steps"]
+        tp_steps = result["sharded_arms"]["d1m2"]["steps"]
+        if tp_steps != base_steps:
+            print(f"CHECK FAILED: pure-TP mesh took {tp_steps} decode "
+                  f"steps vs {base_steps} unsharded (TP must dispatch "
+                  "exactly the same batched steps)", file=sys.stderr)
+            return 1
+        for sig in ("d2m1", "d2m2"):
+            ds = result["sharded_arms"][sig]["steps"]
+            if ds >= base_steps:
+                print(f"CHECK FAILED: mesh {sig} took {ds} decode steps "
+                      f"vs {base_steps} unsharded (the data axis widened "
+                      "nothing)", file=sys.stderr)
+                return 1
         if not result["oversub_token_parity"]:
             print("CHECK FAILED: per-request tokens differ across page "
                   "policies on the oversubscribed workload",
@@ -790,13 +869,16 @@ def main(argv=None) -> int:
                   "tokens of history (must stay < 3x: the lookback "
                   "bound is not bounding)", file=sys.stderr)
             return 1
+        rep_steps = result["sharded_arms"]["d2m1"]["steps"]
         print(f"check OK: continuous+paged = {ratio:.2f}x wave decode "
               f"throughput; on_demand = {od_ratio:.2f}x reserve at "
               f"{OVERSUB_POOL} pages; share_prefix = {sh_ratio:.2f}x "
               f"unshared on the repeated-prefix arm; online retune = "
               f"{dr_ratio:.2f}x the stale winner at equal budget "
               f"({st_steps}->{rt_steps} steps, drafting cost flat at "
-              f"{dc_ratio:.2f}x); token parity holds, pool balanced")
+              f"{dc_ratio:.2f}x); sharded meshes hold parity (TP steps "
+              f"{tp_steps}=={base_steps}, replicas {rep_steps}<"
+              f"{base_steps}); token parity holds, pool balanced")
     return 0
 
 

@@ -220,7 +220,10 @@ def kernel_feasibility(kernel: str, dims: Mapping[str, int],
 # ---------------------------------------------------------------------------
 def serve_feasibility(max_seq: int = 2048, *, runtime: str = "continuous",
                       kv_layout: str = "paged",
-                      kv_page_block: int = 1) -> FeasibilityModel:
+                      kv_page_block: int = 1,
+                      n_devices: Optional[int] = None,
+                      n_heads: Optional[int] = None,
+                      n_kv_heads: Optional[int] = None) -> FeasibilityModel:
     """The serve knob space's deployability predicates.
 
     ``kv_pages_floor`` (error) encodes exactly the floor
@@ -232,8 +235,25 @@ def serve_feasibility(max_seq: int = 2048, *, runtime: str = "continuous",
     would score one config and deploy another — so it is statically
     infeasible and never charged a test.
 
-    Parameterized on the deployment base's layout fields (not on a
-    ``ServeConfig``) so the model stays numpy-only and jax-free.
+    The sharding subspace (``mesh_devices`` / ``tp_vs_replicas``, absent
+    in single-device spaces — absent knobs pass) adds:
+
+    * ``mesh_fits`` (error) — the tuned device count must divide the
+      host's ``n_devices``: ``ServeEngine`` refuses to build any other
+      mesh, so fresh tunes must never persist one.
+    * ``heads_divide`` (error) — under ``tp`` the model axis must divide
+      ``n_heads``; otherwise ``spec_for_shape``'s divisibility fallback
+      replicates attention and the deployed engine silently is NOT the
+      tensor-parallel config the tuner scored.
+    * ``kv_heads_shardable`` (warn) — under ``tp`` a model axis that
+      doesn't divide ``n_kv_heads`` leaves the paged KV pool replicated
+      per device (``repro.kernels.paged_attention.shardable_kv_heads``):
+      deployable and token-correct, but without the pool-memory win —
+      a hazard worth surfacing, not infeasibility.
+
+    Parameterized on the deployment base's layout/topology fields (not on
+    a ``ServeConfig``) so the model stays numpy-only and jax-free;
+    ``None`` topology fields skip their predicates (unknown ≠ violated).
     """
     from repro.serve.paging import PAGE_TOKENS, min_pages_for
 
@@ -253,5 +273,51 @@ def serve_feasibility(max_seq: int = 2048, *, runtime: str = "continuous",
                     f"raise it, so tuned != deployed")
         return None
 
+    def _mesh(cfg: Config) -> int:
+        return int(cfg.get("mesh_devices", 1))
+
+    def _is_tp(cfg: Config) -> bool:
+        return str(cfg.get("tp_vs_replicas", "tp")) == "tp"
+
+    def mesh_fits(cfg: Config) -> Optional[str]:
+        dev = _mesh(cfg)
+        if dev <= 1 or n_devices is None:
+            return None
+        if dev > n_devices or n_devices % dev:
+            return (f"mesh_devices={dev} does not divide the host's "
+                    f"{n_devices} devices: ServeEngine refuses to build "
+                    f"this mesh")
+        return None
+
+    def heads_divide(cfg: Config) -> Optional[str]:
+        dev = _mesh(cfg)
+        if dev <= 1 or not _is_tp(cfg) or n_heads is None:
+            return None
+        if n_heads % dev:
+            return (f"{dev}-way model axis does not divide n_heads="
+                    f"{n_heads}: spec_for_shape would replicate attention "
+                    f"and deploy an engine the tuner never scored")
+        return None
+
+    def kv_heads_shardable(cfg: Config) -> Optional[str]:
+        dev = _mesh(cfg)
+        if dev <= 1 or not _is_tp(cfg) or n_kv_heads is None:
+            return None
+        try:  # the kernel's own divisibility gate when jax is importable
+            from repro.kernels.paged_attention import shardable_kv_heads
+            ok = shardable_kv_heads(n_kv_heads, dev)
+        except ImportError:  # jax-free caller: same arithmetic inline
+            ok = n_kv_heads % dev == 0
+        if not ok:
+            return (f"{dev}-way model axis does not divide n_kv_heads="
+                    f"{n_kv_heads}: the paged KV pool replicates per "
+                    f"device (deployable, but no pool-memory win)")
+        return None
+
     return FeasibilityModel(
-        "serve", [Predicate("kv_pages_floor", kv_pages_floor)])
+        "serve",
+        [Predicate("kv_pages_floor", kv_pages_floor),
+         Predicate("mesh_fits", mesh_fits),
+         Predicate("heads_divide", heads_divide),
+         Predicate("kv_heads_shardable", kv_heads_shardable,
+                   severity="warn")])

@@ -41,6 +41,21 @@ shrinks every later run's pool):
   receiver, lexically inside a ``try`` body whose handlers/finally never
   call ``release``/``release_all``.
 
+Mesh/sharding discipline (the serve engine jits against whatever mesh is
+active; sharding mistakes surface as silent replication, not errors):
+
+* ``jit-mesh-closure``      — a jitted function closing over a
+  module-level name bound to a concrete ``Mesh`` / ``NamedSharding`` /
+  ``make_mesh(...)``: the jit cache never keys on the closure, so a
+  topology change silently reuses executables compiled for the old
+  grid.  Pass the mesh (or shardings derived from it) as an argument.
+* ``constrain-unknown-axis`` — a string logical-axis name passed to
+  ``constrain(...)`` / ``spec_for_shape(...)`` that no entry of
+  ``repro.dist.sharding.RULE_PRESETS`` (or the deliberate
+  ``REPLICATED_AXES`` set) knows: every preset drops the axis, so the
+  dimension silently replicates on every mesh — the typo class
+  ``spec_for_shape``'s drop-unknown semantics can never raise on.
+
 Every check is *resolve-or-skip*: when a piece (grid length, spec list,
 kernel def, static names) is not statically resolvable, the site is
 skipped rather than guessed at — findings are high-confidence by
@@ -93,6 +108,13 @@ RULES: Dict[str, Tuple[str, str]] = {
     "alloc-try-no-release": (
         "error", "allocator acquire inside try with no release on the "
                  "unwind path"),
+    "jit-mesh-closure": (
+        "error", "jitted function closes over a concrete "
+                 "Mesh/NamedSharding instead of taking it as an "
+                 "argument"),
+    "constrain-unknown-axis": (
+        "error", "logical axis name that no sharding rules preset maps "
+                 "(the dimension would silently replicate)"),
 }
 
 try:  # single source of truth when the package is importable
@@ -100,9 +122,21 @@ try:  # single source of truth when the package is importable
 except Exception:  # pragma: no cover - standalone invocation
     VMEM_BYTES = 16 * 2 ** 20
 
+try:  # the axis registry the constrain-unknown-axis rule checks against
+    from repro.dist.sharding import KNOWN_LOGICAL_AXES
+except Exception:  # pragma: no cover - standalone invocation
+    KNOWN_LOGICAL_AXES = frozenset({
+        "batch", "cap", "conv_dim", "embed", "embed_fsdp", "expert_ff",
+        "experts", "ff", "head_dim", "heads", "kv_heads", "seq",
+        "seq_res", "vocab"})
+
 _ACQUIRE = frozenset({"reserve", "extend", "share", "try_alloc",
                       "cow_split"})
 _RELEASE = frozenset({"release", "release_all"})
+
+# constructors whose module-level result a jitted function must not
+# close over (jit-mesh-closure)
+_MESH_CTORS = frozenset({"Mesh", "NamedSharding", "make_mesh"})
 
 _DTYPE_BYTES = {
     "float64": 8, "int64": 8, "uint64": 8,
@@ -216,6 +250,48 @@ def _defaults_by_name(fn: ast.FunctionDef) -> Dict[str, ast.AST]:
     return out
 
 
+def _bound_names(fn: ast.FunctionDef) -> set:
+    """Every name the function binds locally (params, assignment and
+    loop targets, nested defs, imports, lambda params): a reference to
+    anything else reads the enclosing scope — a closure."""
+    bound = set(_all_params(fn))
+    for a in (fn.args.vararg, fn.args.kwarg):
+        if a is not None:
+            bound.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) \
+                and isinstance(node.ctx, (ast.Store, ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            bound.add(node.name)
+            if not isinstance(node, ast.ClassDef):
+                bound.update(_all_params(node))
+        elif isinstance(node, ast.Lambda):
+            bound.update(a.arg for a in node.args.posonlyargs
+                         + node.args.args + node.args.kwonlyargs)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            bound.update((alias.asname or alias.name).split(".")[0]
+                         for alias in node.names)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+    return bound
+
+
+def _axis_literals(node: ast.AST) -> List[Tuple[str, ast.AST]]:
+    """(name, node) for every string literal in an axes argument,
+    descending into tuple/list entries; non-literal elements are
+    skipped (resolve-or-skip, per element)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [(node.value, node)]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[Tuple[str, ast.AST]] = []
+        for e in node.elts:
+            out.extend(_axis_literals(e))
+        return out
+    return []
+
+
 def _pragmas(source: str) -> Dict[int, Optional[FrozenSet[str]]]:
     """line (1-based) -> frozenset of suppressed rules, or None = all."""
     out: Dict[int, Optional[FrozenSet[str]]] = {}
@@ -270,6 +346,8 @@ class _FileLinter:
         self._check_jit_sites()
         self._check_pallas_sites()
         self._check_alloc_discipline()
+        self._check_mesh_closure()
+        self._check_constrain_axes()
         self.findings.sort(key=lambda f: (f.line, f.col, f.rule))
         return self.findings
 
@@ -549,6 +627,66 @@ class _FileLinter:
                 "pallas-vmem-scratch", scratch,
                 f"VMEM scratch totals {total / 2**20:.1f} MiB, over "
                 f"the {VMEM_BYTES / 2**20:.0f} MiB per-core budget")
+
+    # -- mesh/sharding rules -----------------------------------------------
+    def _mesh_value(self, name: str, depth: int = 0) -> Optional[ast.Call]:
+        """The Mesh/NamedSharding/make_mesh constructor call a
+        module-level name resolves to, through simple aliasing, or
+        None."""
+        if depth > 4:
+            return None
+        val = self.assigns.get(name)
+        if isinstance(val, ast.Call) and _last(val.func) in _MESH_CTORS:
+            return val
+        if isinstance(val, ast.Name):
+            return self._mesh_value(val.id, depth + 1)
+        return None
+
+    def _check_mesh_closure(self) -> None:
+        seen = set()
+        for fn, _statics, _site in self._jit_sites():
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            bound = _bound_names(fn)
+            flagged: set = set()
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id not in bound
+                        and node.id not in flagged):
+                    continue
+                val = self._mesh_value(node.id)
+                if val is not None:
+                    flagged.add(node.id)
+                    self.report(
+                        "jit-mesh-closure", node,
+                        f"jitted {fn.name}() closes over {node.id!r}, "
+                        f"a concrete {_last(val.func)}(...) built at "
+                        "module scope; the jit cache never keys on a "
+                        "closure, so a topology change reuses stale "
+                        "executables — pass it as an argument")
+
+    def _check_constrain_axes(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _last(node.func)
+            if name == "constrain":
+                axis_args = node.args[1:]
+            elif name == "spec_for_shape" and len(node.args) >= 2:
+                axis_args = [node.args[1]]
+            else:
+                continue
+            for arg in axis_args:
+                for axis, anode in _axis_literals(arg):
+                    if axis not in KNOWN_LOGICAL_AXES:
+                        self.report(
+                            "constrain-unknown-axis", anode,
+                            f"logical axis {axis!r} is in no "
+                            "RULE_PRESETS entry (nor REPLICATED_AXES): "
+                            "every preset would drop it and the "
+                            "dimension silently replicates")
 
     # -- allocator rule ----------------------------------------------------
     @staticmethod

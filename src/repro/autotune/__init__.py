@@ -22,13 +22,15 @@ from .api import (
     cached_serve_config,
     cached_train_config,
     ensure_tuned,
+    nearest_mesh_serve_config,
     put_serve_config,
     put_train_config,
     resolve_blocks,
     serve_config_candidates,
 )
-from .cache import AutotuneCache, SCHEMA_VERSION, default_cache, \
-    reset_default_cache
+from .cache import (AutotuneCache, SCHEMA_VERSION, default_cache,
+                    mesh_distance, mesh_sig, nearest_mesh, parse_mesh_sig,
+                    reset_default_cache)
 from .space import KERNELS, KernelSpace, shape_sig
 from .sut import KernelSUT
 
@@ -47,6 +49,11 @@ __all__ = [
     "cached_train_config",
     "default_cache",
     "ensure_tuned",
+    "mesh_distance",
+    "mesh_sig",
+    "nearest_mesh",
+    "nearest_mesh_serve_config",
+    "parse_mesh_sig",
     "put_serve_config",
     "put_train_config",
     "reset_default_cache",

@@ -17,15 +17,15 @@ from __future__ import annotations
 import logging
 from typing import Any, Dict, Optional
 
-from .cache import AutotuneCache, default_cache
+from .cache import AutotuneCache, default_cache, mesh_sig, nearest_mesh
 from .space import KERNELS, KernelSpace, shape_sig
 from .sut import KernelSUT
 
 __all__ = ["autotune_kernel", "ensure_tuned", "resolve_blocks",
            "cached_blocks", "backend_name", "put_serve_config",
            "cached_serve_config", "serve_config_candidates",
-           "SERVE_SYSTEM", "put_train_config", "cached_train_config",
-           "TRAIN_SYSTEM"]
+           "nearest_mesh_serve_config", "SERVE_SYSTEM",
+           "put_train_config", "cached_train_config", "TRAIN_SYSTEM"]
 
 logger = logging.getLogger("repro.autotune")
 
@@ -53,7 +53,7 @@ def cached_blocks(kernel: str, dims: Dict[str, int], dtype: str,
                   backend: Optional[str] = None) -> Optional[Dict[str, Any]]:
     """The tuned block config for this problem, or None if never tuned."""
     sig = shape_sig(KernelSpace(kernel).validate_dims(dims))
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     return cache.get_config(kernel, sig, dtype,
                             backend or backend_name())
 
@@ -72,7 +72,7 @@ def resolve_blocks(kernel: str, dims: Dict[str, int], dtype: str,
     """
     # surface call-site programming errors before touching the cache
     KernelSpace(kernel).validate_dims(dims)
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     try:
         tuned = cached_blocks(kernel, dims, dtype, cache=cache)
     except (OSError, KeyError, ValueError, TypeError) as exc:
@@ -95,46 +95,87 @@ def put_serve_config(sig_dims: Dict[str, int], dtype: str,
                      cache: Optional[AutotuneCache] = None,
                      backend: Optional[str] = None,
                      meta: Optional[Dict[str, Any]] = None,
-                     workload: str = "") -> str:
+                     workload: str = "", mesh: str = "") -> str:
     """Persist a tuned serve-engine knob config (the joint mode's winner).
 
     Keyed like a kernel entry — (``SERVE_SYSTEM``, model-shape signature,
     dtype, backend) — so serve knobs and kernel blocks live in one cache
     file.  ``workload`` is the fingerprint signature the knobs were
     tuned under (``repro.serve.workload.fingerprint_sig``); empty means
-    workload-generic, the offline mode's entry.  Returns the shape
-    signature used.
+    workload-generic, the offline mode's entry.  ``mesh`` is the device
+    topology the knobs were tuned for (a ``(data, model)`` shape or
+    signature string; empty = single device) — since schema v4 a winner
+    tuned at one device count never resolves at another.  Returns the
+    shape signature used.
     """
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     cache.put(SERVE_SYSTEM, sig, dtype, backend or backend_name(),
-              dict(config), value, meta=meta, workload=workload)
+              dict(config), value, meta=meta, workload=workload,
+              mesh=mesh_sig(mesh) if mesh else "")
     return sig
 
 
 def cached_serve_config(sig_dims: Dict[str, int], dtype: str,
                         cache: Optional[AutotuneCache] = None,
                         backend: Optional[str] = None,
-                        workload: str = ""
+                        workload: str = "", mesh: str = ""
                         ) -> Optional[Dict[str, Any]]:
     """The tuned serve-engine knobs for this model shape (at this exact
-    workload signature; generic when omitted), or None."""
+    workload signature and mesh topology; generic single-device when
+    omitted), or None."""
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     return cache.get_config(SERVE_SYSTEM, sig, dtype,
-                            backend or backend_name(), workload=workload)
+                            backend or backend_name(), workload=workload,
+                            mesh=mesh_sig(mesh) if mesh else "")
 
 
 def serve_config_candidates(sig_dims: Dict[str, int], dtype: str,
                             cache: Optional[AutotuneCache] = None,
-                            backend: Optional[str] = None
+                            backend: Optional[str] = None,
+                            mesh: str = ""
                             ) -> Dict[str, Dict[str, Any]]:
-    """Every cached serve winner at this model shape, keyed by workload
-    signature (``-`` = generic) — the nearest-signature transfer set."""
+    """Every cached serve winner at this model shape and mesh topology,
+    keyed by workload signature (``-`` = generic) — the nearest-
+    signature transfer set."""
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     return cache.scan_workloads(SERVE_SYSTEM, sig, dtype,
-                                backend or backend_name())
+                                backend or backend_name(),
+                                mesh=mesh_sig(mesh) if mesh else "")
+
+
+def nearest_mesh_serve_config(sig_dims: Dict[str, int], dtype: str,
+                              mesh: str,
+                              cache: Optional[AutotuneCache] = None,
+                              backend: Optional[str] = None,
+                              workload: str = ""
+                              ) -> Optional[Dict[str, Any]]:
+    """Warm-start donor lookup across device topologies.
+
+    Exact-mesh hit wins; on a miss the cached winner at the NEAREST mesh
+    signature (``repro.autotune.cache.mesh_distance``) is returned as a
+    donor — annotated with ``donor_mesh``/``mesh_distance`` so callers
+    can tell a transferred seed from a native winner and must re-tune
+    before persisting it at the new topology.  None when nothing is
+    cached at any mesh for this shape/workload.
+    """
+    target = mesh_sig(mesh) if mesh else "1dev"
+    sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
+    backend = backend or backend_name()
+    exact = cache.get(SERVE_SYSTEM, sig, dtype, backend,
+                      workload=workload, mesh=target)
+    if exact is not None:
+        return dict(exact, donor_mesh=target, mesh_distance=0.0)
+    donors = cache.scan_meshes(SERVE_SYSTEM, sig, dtype, backend,
+                               workload=workload)
+    near = nearest_mesh(donors, target)
+    if near is None:
+        return None
+    donor, dist = near
+    return dict(donors[donor], donor_mesh=donor, mesh_distance=dist)
 
 
 def put_train_config(sig_dims: Dict[str, int], dtype: str,
@@ -149,7 +190,7 @@ def put_train_config(sig_dims: Dict[str, int], dtype: str,
     serve-config entry.  Returns the signature used.
     """
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     cache.put(TRAIN_SYSTEM, sig, dtype, backend or backend_name(),
               dict(config), value, meta=meta)
     return sig
@@ -161,7 +202,7 @@ def cached_train_config(sig_dims: Dict[str, int], dtype: str,
                         ) -> Optional[Dict[str, Any]]:
     """The tuned train-step knobs for this workload shape, or None."""
     sig = shape_sig({k: int(v) for k, v in sig_dims.items()})
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     return cache.get_config(TRAIN_SYSTEM, sig, dtype,
                             backend or backend_name())
 
@@ -188,7 +229,7 @@ def autotune_kernel(
                     interpret=interpret, seed=seed)
     report = Tuner(sut.space(), sut, budget=budget, optimizer=optimizer,
                    seed=seed, verbose=verbose).run()
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     sig = shape_sig(sut.dims)
     summary = {
         "kernel": kernel,
@@ -214,7 +255,7 @@ def ensure_tuned(kernel: str, dims: Dict[str, int], dtype: str = "float32",
                  budget: int = 16, cache: Optional[AutotuneCache] = None,
                  **kw: Any) -> Dict[str, Any]:
     """Cache hit → return it; miss → tune now and persist."""
-    cache = cache or default_cache()
+    cache = default_cache() if cache is None else cache  # not `or`: an empty cache is falsy (__len__)
     tuned = cached_blocks(kernel, dims, dtype, cache=cache)
     if tuned is not None:
         return tuned

@@ -23,10 +23,12 @@ from __future__ import annotations
 
 import contextlib
 import json
+import math
 import os
+import re
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 try:  # POSIX cross-process file locking; absent on some platforms
     import fcntl
@@ -34,7 +36,8 @@ except ImportError:  # pragma: no cover - linux container always has it
     fcntl = None
 
 __all__ = ["AutotuneCache", "SCHEMA_VERSION", "default_cache",
-           "reset_default_cache"]
+           "reset_default_cache", "mesh_sig", "parse_mesh_sig",
+           "mesh_distance", "nearest_mesh"]
 
 # Bump whenever the key schema changes meaning.  v2: flash_attention
 # signatures gained the SK (KV sequence length) dim — v1 entries were keyed
@@ -45,7 +48,78 @@ __all__ = ["AutotuneCache", "SCHEMA_VERSION", "default_cache",
 # same meaning at the generic signature, so ``_load``/``_save`` MIGRATE
 # them (rewritten under ``v3|...|-``) instead of dropping them — only
 # pre-v2 keys remain unresolvable and disappear on the next write.
-SCHEMA_VERSION = 3
+# v4: keys gained a trailing device/mesh-signature component (``1dev`` =
+# single device) so winners tuned at one device count / mesh orientation
+# never silently deploy at another; every v3 entry was tuned on one
+# device, so it migrates in place to ``v4|...|1dev``.
+SCHEMA_VERSION = 4
+
+# ---------------------------------------------------------------------------
+# mesh signatures: the device-topology component of every v4 cache key
+# ---------------------------------------------------------------------------
+def mesh_sig(shape: Any = None) -> str:
+    """Canonical device/mesh signature for a cache key.
+
+    ``shape`` is a ``(data, model)`` mesh shape (the serve engine's
+    orientation), an existing signature string, or ``None``/``(1, 1)``
+    for the single-device case — all spellings of one device collapse to
+    ``"1dev"`` so offline tuning and migrated v3 entries share one key.
+    """
+    if shape is None:
+        return "1dev"
+    if isinstance(shape, str):
+        parsed = parse_mesh_sig(shape)
+        if parsed is None:
+            raise ValueError(f"not a mesh signature: {shape!r}")
+        return mesh_sig(parsed)
+    data, model = (int(shape[0]), int(shape[1]))
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh shape must be positive, got {shape!r}")
+    if data * model == 1:
+        return "1dev"
+    return f"d{data}m{model}"
+
+
+def parse_mesh_sig(sig: str) -> Optional[Tuple[int, int]]:
+    """``(data, model)`` for a mesh signature, or None for anything that
+    is not one (other key components included)."""
+    if sig == "1dev":
+        return (1, 1)
+    m = re.fullmatch(r"d(\d+)m(\d+)", str(sig))
+    if m is None:
+        return None
+    data, model = int(m.group(1)), int(m.group(2))
+    if data < 1 or model < 1:
+        return None
+    return (data, model)
+
+
+def mesh_distance(a: str, b: str) -> float:
+    """Topology distance between two mesh signatures: the sum of per-axis
+    log2 size gaps.  Same mesh is 0; growing one axis 2x costs 1; the
+    replicas-vs-TP orientation flip at equal device count (``d2m1`` vs
+    ``d1m2``) costs 2 — a donor at the same orientation is always closer
+    than the transposed mesh."""
+    pa, pb = parse_mesh_sig(a), parse_mesh_sig(b)
+    if pa is None or pb is None:
+        return float("inf")
+    return (abs(math.log2(pa[0]) - math.log2(pb[0]))
+            + abs(math.log2(pa[1]) - math.log2(pb[1])))
+
+
+def nearest_mesh(candidates: Any, target: str
+                 ) -> Optional[Tuple[str, float]]:
+    """The candidate mesh signature nearest ``target`` (and its
+    distance), or None when no candidate parses.  Ties break on sorted
+    signature order, so warm-start donor selection is deterministic."""
+    best: Optional[Tuple[float, str]] = None
+    for sig in sorted(set(candidates)):
+        d = mesh_distance(sig, target)
+        if math.isfinite(d) and (best is None or d < best[0]):
+            best = (d, sig)
+    if best is None:
+        return None
+    return best[1], best[0]
 
 
 def _default_path() -> str:
@@ -67,17 +141,20 @@ class AutotuneCache:
     # ------------------------------------------------------------------
     @staticmethod
     def key(kernel: str, sig: str, dtype: str, backend: str,
-            workload: str = "") -> str:
+            workload: str = "", mesh: str = "") -> str:
         """The canonical cache key.  Every component is coerced through
         ``str`` and the workload signature is ``|``-sanitized, so keys
         serialize identically from every producer — a formatting mismatch
         here is a silent cache miss (and, since v3, one the
         nearest-signature fallback would quietly paper over).
         ``workload`` defaults to ``-``: the workload-generic entry
-        offline tuning writes and migrated v2 entries land on."""
+        offline tuning writes and migrated v2 entries land on.
+        ``mesh`` defaults to ``1dev``: the single-device signature
+        offline tuning writes and migrated v3 entries land on."""
         w = str(workload or "-").replace("|", "/")
+        m = mesh_sig(mesh) if mesh else "1dev"
         return (f"v{SCHEMA_VERSION}|{kernel}|{sig}|{str(dtype)}"
-                f"|{str(backend)}|{w}")
+                f"|{str(backend)}|{w}|{m}")
 
     @staticmethod
     def _upgrade(key: str) -> Optional[str]:
@@ -86,9 +163,11 @@ class AutotuneCache:
         Identity for current and NEWER schemas (a shared cache file
         touched by binaries of different versions must not lose the
         newer entries — they are inert here, lookups only ever use the
-        current prefix).  v2 keys migrate to v3 under the generic ``-``
-        workload signature (same meaning, new shape).  Anything older
-        (unversioned v1 included) is unresolvable: None.
+        current prefix).  v3 keys migrate to v4 under the single-device
+        ``1dev`` mesh signature (they were tuned on one device — same
+        meaning, new shape); v2 keys additionally gain the generic ``-``
+        workload signature.  Anything older (unversioned v1 included) is
+        unresolvable: None.
         """
         head = key.split("|", 1)[0]
         if not head.startswith("v"):
@@ -99,10 +178,14 @@ class AutotuneCache:
             return None
         if version >= SCHEMA_VERSION:
             return key
-        if version == 2:
-            parts = key.split("|")
-            if len(parts) == 5:  # v2|kernel|sig|dtype|backend
-                return "|".join([f"v{SCHEMA_VERSION}"] + parts[1:] + ["-"])
+        parts = key.split("|")
+        if version == 3 and len(parts) == 6:
+            # v3|kernel|sig|dtype|backend|workload
+            return "|".join([f"v{SCHEMA_VERSION}"] + parts[1:] + ["1dev"])
+        if version == 2 and len(parts) == 5:
+            # v2|kernel|sig|dtype|backend
+            return "|".join([f"v{SCHEMA_VERSION}"] + parts[1:]
+                            + ["-", "1dev"])
         return None
 
     @classmethod
@@ -147,36 +230,63 @@ class AutotuneCache:
 
     # ------------------------------------------------------------------
     def get(self, kernel: str, sig: str, dtype: str, backend: str,
-            workload: str = "") -> Optional[Dict[str, Any]]:
+            workload: str = "", mesh: str = "") -> Optional[Dict[str, Any]]:
         """The cached entry ({config, value, ...}) or None."""
         with self._lock:
             entry = self._load().get(self.key(kernel, sig, dtype, backend,
-                                              workload))
+                                              workload, mesh))
         return dict(entry) if entry else None
 
     def get_config(self, kernel: str, sig: str, dtype: str, backend: str,
-                   workload: str = "") -> Optional[Dict[str, Any]]:
-        entry = self.get(kernel, sig, dtype, backend, workload)
+                   workload: str = "", mesh: str = ""
+                   ) -> Optional[Dict[str, Any]]:
+        entry = self.get(kernel, sig, dtype, backend, workload, mesh)
         return dict(entry["config"]) if entry else None
 
     def scan_workloads(self, kernel: str, sig: str, dtype: str,
-                       backend: str) -> Dict[str, Dict[str, Any]]:
-        """Every entry at this (kernel, shape, dtype, backend), keyed by
-        its workload-signature component (``-`` = workload-generic) —
-        the candidate set the online retuner's nearest-signature
-        transfer searches."""
-        prefix = self.key(kernel, sig, dtype, backend, "\0")[:-1]
+                       backend: str, mesh: str = ""
+                       ) -> Dict[str, Dict[str, Any]]:
+        """Every entry at this (kernel, shape, dtype, backend, mesh),
+        keyed by its workload-signature component (``-`` = workload-
+        generic) — the candidate set the online retuner's nearest-
+        signature transfer searches.  Scoped to ONE mesh signature:
+        workload transfer never crosses device topologies (that is
+        ``scan_meshes``'s job, and an explicit warm-start decision)."""
+        parts = self.key(kernel, sig, dtype, backend, "\0", mesh).split("|")
+        head, tail = parts[:5], parts[6]
         with self._lock:
             data = self._load()
-            return {k[len(prefix):]: dict(v) for k, v in data.items()
-                    if k.startswith(prefix)}
+            out: Dict[str, Dict[str, Any]] = {}
+            for k, v in data.items():
+                kp = k.split("|")
+                if len(kp) == 7 and kp[:5] == head and kp[6] == tail:
+                    out[kp[5]] = dict(v)
+            return out
+
+    def scan_meshes(self, kernel: str, sig: str, dtype: str,
+                    backend: str, workload: str = ""
+                    ) -> Dict[str, Dict[str, Any]]:
+        """Every entry at this (kernel, shape, dtype, backend, workload),
+        keyed by its mesh-signature component — the donor set
+        ``nearest_mesh`` warm-start transfer searches when no winner
+        exists at the deployment's own topology."""
+        parts = self.key(kernel, sig, dtype, backend, workload).split("|")
+        head = parts[:6]
+        with self._lock:
+            data = self._load()
+            out: Dict[str, Dict[str, Any]] = {}
+            for k, v in data.items():
+                kp = k.split("|")
+                if len(kp) == 7 and kp[:6] == head:
+                    out[kp[6]] = dict(v)
+            return out
 
     def put(self, kernel: str, sig: str, dtype: str, backend: str,
             config: Dict[str, Any], value: float,
             meta: Optional[Dict[str, Any]] = None,
-            workload: str = "") -> None:
+            workload: str = "", mesh: str = "") -> None:
         with self._lock:
-            key = self.key(kernel, sig, dtype, backend, workload)
+            key = self.key(kernel, sig, dtype, backend, workload, mesh)
             entry = {
                 "config": dict(config),
                 "value": float(value),

@@ -29,7 +29,11 @@ __all__ = [
     "AxisRules",
     "DEFAULT_RULES",
     "DP_ALL_RULES",
+    "KNOWN_LOGICAL_AXES",
+    "REPLICATED_AXES",
     "RULE_PRESETS",
+    "SERVE_REPLICAS_RULES",
+    "SERVE_TP_RULES",
     "axis_rules",
     "constrain",
     "spec_for_shape",
@@ -115,6 +119,16 @@ DEFAULT_RULES = AxisRules(
 # axis too; params fully replicated) — the small-model/throughput extreme.
 DP_ALL_RULES = AxisRules(batch=("pod", "data", "model"))
 
+# Serve-side presets: inference meshes are (data, model) with no pod axis,
+# and serving never FSDP-shards weights (no ``embed_fsdp``) — replicas need
+# the full parameter set resident per data-axis slice, and the TP split
+# streams each shard's own heads/ff columns.  The ``data`` axis carries
+# engine *replicas* (batch slots spread across them); the ``model`` axis is
+# the tensor-parallel split of heads / ff / vocab.
+SERVE_TP_RULES = AxisRules(batch="data", heads="model", kv_heads="model",
+                           ff="model", vocab="model", experts="model")
+SERVE_REPLICAS_RULES = AxisRules(batch="data")
+
 RULE_PRESETS: Dict[str, AxisRules] = {
     "dp": AxisRules(batch=("pod", "data")),
     "dp_all": DP_ALL_RULES,
@@ -125,7 +139,22 @@ RULE_PRESETS: Dict[str, AxisRules] = {
     "tp": AxisRules(batch=("pod", "data"), heads="model", kv_heads="model",
                     ff="model", vocab="model", experts="model"),
     "fsdp_tp": DEFAULT_RULES,
+    "serve_tp": SERVE_TP_RULES,
+    "serve_replicas": SERVE_REPLICAS_RULES,
 }
+
+# Logical axes that are *deliberately* never mapped by any preset: they
+# must stay replicated (sequence positions interleave through KV caches;
+# head_dim/conv_dim/cap tiles feed kernels whole).  ``constrain`` calls
+# naming an axis outside the preset-mapped or deliberately-replicated
+# sets silently replicate — the ``constrain-unknown-axis`` lint rule
+# flags them against this registry.
+REPLICATED_AXES = frozenset({
+    "seq", "seq_res", "embed", "head_dim", "cap", "expert_ff", "conv_dim",
+})
+
+KNOWN_LOGICAL_AXES = REPLICATED_AXES | frozenset(
+    axis for rules in RULE_PRESETS.values() for axis, _ in rules.items())
 
 
 # ---------------------------------------------------------------------------

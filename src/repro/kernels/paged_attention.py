@@ -33,9 +33,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_flash_decode_pallas", "paged_attention_ref"]
+__all__ = ["POOL_AXES", "paged_flash_decode_pallas", "paged_attention_ref",
+           "shardable_kv_heads"]
 
 NEG_INF = -1e30
+
+# Logical sharding axes of the (G, T, KV, D) KV pool this kernel streams.
+# The group and token axes are deliberately unsharded: the grid tiles ONE
+# physical group per step through the scalar-prefetched page table, so a
+# split along groups would scatter a request's logically-contiguous pages
+# across devices and break the ``index_map`` addressing.  Only the KV-head
+# axis splits (tensor parallelism): each model-axis shard streams its own
+# heads over the full pool, and the kernel's (pages_per_block x
+# PAGE_TOKENS) group tile stays aligned with the allocator's group size on
+# every shard.  ``repro.models.transformer.paged_cache_block_defs`` builds
+# pool ParamDefs from this tuple — one source for the kernel/allocator/
+# sharding coupling.
+POOL_AXES = (None, None, "kv_heads", "head_dim")
+
+
+def shardable_kv_heads(n_kv_heads: int, model_size: int) -> bool:
+    """Whether a ``model_size``-way TP split actually shards the KV pool.
+
+    Mirrors ``spec_for_shape``'s divisibility fallback for the pool's
+    ``kv_heads`` axis: when ``n_kv_heads % model_size != 0`` the pool is
+    silently *replicated* per device instead — deployable (the kernel
+    sees the full head set on every shard) but without the memory win,
+    which is why ``serve_feasibility`` surfaces it as a warn-severity
+    advisory rather than hard infeasibility.
+    """
+    m = max(1, int(model_size))
+    return m == 1 or int(n_kv_heads) % m == 0
 
 
 def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,

@@ -4,13 +4,56 @@ Runs the serve engine on this host (reduced configs by default) under
 either runtime: the continuous-batching scheduler (default; mixed prompt
 and generation lengths via ``--mixed``, tuned ``--schedule`` acting at
 admission time, ``--kv-layout paged`` for the real page allocator) or the
-legacy equal-length wave loop (``--runtime wave``).  This is the
-interactive counterpart of the decode dry-run cells.
+legacy equal-length wave loop (``--runtime wave``).  ``--mesh DxM`` runs
+the engine sharded over a (data, model) device grid — data-axis replicas
+widen slot capacity, model-axis tensor parallelism splits heads/ff — on
+CPU hosts the requested device count is faked via XLA host devices, so
+the sharded paths exercise end-to-end without an accelerator.  This is
+the interactive counterpart of the decode dry-run cells.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+
+
+def _mesh_argv(argv):
+    """The ``--mesh`` value from a raw argv, pre-argparse.
+
+    Needed before ``import jax``: on CPU hosts a multi-device mesh only
+    exists if ``XLA_FLAGS`` fakes the host devices, and that flag is
+    read once at backend init.
+    """
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def _parse_mesh(s):
+    try:
+        data, model = (int(x) for x in s.lower().split("x"))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"mesh must be DATAxMODEL (e.g. 1x2, 2x4); got {s!r}")
+    if data < 1 or model < 1:
+        raise argparse.ArgumentTypeError(f"mesh axes must be >= 1: {s!r}")
+    return (data, model)
+
+
+_mesh = _mesh_argv(sys.argv)
+if _mesh:
+    try:
+        _d, _m = (int(x) for x in _mesh.lower().split("x"))
+    except ValueError:
+        _d = _m = 1  # argparse reports the malformed value later
+    if _d * _m > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={_d * _m}")
 
 import jax
 import numpy as np
@@ -18,7 +61,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import Model
 from repro.serve import ServeConfig, ServeEngine
-from repro.serve.scheduler import PAGE_POLICIES, SCHEDULES
+from repro.serve.scheduler import PAGE_POLICIES, SCHEDULES, TP_MODES
 
 __all__ = ["main"]
 
@@ -46,6 +89,21 @@ def main(argv=None) -> int:
                          "up-front (reserve) or prompt-only + on-demand "
                          "growth with recompute preemption (on_demand)")
     ap.add_argument("--prefill-chunk", type=int, default=512)
+    ap.add_argument("--mesh", type=_parse_mesh, default=None,
+                    metavar="DATAxMODEL",
+                    help="run sharded over a (data, model) device grid, "
+                         "e.g. 2x1 (two replicated engines), 1x2 (one "
+                         "2-way tensor-parallel engine), 2x4; CPU hosts "
+                         "fake the devices via XLA_FLAGS automatically")
+    ap.add_argument("--rules-preset", choices=("serve_tp", "serve_replicas"),
+                    default="serve_tp",
+                    help="logical-axis sharding rules for the mesh "
+                         "(serve_tp also covers pure-replica meshes: its "
+                         "size-1 model axis drops out)")
+    ap.add_argument("--tp-vs-replicas", choices=TP_MODES, default="tp",
+                    help="how a flat tuned device count would map onto "
+                         "the mesh (recorded on the config; --mesh fixes "
+                         "the grid explicitly)")
     ap.add_argument("--mixed", action="store_true",
                     help="mixed-length workload: prompt lengths in "
                          "[2, prompt-len], generation lengths in "
@@ -76,7 +134,9 @@ def main(argv=None) -> int:
         kv_cache_pages=args.kv_pages, schedule=args.schedule,
         page_policy=args.page_policy, prefill_chunk=args.prefill_chunk,
         retune=args.retune, retune_threshold=args.retune_threshold,
-        retune_budget=args.retune_budget))
+        retune_budget=args.retune_budget, mesh_shape=args.mesh,
+        rules_preset=args.rules_preset,
+        tp_vs_replicas=args.tp_vs_replicas))
     rng = np.random.default_rng(args.seed)
     if args.mixed and engine._continuous:
         plens = rng.integers(2, args.prompt_len + 1, size=args.requests)
@@ -106,6 +166,9 @@ def main(argv=None) -> int:
     res = engine.generate(prompts, max_new, frontend_embeds=fe)
     mode = f"{args.runtime}/{args.kv_layout}/{args.schedule}" \
         if engine._continuous else "wave"
+    if engine.mesh is not None:
+        d, m = engine.mesh_shape
+        mode += f"/mesh{d}x{m}({args.rules_preset})"
     print(f"{cfg.name} [{mode}]: {args.requests} requests, "
           f"prefill {res.prefill_seconds:.2f}s, "
           f"decode {res.decode_seconds:.2f}s "

@@ -14,7 +14,10 @@ Four modes:
   the serve engine, and bare ``repro.kernels.ops`` calls) consult.
 * ``--joint`` — cross-system co-tuning: the serve engine's knobs AND the
   decode kernel's block config as ONE ``CompositeSUT`` under one budget
-  (BestConfig-style subspace round-robin by default).  The default scorer
+  (BestConfig-style subspace round-robin by default); ``--max-devices N``
+  widens the serve subspace with sharding knobs (device count ×
+  tp-vs-replicas layout) so the mesh is co-tuned too and the winner
+  persists under its mesh-topology cache key.  The default scorer
   is the analytic co-deployment surrogate (``repro.serve.space``; the
   CI/benchmark path); ``--real`` instead wall-clocks the LIVE system per
   trial — the real ``ServeEngine`` rebuilt and timed under each candidate
@@ -79,7 +82,8 @@ def _joint_main(args) -> int:
         sut = make_live_cotune_sut(model_cfg, max_seq=max_seq,
                                    train_seq=train_seq,
                                    train_batch=train_batch, seed=args.seed,
-                                   repeats=args.real_repeats)
+                                   repeats=args.real_repeats,
+                                   max_devices=args.max_devices)
         mode = "joint-real"
         dtype = model_cfg.compute_dtype
         # Honest provenance: the live kernel member scored every candidate
@@ -101,7 +105,7 @@ def _joint_main(args) -> int:
                   "step instead, or --surrogate to silence this note)")
         params = CotuneParams.from_model(cfg,
                                          max_seq=min(shape.seq_len, 32768))
-        sut = make_cotune_sut(params)
+        sut = make_cotune_sut(params, max_devices=args.max_devices)
         mode = "joint-surrogate"
         dtype = params.dtype
         kernel_sig_dims = None  # tuned-batch decode dims, known post-run
@@ -129,8 +133,19 @@ def _joint_main(args) -> int:
     cache.put("decode_attention", autotune.shape_sig(kernel_sig_dims),
               dtype, autotune.backend_name(), kernel_cfg,
               rep.best_metric.value, meta=meta)
+    # The serve winner keys at the mesh topology its own knobs chose:
+    # a tuned 4-way TP layout must never be resolved by (or clobber)
+    # the single-device entry the unsharded engine deploys from.
+    n_dev = int(serve_cfg.get("mesh_devices", 1))
+    if n_dev > 1 and str(serve_cfg.get("tp_vs_replicas")) == "replicas":
+        winner_mesh = autotune.mesh_sig((n_dev, 1))
+    elif n_dev > 1:
+        winner_mesh = autotune.mesh_sig((1, n_dev))
+    else:
+        winner_mesh = autotune.mesh_sig(None)
     autotune.put_serve_config(serve_sig_dims, dtype, serve_cfg,
-                              rep.best_metric.value, cache=cache, meta=meta)
+                              rep.best_metric.value, cache=cache, meta=meta,
+                              mesh=winner_mesh)
     if train_cfg is not None:
         train_sig_dims = dict(serve_sig_dims, S=train_seq, B=train_batch)
         autotune.put_train_config(train_sig_dims, dtype, train_cfg,
@@ -190,6 +205,13 @@ def main(argv=None) -> int:
                          "(reduced model on CPU hosts; warmup-trimmed "
                          "median timing); adds train-step knobs to the "
                          "composite and persists their winner too")
+    ap.add_argument("--max-devices", type=int, default=1,
+                    help="with --joint: widen the serve subspace with "
+                         "sharding knobs (mesh_devices in powers of two "
+                         "up to this count, tp_vs_replicas) so layout is "
+                         "co-tuned with schedule and kernel blocks; the "
+                         "winner persists under its mesh-topology cache "
+                         "key; 1 = the historical unsharded space")
     ap.add_argument("--real-repeats", type=int, default=3,
                     help="with --joint --real: timed repeats per trial "
                          "(median taken); 1 = fastest smoke, 3 = default "

@@ -167,16 +167,18 @@ def paged_cache_block_defs(cfg: ModelConfig, kind: str, n_groups: int,
     attention kinds are pageable (``Model.supports_continuous_batching``
     gates the rest to the wave runtime)."""
     if kind in ("attn", "moe", "dec", "shared"):
+        from repro.kernels.paged_attention import POOL_AXES
         from repro.models.common import zeros_init
 
         KV, Dh = cfg.n_kv_heads, cfg.head_dim_
         dt = dtype_of(cfg.compute_dtype)
+        # POOL_AXES is the paged kernel's layout contract: only the
+        # kv_heads axis may shard (model-axis TP); groups stay whole so
+        # the page-table index_map addresses every shard identically.
         return {
-            "k": ParamDef((n_groups, group_tokens, KV, Dh),
-                          (None, None, "kv_heads", "head_dim"),
+            "k": ParamDef((n_groups, group_tokens, KV, Dh), POOL_AXES,
                           zeros_init(), dt),
-            "v": ParamDef((n_groups, group_tokens, KV, Dh),
-                          (None, None, "kv_heads", "head_dim"),
+            "v": ParamDef((n_groups, group_tokens, KV, Dh), POOL_AXES,
                           zeros_init(), dt),
         }
     if kind == "cross":
@@ -690,6 +692,14 @@ class Model:
         return init_params(paged_cache_defs(self.cfg, n_groups,
                                             group_tokens),
                            jax.random.PRNGKey(0))
+
+    def paged_cache_specs(self, n_groups: int, group_tokens: int, rules,
+                          mesh):
+        """PartitionSpecs matching ``init_paged_cache``'s tree: page
+        groups stay whole per device, the KV-head axis follows the rule
+        table's model-axis split (``POOL_AXES``)."""
+        return param_specs(paged_cache_defs(self.cfg, n_groups,
+                                            group_tokens), rules, mesh)
 
     def decode_step_multi(self, params, tokens, cache, lengths,
                           page_table=None):

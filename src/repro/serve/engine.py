@@ -29,22 +29,27 @@ decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
+import functools
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.dist.sharding import RULE_PRESETS, axis_rules
 from repro.models import Model
 
 from .paging import (PAGE_TOKENS, OversubscriptionError, PageAllocator,
                      PrefixIndex, min_pages_for)
-from .scheduler import PAGE_POLICIES, SCHEDULES, Request, SlotScheduler
+from .scheduler import (PAGE_POLICIES, SCHEDULES, TP_MODES, Request,
+                        SlotScheduler)
 
 __all__ = ["ServeConfig", "ServeEngine", "GenerationResult",
-           "OversubscriptionError"]
+           "OversubscriptionError", "TP_MODES"]
 
 RUNTIMES = ("continuous", "wave")
 KV_LAYOUTS = ("dense", "paged")
@@ -172,6 +177,27 @@ class ServeConfig:
     # cost is paid once per (shape, dtype, backend)).
     autotune_kernels: bool = False
     autotune_budget: int = 12
+    # Multi-device serving: a (data, model) mesh shape (None = single
+    # device).  The ``model`` axis is the tensor-parallel split — heads /
+    # ff / vocab columns (and the paged pool's KV-head axis) shard across
+    # it and every decode step all-reduces partial sums.  The ``data``
+    # axis carries engine REPLICAS: batch slots spread over it and the
+    # engine widens slot/page capacity ×data, so the config's
+    # batch_slots / kv_cache_pages stay per-replica quantities.  Both
+    # layouts (and the meshes between) are tuned knobs —
+    # ``serve_knob_space(max_devices=...)`` exposes ``mesh_devices`` /
+    # ``tp_vs_replicas`` and the joint mode co-tunes them with schedule,
+    # page policy and kernel blocks.
+    mesh_shape: Optional[Tuple[int, int]] = None
+    # AxisRules preset (repro.dist.sharding.RULE_PRESETS) activated for
+    # sharded generation.  "serve_tp" is safe for every mesh shape: on a
+    # (K, 1) replicas mesh its model-axis mappings drop (size-1 axis) and
+    # it degenerates to "serve_replicas" exactly.
+    rules_preset: str = "serve_tp"
+    # Which mesh orientation a flat tuned device count maps to (TP_MODES;
+    # ``apply_serve_knobs`` writes the resolved mesh_shape from it) —
+    # recorded here so deployed configs carry the tuner's choice.
+    tp_vs_replicas: str = "tp"
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -206,6 +232,18 @@ class ServeConfig:
                 raise ValueError(f"{knob} must be >= 1")
         if self.retune_threshold < 0:
             raise ValueError("retune_threshold must be >= 0")
+        if self.rules_preset not in RULE_PRESETS:
+            raise ValueError(f"unknown rules_preset {self.rules_preset!r}; "
+                             f"have {sorted(RULE_PRESETS)}")
+        if self.tp_vs_replicas not in TP_MODES:
+            raise ValueError(f"unknown tp_vs_replicas "
+                             f"{self.tp_vs_replicas!r}; have {TP_MODES}")
+        if self.mesh_shape is not None:
+            ms = tuple(int(x) for x in self.mesh_shape)
+            if len(ms) != 2 or any(x < 1 for x in ms):
+                raise ValueError(f"mesh_shape must be a (data, model) pair "
+                                 f"of positive ints; got {self.mesh_shape!r}")
+            self.mesh_shape = ms
         paged = self.runtime == "continuous" and self.kv_layout == "paged"
         needed = self.batch_slots * self.max_seq
         # remember auto-sizing: the engine re-derives a full-residency pool
@@ -317,6 +355,33 @@ class ServeEngine:
         orig = cfg
         self.cfg = cfg = dataclasses.replace(cfg)
         cfg._kv_pages_auto = getattr(orig, "_kv_pages_auto", False)
+        # --- mesh resolution: the (data, model) device grid ------------
+        self.mesh = None
+        self.rules = RULE_PRESETS[cfg.rules_preset]
+        data, tp = cfg.mesh_shape or (1, 1)
+        self.mesh_shape = (data, tp)
+        if data * tp > 1:
+            n_dev = len(jax.devices())
+            if n_dev % (data * tp):
+                raise ValueError(
+                    f"mesh_shape {self.mesh_shape} needs {data * tp} "
+                    f"devices evenly out of {n_dev} available")
+            from repro.launch.mesh import make_mesh
+
+            self.mesh = make_mesh(data, tp)
+            if data > 1:
+                # replicas widening: the config's capacity knobs are
+                # per-data-slice, so the flat engine runs data× of them
+                # (each replica's slots/pool shard onto its own slice)
+                cfg.batch_slots *= data
+                if cfg.slot_cap is not None:
+                    cfg.slot_cap *= data
+                if not cfg._kv_pages_auto:
+                    cfg.kv_cache_pages *= data
+                elif cfg.kv_layout != "paged":
+                    # auto dense footprint: re-derive at the widened slots
+                    cfg.kv_cache_pages = -(-cfg.batch_slots * cfg.max_seq
+                                           // PAGE_TOKENS)
         self._continuous = (cfg.runtime == "continuous"
                             and model.supports_continuous_batching)
         self._paged = self._continuous and cfg.kv_layout == "paged"
@@ -342,13 +407,20 @@ class ServeEngine:
                  "D": mcfg.head_dim_})
         if self._paged:
             self._size_paged_pool()
-        self._prefill = jax.jit(model.prefill)
-        self._prefill_chunk = jax.jit(model.prefill_chunk)
-        self._decode = jax.jit(model.decode_step)
+        if self.mesh is not None:
+            # lay the weights out per the rule table up front: heads/ff
+            # columns land on their model-axis shard once, and every jit
+            # below traces against committed sharded inputs
+            self.params = self._shard_tree(
+                self.params, model.param_specs(self.rules, self.mesh))
+        jit = jax.jit if self.mesh is None else self._jit_mesh_keyed
+        self._prefill = jit(model.prefill)
+        self._prefill_chunk = jit(model.prefill_chunk)
+        self._decode = jit(model.decode_step)
         if self._continuous:
-            self._decode_multi = jax.jit(model.decode_step_multi)
-            self._slot_chunk = jax.jit(model.prefill_chunk_slot)
-            self._slot_chunk_paged = jax.jit(model.prefill_chunk_slot_paged)
+            self._decode_multi = jit(model.decode_step_multi)
+            self._slot_chunk = jit(model.prefill_chunk_slot)
+            self._slot_chunk_paged = jit(model.prefill_chunk_slot_paged)
             self._argmax_multi = jax.jit(self._greedy_rows)
             self._categorical_multi = jax.jit(self._categorical_rows)
             self._argmax_grid = jax.jit(self._greedy_grid)
@@ -362,6 +434,44 @@ class ServeEngine:
         return autotune.ensure_tuned(kernel, dims,
                                      dtype=self.model.cfg.compute_dtype,
                                      budget=self.cfg.autotune_budget)
+
+    def _shard_tree(self, tree, specs):
+        """device_put a pytree onto the mesh with per-leaf NamedShardings.
+
+        ``specs`` mirrors ``tree`` with a PartitionSpec at every array
+        position; since PartitionSpec is itself a tuple the spec tree is
+        flattened only UP TO the data tree's structure (never into the
+        specs themselves)."""
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        sflat = treedef.flatten_up_to(specs)
+        put = [jax.device_put(x, NamedSharding(self.mesh,
+                                               PartitionSpec(*s)))
+               for x, s in zip(flat, sflat)]
+        return jax.tree_util.tree_unflatten(treedef, put)
+
+    def _jit_mesh_keyed(self, fn):
+        """``jax.jit`` with the trace cache keyed to THIS engine.
+
+        Bound methods of a shared ``Model`` hash equal across engines, and
+        jax's jaxpr-tracing cache does not see the ambient mesh that
+        ``constrain`` captures at trace time — so two sharded engines over
+        the same model with coinciding avals (e.g. a (2,1) and a (2,2)
+        mesh both widen slots x2) would hand each other jaxprs whose
+        sharding constraints pin the OTHER engine's devices.  A per-engine
+        closure (identity-hashed) makes the reuse impossible."""
+        @functools.wraps(fn)
+        def keyed(*args, **kwargs):
+            return fn(*args, **kwargs)
+        return jax.jit(keyed)
+
+    def _sharding_ctx(self):
+        """The ``axis_rules`` context generation runs under: tracing the
+        jitted steps inside it attaches ``constrain`` activation
+        constraints for this engine's rule table + mesh.  Single-device
+        engines get a no-op context — same code path, unsharded."""
+        if self.mesh is None:
+            return nullcontext()
+        return axis_rules(self.rules, self.mesh)
 
     def _size_paged_pool(self) -> None:
         """Fix the pool geometry: group size (pages), groups per request,
@@ -457,6 +567,8 @@ class ServeEngine:
         SAME shape signature ``launch/tune.py`` uses, so online winners
         and offline joint-tune winners transfer both ways through
         nearest-signature lookup."""
+        from repro.autotune import mesh_sig
+
         from .space import CotuneParams, serve_knob_space
         from .workload import OnlineRetuner
 
@@ -489,7 +601,10 @@ class ServeEngine:
             cooldown=cfg.retune_cooldown,
             check_every=cfg.retune_check_every, seed=cfg.seed,
             active_config=active, sig_dims=sig_dims,
-            dtype=mcfg.compute_dtype)
+            dtype=mcfg.compute_dtype,
+            # winners persist/resolve at THIS engine's topology only
+            # (schema v4 keys by mesh signature)
+            mesh=mesh_sig(self.mesh_shape))
 
     # ------------------------------------------------------------------
     def generate(
@@ -528,10 +643,11 @@ class ServeEngine:
         for p, m in zip(prompts, max_new):
             if len(p) + m > self.cfg.max_seq:
                 raise ValueError("prompt + generation exceeds max_seq")
-        if self._continuous:
-            return self._generate_continuous(prompts, max_new,
-                                             frontend_embeds)
-        return self._generate_waves(prompts, max_new, frontend_embeds)
+        with self._sharding_ctx():
+            if self._continuous:
+                return self._generate_continuous(prompts, max_new,
+                                                 frontend_embeds)
+            return self._generate_waves(prompts, max_new, frontend_embeds)
 
     # ------------------------------------------------------------------
     # wave runtime (legacy exact-parity path)
@@ -743,6 +859,13 @@ class ServeEngine:
         if self._paged:
             cache = self.model.init_paged_cache(self.pool_groups,
                                                 self.group_tokens)
+            if self.mesh is not None:
+                # POOL_AXES: page groups stay whole per device, only the
+                # KV-head axis follows the model-axis split
+                cache = self._shard_tree(
+                    cache, self.model.paged_cache_specs(
+                        self.pool_groups, self.group_tokens,
+                        self.rules, self.mesh))
             if mcfg.frontend or mcfg.encoder:
                 from repro.models.common import dtype_of
 
@@ -752,6 +875,11 @@ class ServeEngine:
         else:
             cache = self.model.init_cache(B, max_seq=self.cfg.max_seq)
             cache.pop("index", None)  # lengths are per-slot host state
+            if self.mesh is not None:
+                specs = self.model.cache_specs(B, self.cfg.max_seq,
+                                               self.rules, self.mesh)
+                specs.pop("index", None)
+                cache = self._shard_tree(cache, specs)
         return cache
 
     def _generate_continuous(self, prompts, max_new: List[int],

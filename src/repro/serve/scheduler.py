@@ -42,11 +42,36 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence
 
-__all__ = ["SCHEDULES", "PAGE_POLICIES", "Request", "SlotScheduler",
-           "admission_order"]
+__all__ = ["SCHEDULES", "PAGE_POLICIES", "TP_MODES", "Request",
+           "SlotScheduler", "admission_order", "replica_slices"]
 
 SCHEDULES = ("fifo", "sjf", "interleave")
 PAGE_POLICIES = ("reserve", "on_demand")
+# How a flat tuned device count maps onto the serve engine's
+# (data, model) mesh: "tp" puts every device on the model axis (one
+# tensor-parallel engine — heads/ff shard, steps all-reduce), "replicas"
+# on the data axis (replicated engines — batch slots spread, capacity
+# widens ×K).  A scheduling vocabulary, not a jax concern: the tuning
+# space and the feasibility predicates read it without importing jax.
+TP_MODES = ("tp", "replicas")
+
+
+def replica_slices(n_slots: int, data: int) -> List[range]:
+    """Slot index ranges per data-axis replica for a widened engine.
+
+    The engine widens ``batch_slots`` ×``data`` and shards the slot axis,
+    so replica ``i`` owns the contiguous block
+    ``[i * n_slots/data, (i+1) * n_slots/data)`` — the occupancy view the
+    surrogate's replica terms model and the bench's per-replica dispatch
+    accounting reads.  ``n_slots`` must divide evenly (the engine
+    guarantees it by construction: widened = per-replica × data).
+    """
+    data = max(1, int(data))
+    if n_slots % data:
+        raise ValueError(f"{n_slots} slots do not split over {data} "
+                         f"replicas evenly")
+    per = n_slots // data
+    return [range(i * per, (i + 1) * per) for i in range(data)]
 
 # bounded sjf admission-bypass window: how many pending requests past a
 # non-fitting head the engine may scan for one that fits the page pool

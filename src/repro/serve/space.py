@@ -47,12 +47,13 @@ from repro.core.surrogates import Surrogate
 from repro.core.tuner import PerfMetric
 
 from .paging import PAGE_TOKENS
-from .scheduler import PAGE_POLICIES, SCHEDULES
+from .scheduler import PAGE_POLICIES, SCHEDULES, TP_MODES
 
 __all__ = [
     "PAGE_TOKENS",
     "SCHEDULES",
     "PAGE_POLICIES",
+    "TP_MODES",
     "serve_knob_space",
     "apply_serve_knobs",
     "kv_floor_raise_count",
@@ -71,8 +72,8 @@ __all__ = [
 # scheduler, both numpy-only) and re-exported here for the tuning stack.
 
 
-def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
-                     ) -> ParameterSpace:
+def serve_knob_space(max_seq: int = 2048, max_slots: int = 64,
+                     max_devices: int = 1) -> ParameterSpace:
     """The serve engine's tunable knobs (``ServeConfig`` fields).
 
     The KV-page range scales with ``max_seq`` so the knob always spans
@@ -85,6 +86,12 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
     they are the historical (128, ..., 2048) set.  ``max_slots`` bounds
     the batch-slot knob — live tuning on small hosts caps it so candidate
     engines stay buildable.
+
+    ``max_devices > 1`` widens the space with the SHARDING subspace:
+    ``mesh_devices`` (powers of two up to the host's device count) and
+    ``tp_vs_replicas`` (which mesh axis those devices land on).  The
+    default keeps the historical single-device space — existing cached
+    winners and tests see the exact same knob set.
     """
     page_per_seq = max(1, max_seq // PAGE_TOKENS)
     chunk_lo = max(8, min(128, max_seq // 16))
@@ -92,7 +99,22 @@ def serve_knob_space(max_seq: int = 2048, max_slots: int = 64
         c for c in (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
         if chunk_lo <= c <= max_seq) or (max_seq,)
     default_slots = min(8, max_slots)
-    return ParameterSpace([
+    mesh_knobs = []
+    if max_devices > 1:
+        dev_choices = tuple(d for d in (1, 2, 4, 8, 16, 32, 64)
+                            if d <= max_devices)
+        mesh_knobs = [
+            # how many devices the deployed engine spans (1 = unsharded);
+            # powers of two so every choice tiles a (data, model) mesh
+            EnumParam("mesh_devices", dev_choices, 1),
+            # which mesh axis they land on: one K-way tensor-parallel
+            # engine (smaller steps, all-reduce per step) vs K replicated
+            # engines (K× slot/pool capacity, no collectives) — the
+            # optimum flips with queue pressure, which is exactly why the
+            # layout is tuned with the schedule instead of hard-coded
+            EnumParam("tp_vs_replicas", TP_MODES, "tp"),
+        ]
+    return ParameterSpace(mesh_knobs + [
         # engine batch slots (ServeConfig.batch_slots)
         IntParam("max_batch", 1, max_slots, default=default_slots, log=True),
         # prefill split size: scheduler granularity vs per-chunk overhead
@@ -183,6 +205,20 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
                 f"config the tuner scored — re-tune under "
                 f"serve_feasibility to make the winner deployable as-is",
                 RuntimeWarning, stacklevel=2)
+    # sharding subspace -> a concrete (data, model) mesh.  Absent in
+    # single-device spaces and pre-PR9 cached winners: keep the base's
+    # mesh then.  A tuned mesh_devices=1 explicitly CLEARS the base mesh —
+    # "unsharded" was the winner, not an unexpressed opinion.
+    tp_mode = str(config.get("tp_vs_replicas", base.tp_vs_replicas))
+    mesh_shape = base.mesh_shape
+    if "mesh_devices" in config:
+        n_dev = int(config["mesh_devices"])
+        if n_dev <= 1:
+            mesh_shape = None
+        elif tp_mode == "replicas":
+            mesh_shape = (n_dev, 1)
+        else:
+            mesh_shape = (1, n_dev)
     return replace(
         base,
         batch_slots=slots,
@@ -195,6 +231,8 @@ def apply_serve_knobs(config: Config, base: Optional[Any] = None):
         share_prefix=bool(int(config.get(
             "share_prefix", 1 if base.share_prefix else 0))),
         draft_len=int(config.get("draft_len", base.draft_len)),
+        mesh_shape=mesh_shape,
+        tp_vs_replicas=tp_mode,
     )
 
 
@@ -248,6 +286,16 @@ class CotuneParams:
     prefix_share_frac: float = 0.25
     spec_accept: float = 0.6
     draft_token_s: float = 1e-5
+    # tensor-parallel communication terms: every decode step all-reduces
+    # the attention and MLP outputs once per layer (2 collectives/layer),
+    # each paying a fixed latency floor plus a ring term proportional to
+    # the activation bytes that cross devices ((m-1)/m of them on an
+    # m-way model axis).  Without this term TP would dominate replicas
+    # unconditionally — the comm floor is what makes the layout a real
+    # batch-pressure-dependent trade (the rank-pin test holds the
+    # surrogate to the fake-device engine's step counts on both sides).
+    allreduce_base_s: float = 3e-5
+    allreduce_byte_s: float = 5e-9
 
     @classmethod
     def from_model(cls, cfg, max_seq: int = 2048, **kw) -> "CotuneParams":
@@ -365,6 +413,18 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     policy = str(serve_cfg.get("page_policy", "reserve"))
     share = bool(int(serve_cfg.get("share_prefix", 0)))
     k_draft = int(serve_cfg.get("draft_len", 0))
+    # sharding subspace (absent = single device, the historical space):
+    # "replicas" widens capacity ×r with replicated weights and no
+    # collectives; "tp" shards the per-step compute m ways and pays the
+    # all-reduce — exactly the engine's mesh orientation semantics
+    n_dev = int(serve_cfg.get("mesh_devices", 1))
+    tp_mode = str(serve_cfg.get("tp_vs_replicas", "tp"))
+    r_rep = n_dev if (n_dev > 1 and tp_mode == "replicas") else 1
+    m_tp = n_dev if (n_dev > 1 and tp_mode == "tp") else 1
+    # TP only shards attention when the head count divides the model
+    # axis (spec_for_shape's divisibility fallback replicates otherwise);
+    # the weight stream still shrinks — ff/vocab columns shard regardless
+    m_eff = m_tp if p.heads % m_tp == 0 else 1
 
     # prefix sharing stores the workload's repeated prompt fraction once
     # (copy-on-write groups) and skips its prefill: each request's
@@ -387,20 +447,37 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     else:
         groups_per_req = groups_worst
     c_pages = max(1, (pages - 1) // groups_per_req)
-    C = max(1, min(B, c_pages, p.n_requests))
+    # replicas widen capacity ×r (the knobs are per-replica quantities,
+    # matching ServeConfig semantics); each replica hosts c_rep of the C
+    # total residents and the replicas step in lockstep
+    C = max(1, min(B * r_rep, c_pages * r_rep, p.n_requests))
+    c_rep = -(-C // r_rep)
 
-    attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, C, p)
-    step_s = (p.weight_stream_s + C * p.per_token_s + attn_s
-              + B * p.slot_dispatch_s + pages * p.page_table_s)
+    attn_s = p.n_layers * _attn_step_seconds(kernel_cfg, c_rep, p) / m_eff
+    step_s = (p.weight_stream_s / m_tp + c_rep * p.per_token_s + attn_s
+              + B * r_rep * p.slot_dispatch_s
+              + pages * r_rep * p.page_table_s)
+    comm_s = 0.0
+    if m_tp > 1:
+        # per-step collectives: 2 all-reduces per layer (attention + MLP
+        # outputs), fixed latency floor + ring bytes ∝ (m-1)/m — the cost
+        # that makes replicas-vs-TP flip with batch pressure instead of
+        # TP dominating unconditionally
+        act_bytes = c_rep * p.heads * p.head_dim * _dtype_bytes(p.dtype)
+        comm_s = p.n_layers * 2 * (
+            p.allreduce_base_s
+            + p.allreduce_byte_s * act_bytes * (m_tp - 1) / m_tp)
+        step_s += comm_s
     if policy == "on_demand":  # per-step reservation-growth bookkeeping
-        step_s += C * p.extend_check_s
+        step_s += c_rep * p.extend_check_s
 
     # prefill: ceil(prompt/chunk) chunks, each paying fixed overhead —
-    # over the NON-shared tail only (shared groups are already resident)
+    # over the NON-shared tail only (shared groups are already resident);
+    # TP shards the prefill flops with the same head-divisibility gate
     chunk = min(chunk, max(int(math.ceil(prompt_eff)), 1))
     n_chunks = math.ceil(prompt_eff / chunk)
     prefill_s = n_chunks * (p.prefill_chunk_overhead_s
-                            + chunk * p.prefill_tok_s)
+                            + chunk * p.prefill_tok_s / m_eff)
 
     # recompute tax: admitting past the preemption-free concurrency means
     # some requests outgrow the pool mid-decode, get preempted and
@@ -408,8 +485,10 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
     # over-admission (zero when the pool covers the worst case at C)
     preempt_frac = 0.0
     if policy == "on_demand":
-        c_worst = max(1, min(B, max(1, (pages - 1) // groups_worst),
-                             p.n_requests))
+        c_worst = max(1, min(
+            B * r_rep,
+            max(1, (pages - 1) // groups_worst) * r_rep,
+            p.n_requests))
         preempt_frac = max(0.0, 1.0 - c_worst / float(C))
         prefill_s *= 1.0 + p.preempt_recompute * preempt_frac
 
@@ -429,10 +508,12 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
 
     g = p.gen_len
     decode_cycle = g / spec_E * step_eff
+    # fifo/sjf admission stalls are paid per REPLICA (each replica's loop
+    # prefills its own c_rep admissions; replicas stall in parallel)
     if schedule == "interleave":
         denom = decode_cycle * p.interleave_step_factor + prefill_s
     else:
-        denom = decode_cycle + C * prefill_s
+        denom = decode_cycle + c_rep * prefill_s
     tput = C * g / denom
 
     # mean latency: service at residency C + queue wait behind R requests
@@ -450,7 +531,12 @@ def coupled_serve_metrics(serve_cfg: Config, kernel_cfg: Config,
         metrics={"raw_throughput": float(tput), "latency_s": float(latency),
                  "step_s": float(step_s), "attn_s": float(attn_s),
                  "prefill_s": float(prefill_s),
-                 "resident": float(C), "kv_util": float(C) / float(B),
+                 "resident": float(C),
+                 "resident_per_replica": float(c_rep),
+                 "kv_util": float(C) / float(B * r_rep),
+                 "mesh_devices": int(n_dev),
+                 "tp_vs_replicas": tp_mode,
+                 "comm_s": float(comm_s),
                  "page_policy": policy,
                  "preempt_frac": float(preempt_frac),
                  "share_prefix": bool(share),
@@ -468,22 +554,30 @@ class ServeSurrogate(Surrogate):
     name = "serve"
 
     def __init__(self, params: Optional[CotuneParams] = None,
-                 kernel_cfg: Optional[Config] = None):
+                 kernel_cfg: Optional[Config] = None,
+                 max_devices: int = 1):
         self.params = params or CotuneParams()
         self.kernel_cfg = dict(kernel_cfg) if kernel_cfg \
             else self.params.default_kernel_config()
+        self.max_devices = int(max_devices)
 
     def space(self) -> ParameterSpace:
-        return serve_knob_space(self.params.max_seq)
+        return serve_knob_space(self.params.max_seq,
+                                max_devices=self.max_devices)
 
     @property
     def feasibility_model(self):
         """Deployability floor of the paged continuous runtime the
         surrogate models — configs ``apply_serve_knobs`` would mutate are
-        pruned before they burn a test."""
+        pruned before they burn a test (including undeployable meshes:
+        device counts that don't divide the host and head counts the
+        model axis can't split)."""
         from repro.analysis.feasibility import serve_feasibility
 
-        return serve_feasibility(self.params.max_seq)
+        return serve_feasibility(self.params.max_seq,
+                                 n_devices=self.max_devices,
+                                 n_heads=self.params.heads,
+                                 n_kv_heads=self.params.kv_heads)
 
     def test_batch(self, configs: Sequence[Config]) -> List[PerfMetric]:
         return [coupled_serve_metrics(c, self.kernel_cfg, self.params)
@@ -535,12 +629,14 @@ class LiveServeSUT:
     def __init__(self, model, params, base: Optional[Any] = None,
                  prompt_len: int = 32, gen_len: int = 8,
                  n_requests: int = 8, warmup: int = 1, repeats: int = 3,
-                 seed: int = 0, max_slots: int = 64):
+                 seed: int = 0, max_slots: int = 64,
+                 max_devices: int = 1):
         from .engine import ServeConfig
 
         self.model = model
         self.params = params
         self.base = base or ServeConfig(max_seq=128)
+        self.max_devices = int(max_devices)
         if prompt_len + gen_len > self.base.max_seq:
             raise ValueError("prompt_len + gen_len exceeds the serving "
                              f"window ({self.base.max_seq})")
@@ -562,21 +658,26 @@ class LiveServeSUT:
         self.name = f"serve-live[{model.cfg.name}]"
 
     def space(self) -> ParameterSpace:
-        return serve_knob_space(self.base.max_seq, self.max_slots)
+        return serve_knob_space(self.base.max_seq, self.max_slots,
+                                max_devices=self.max_devices)
 
     @property
     def feasibility_model(self):
         """The deployability floor of THIS deployment base: a below-floor
         candidate would not build the engine the knobs describe
-        (``apply_serve_knobs`` would silently resize it), and on the live
-        path each such trial would also pay an XLA compile to score a
-        mutated config."""
+        (``apply_serve_knobs`` would silently resize it), a mesh the host
+        cannot tile would refuse to build at all, and on the live path
+        each such trial would also pay an XLA compile to score a mutated
+        config."""
         from repro.analysis.feasibility import serve_feasibility
 
         return serve_feasibility(
             self.base.max_seq, runtime=self.base.runtime,
             kv_layout=self.base.kv_layout,
-            kv_page_block=self.base.kv_page_block)
+            kv_page_block=self.base.kv_page_block,
+            n_devices=self.max_devices,
+            n_heads=self.model.cfg.padded_heads,
+            n_kv_heads=self.model.cfg.n_kv_heads)
 
     def test(self, config: Config) -> PerfMetric:
         from repro.core.sut_jax import median_wall_clock
@@ -660,8 +761,8 @@ def make_live_cotune_sut(model_cfg, *, max_seq: int = 128,
                          n_requests: int = 8, max_slots: int = 8,
                          train_seq: int = 32, train_batch: int = 8,
                          warmup: int = 1, repeats: int = 3, seed: int = 0,
-                         sla_s: float = 0.0,
-                         train_weight: float = 0.25) -> CompositeSUT:
+                         sla_s: float = 0.0, train_weight: float = 0.25,
+                         max_devices: int = 1) -> CompositeSUT:
     """Serve engine + train step + decode kernel as ONE live SUT.
 
     Unlike ``make_cotune_sut`` (the analytic surrogate), every serve/train
@@ -690,7 +791,7 @@ def make_live_cotune_sut(model_cfg, *, max_seq: int = 128,
     serve = LiveServeSUT(model, params, base=base, prompt_len=prompt_len,
                          gen_len=gen_len, n_requests=n_requests,
                          warmup=warmup, repeats=repeats, seed=seed,
-                         max_slots=max_slots)
+                         max_slots=max_slots, max_devices=max_devices)
     train = TrainStepSUT(model_cfg, seq_len=train_seq,
                          global_batch=train_batch, warmup=warmup,
                          repeats=repeats, seed=seed)
@@ -709,14 +810,17 @@ def make_live_cotune_sut(model_cfg, *, max_seq: int = 128,
     )
 
 
-def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
+def make_cotune_sut(params: Optional[CotuneParams] = None,
+                    max_devices: int = 1) -> CompositeSUT:
     """Serve engine + decode kernel as one SUT under one budget.
 
     The serve subsystem is config-only: its end-to-end measurement IS the
     scalarizer (which needs the kernel blocks), so a standalone serve
     evaluation would be recomputed-and-discarded work.  The kernel member
     still runs — its microbenchmark cost is the ``kernel_alone_s``
-    provenance in every joint metric.
+    provenance in every joint metric.  ``max_devices > 1`` widens the
+    serve member with the sharding subspace, so the joint mode co-tunes
+    layout with schedule/pager/kernel blocks.
     """
     from repro.analysis.feasibility import serve_feasibility
     from repro.autotune.sut import KernelSUT
@@ -725,7 +829,8 @@ def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
     default_batch = int(serve_knob_space(params.max_seq)["max_batch"].default)
     return CompositeSUT(
         {
-            "serve": serve_knob_space(params.max_seq),
+            "serve": serve_knob_space(params.max_seq,
+                                      max_devices=max_devices),
             # the kernel team's microbenchmark shape: stock serve batch,
             # no co-residency — exactly what tuning it in isolation sees
             "kernel": KernelSUT("decode_attention",
@@ -737,5 +842,7 @@ def make_cotune_sut(params: Optional[CotuneParams] = None) -> CompositeSUT:
         # the serve member is config-only (a bare space has no SUT to
         # carry a model), so its deployability predicates attach here;
         # the kernel member's model is auto-detected off the KernelSUT
-        feasibility={"serve": serve_feasibility(params.max_seq)},
+        feasibility={"serve": serve_feasibility(
+            params.max_seq, n_devices=max_devices,
+            n_heads=params.heads, n_kv_heads=params.kv_heads)},
     )

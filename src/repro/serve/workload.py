@@ -307,7 +307,7 @@ class OnlineRetuner:
                  active_config: Optional[Config] = None,
                  sig_dims: Optional[Dict[str, int]] = None,
                  dtype: str = "float32", cache: Any = None,
-                 transfer_radius: float = 0.75):
+                 transfer_radius: float = 0.75, mesh: str = ""):
         if isinstance(baseline, str):
             baseline = parse_sig(baseline)
         self.space = space
@@ -327,6 +327,11 @@ class OnlineRetuner:
         self.dtype = dtype
         self.cache = cache
         self.transfer_radius = float(transfer_radius)
+        # device-topology signature the engine runs at (autotune.mesh_sig;
+        # "" = legacy single-device).  Winners persist AND transfer-scan
+        # at this mesh only — a config tuned for a 4-way TP engine must
+        # never warm-start a single-device loop as if it were native.
+        self.mesh = str(mesh)
         self.n_retunes = 0
         self.tests_spent = 0
         self.events: List[Dict[str, Any]] = []
@@ -346,7 +351,7 @@ class OnlineRetuner:
             autotune.SERVE_SYSTEM,
             autotune.shape_sig({k: int(v)
                                 for k, v in self.sig_dims.items()}),
-            self.dtype, autotune.backend_name())
+            self.dtype, autotune.backend_name(), mesh=self.mesh)
 
     def _persist(self, sig: str, config: Config, value: float,
                  n_tests: int, step: int) -> None:
@@ -356,7 +361,7 @@ class OnlineRetuner:
 
         autotune.put_serve_config(
             self.sig_dims, self.dtype, config, value,
-            cache=self.cache, workload=sig,
+            cache=self.cache, workload=sig, mesh=self.mesh,
             meta={"source": "online_retune", "step": int(step),
                   "n_tests": int(n_tests)})
 

@@ -1,0 +1,39 @@
+"""Lint fixture: mesh/sharding hazards (see test_lint.py).
+
+One jitted function closes over a module-level NamedSharding (BAD), one
+takes the mesh as an explicit argument (OK), one closes over it without
+being jitted (OK — plain python re-reads the global every call).  One
+``constrain`` call passes a logical axis no rules preset maps (BAD) next
+to a fully-known call (OK) and a non-literal one the lint must skip.
+"""
+import functools
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.dist.sharding import constrain
+from repro.launch.mesh import make_mesh
+
+MESH = make_mesh(1, 2)
+SHARDING = NamedSharding(MESH, PartitionSpec("data"))
+
+
+@jax.jit
+def closes_over_mesh(x):  # BAD: jit cache never keys on the closure
+    return jax.device_put(x, SHARDING)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def explicit_sharding_arg(x, sharding, n=2):  # OK: explicit argument
+    del n
+    return jax.device_put(x, sharding)
+
+
+def not_jitted(x):  # OK: no jit cache to go stale
+    return jax.device_put(x, SHARDING)
+
+
+def typo_axis(x, dynamic_axis):
+    x = constrain(x, "batch", None, "heds")  # BAD: unknown logical axis
+    x = constrain(x, "batch", "seq", "head_dim")  # OK: all known
+    return constrain(x, dynamic_axis, None, None)  # skipped: not literal

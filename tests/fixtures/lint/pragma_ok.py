@@ -20,3 +20,15 @@ def suppressed_alloc(alloc, rid, n):
         return alloc.reserve(rid, n)  # lint: ignore[alloc-try-no-release]
     except RuntimeError:
         return None
+
+
+MESH = make_mesh(1, 2)  # noqa: F821 - fixture, never imported
+
+
+@jax.jit
+def suppressed_mesh_closure(x):
+    return jax.device_put(x, MESH)  # lint: ignore[jit-mesh-closure]
+
+
+def suppressed_axis(x):
+    return constrain(x, "heds")  # noqa: F821  # lint: ignore[constrain-unknown-axis]

@@ -561,7 +561,7 @@ class TestWorkloadKeyedEntries:
         assert cache.get("k", "s", "float32", "cpu",
                          workload="bad|sig")["config"] == {"a": 1}
         on_disk = json.load(open(os.environ["REPRO_AUTOTUNE_CACHE"]))
-        assert all(len(k.split("|")) == 6 for k in on_disk)
+        assert all(len(k.split("|")) == 7 for k in on_disk)
         assert set(cache.scan_workloads("k", "s", "float32", "cpu")) == \
             {"bad/sig"}
 
@@ -614,12 +614,12 @@ class TestCacheKeyCanonicalization:
         for k in on_disk:
             parts = k.split("|")
             assert parts[0] == f"v{autotune.SCHEMA_VERSION}"
-            assert len(parts) == 6  # workload component on EVERY key
+            assert len(parts) == 7  # workload + mesh on EVERY key
 
     def test_key_is_pure_string_function(self):
         assert AutotuneCache.key("k", "s", "float32", "cpu") == \
             AutotuneCache.key("k", "s", "float32", "cpu", workload="")
-        assert AutotuneCache.key("k", "s", "float32", "cpu").endswith("|-")
+        assert AutotuneCache.key("k", "s", "float32", "cpu").endswith("|-|1dev")
 
 
 class TestSchemaV2Migration:
@@ -649,7 +649,7 @@ class TestSchemaV2Migration:
         on_disk = json.load(open(tmp_cache))
         assert self.V2_KEY not in on_disk
         migrated = f"v{autotune.SCHEMA_VERSION}|rmsnorm|D32_ROWS8" \
-                   "|float32|cpu|-"
+                   "|float32|cpu|-|1dev"
         assert on_disk[migrated]["config"] == {"block_rows": 8}
 
     def test_native_v3_wins_over_migrated_v2(self, tmp_cache):

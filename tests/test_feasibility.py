@@ -250,6 +250,74 @@ class TestServeFloor:
         assert sspace.kv_floor_raise_count() == before
 
 
+class TestServeMeshPredicates:
+    """The PR-9 sharding predicates: a tuned mesh the engine would
+    refuse to build (or silently replicate) is infeasible up front."""
+
+    BASE = {"max_batch": 8, "kv_cache_pages": 512}
+
+    def test_mesh_must_fit_device_count(self):
+        model = serve_feasibility(2048, n_devices=8)
+        assert model({**self.BASE, "mesh_devices": 8,
+                      "tp_vs_replicas": "replicas"})
+        assert not model({**self.BASE, "mesh_devices": 16,
+                          "tp_vs_replicas": "tp"})
+        # 8 % 3 != 0: ServeEngine raises on this mesh
+        assert not model({**self.BASE, "mesh_devices": 3,
+                          "tp_vs_replicas": "tp"})
+
+    def test_tp_needs_heads_to_divide(self):
+        model = serve_feasibility(2048, n_devices=8, n_heads=12,
+                                  n_kv_heads=4)
+        # 12 heads % 8 != 0 under TP -> spec_for_shape would replicate
+        # attention: the deployed engine is not the one the tuner scored
+        assert not model({**self.BASE, "mesh_devices": 8,
+                          "tp_vs_replicas": "tp"})
+        assert model({**self.BASE, "mesh_devices": 4,
+                      "tp_vs_replicas": "tp"})
+        # replicas never split heads: any dividing device count is fine
+        assert model({**self.BASE, "mesh_devices": 8,
+                      "tp_vs_replicas": "replicas"})
+
+    def test_kv_heads_violation_is_warn_only(self):
+        model = serve_feasibility(2048, n_devices=8, n_heads=8,
+                                  n_kv_heads=4)
+        cfg = {**self.BASE, "mesh_devices": 8, "tp_vs_replicas": "tp"}
+        assert model(cfg)  # feasible: the pool replicates, decode works
+        assert any(v.predicate == "kv_heads_shardable"
+                   and v.severity == "warn"
+                   for v in model.check(cfg))
+
+    def test_unknown_topology_skips(self):
+        """No n_devices/n_heads kwargs (the historical callers): mesh
+        knobs pass — unknown is not violated."""
+        model = serve_feasibility(2048)
+        assert model({**self.BASE, "mesh_devices": 16,
+                      "tp_vs_replicas": "tp"})
+
+    def test_legacy_configs_unaffected(self):
+        model = serve_feasibility(2048, n_devices=8, n_heads=12,
+                                  n_kv_heads=4)
+        assert model(self.BASE)  # no mesh knobs at all
+
+    def test_fresh_sharded_tuning_is_deployable(self):
+        """Every winner of a max_devices-widened surrogate tune builds:
+        the acceptance bar 'fresh tunes never produce an undeployable
+        mesh'."""
+        import repro.serve.space as sspace
+
+        sut = sspace.ServeSurrogate(max_devices=8)
+        for seed in range(3):
+            rep = Tuner(sut.space(), sut, budget=24, optimizer="rrs",
+                        seed=seed).run()
+            best = rep.best_config
+            assert sut.feasibility_model(best)
+            n_dev = int(best.get("mesh_devices", 1))
+            assert 8 % n_dev == 0
+            if n_dev > 1 and best.get("tp_vs_replicas") == "tp":
+                assert sut.params.heads % n_dev == 0
+
+
 # ---------------------------------------------------------------------------
 # composition
 # ---------------------------------------------------------------------------

@@ -57,6 +57,27 @@ def test_fixture_alloc_findings():
     assert findings[0].line < 18
 
 
+def test_fixture_mesh_findings():
+    findings = L.lint_file(FIXTURES / "bad_mesh.py")
+    assert _rules(findings) == ["constrain-unknown-axis",
+                                "jit-mesh-closure"]
+    by_rule = {f.rule: f for f in findings}
+    # the closure finding names the offending global; the axis finding
+    # names the typo'd axis — and the known/non-literal calls are silent
+    assert "'SHARDING'" in by_rule["jit-mesh-closure"].message
+    assert "'heds'" in by_rule["constrain-unknown-axis"].message
+
+
+def test_known_axes_registry_is_live():
+    """The lint's axis registry is the real RULE_PRESETS vocabulary,
+    not a drifting copy: every axis the serve presets map is known."""
+    from repro.dist.sharding import KNOWN_LOGICAL_AXES, RULE_PRESETS
+    assert L.KNOWN_LOGICAL_AXES == KNOWN_LOGICAL_AXES
+    for rules in RULE_PRESETS.values():
+        for axis, _ in rules.items():
+            assert axis in L.KNOWN_LOGICAL_AXES
+
+
 def test_pragma_suppresses_everything():
     assert L.lint_file(FIXTURES / "pragma_ok.py") == []
 

@@ -1,0 +1,435 @@
+"""Sharded multi-device serving (tensor-parallel decode over a mesh).
+
+Three layers:
+
+* pure in-process: the v4 cache's mesh-signature keys (spellings,
+  v3 migration, nearest-mesh warm-start donors) and the co-deployment
+  surrogate's communication/replica terms — including the exact
+  n_devices=1 reduction to the historical formulas and the knob -> mesh
+  mapping ``apply_serve_knobs`` performs,
+* rank pinning: the surrogate's replicas-vs-TP preference directions
+  are asserted against REAL engine step counts measured in the
+  subprocess matrix (replicas widen capacity and cut decode dispatches;
+  TP never changes the dispatch count),
+* subprocess (8 fake XLA host devices — the flag must precede any jax
+  import, hence the subprocess; ``ci.sh --fast`` excludes ``subprocess``
+  tests): bit-identical token parity across meshes × kv layouts ×
+  schedules, under recompute preemption, under temperature sampling,
+  and across a mid-run online retune composing with an active mesh.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.autotune import (
+    AutotuneCache,
+    mesh_sig,
+    nearest_mesh_serve_config,
+    put_serve_config,
+)
+from repro.autotune.cache import mesh_distance, nearest_mesh, parse_mesh_sig
+
+REPO = Path(__file__).resolve().parent.parent
+SIG = {"S": 32, "H": 8, "KV": 4, "D": 8}
+
+
+# ---------------------------------------------------------------------------
+# mesh signatures + v4 cache keys
+# ---------------------------------------------------------------------------
+class TestMeshSignatures:
+    def test_single_device_spellings_collapse(self):
+        assert mesh_sig(None) == "1dev"
+        assert mesh_sig((1, 1)) == "1dev"
+        assert mesh_sig("1dev") == "1dev"
+        with pytest.raises(ValueError):
+            mesh_sig("not-a-mesh")
+
+    def test_shape_roundtrip(self):
+        assert mesh_sig((2, 4)) == "d2m4"
+        assert parse_mesh_sig("d2m4") == (2, 4)
+        assert parse_mesh_sig("1dev") == (1, 1)
+        assert parse_mesh_sig("bogus") is None
+
+    def test_distance_is_log2_gap(self):
+        assert mesh_distance("d2m4", "d2m4") == 0.0
+        assert mesh_distance("1dev", "d2m1") == 1.0
+        assert mesh_distance("d2m1", "d8m1") == 2.0
+        assert mesh_distance("d1m4", "d4m1") == 4.0
+        assert mesh_distance("d2m4", "1dev") \
+            == mesh_distance("1dev", "d2m4")
+
+    def test_nearest_mesh_sorted_tie_break(self):
+        # "1dev" and "d4m1" tie at distance 1 from d2m1: sorted order
+        # (deterministic across runs) picks "1dev"
+        got = nearest_mesh(["d4m1", "1dev"], "d2m1")
+        assert got == ("1dev", 1.0)
+        assert nearest_mesh([], "d2m1") is None
+
+
+class TestMeshCacheKeys:
+    def test_put_keys_carry_mesh_component(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "c.json"))
+        put_serve_config(SIG, "float32", {"max_batch": 4}, 10.0,
+                         cache=cache, mesh="d1m2")
+        (key,) = list(cache._load())
+        parts = key.split("|")
+        assert len(parts) == 7 and parts[-1] == "d1m2"
+        assert parts[0] == "v4" and parts[1] == "serve_engine"
+
+    def test_v3_keys_migrate_to_1dev(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps({
+            "v3|serve_engine|D8_H8_KV4_S32|float32|cpu|-":
+                {"config": {"max_batch": 2}, "value": 1.0}}))
+        cache = AutotuneCache(str(path))
+        got = cache.get("serve_engine", "D8_H8_KV4_S32", "float32", "cpu")
+        assert got is not None and got["config"] == {"max_batch": 2}
+        assert all(k.split("|")[-1] == "1dev" for k in cache._load())
+
+    def test_topologies_do_not_clobber(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "c.json"))
+        for mesh, batch in (("", 2), ("d1m2", 4), ("d8m1", 16)):
+            put_serve_config(SIG, "float32", {"max_batch": batch}, 1.0,
+                             cache=cache, mesh=mesh)
+        meshes = cache.scan_meshes("serve_engine",
+                                   "D8_H8_KV4_S32", "float32",
+                                   next(iter(cache._load())).split("|")[4])
+        assert set(meshes) == {"1dev", "d1m2", "d8m1"}
+        assert meshes["d8m1"]["config"]["max_batch"] == 16
+
+    def test_nearest_mesh_donor_annotated(self, tmp_path):
+        cache = AutotuneCache(str(tmp_path / "c.json"))
+        from repro.autotune import backend_name
+        be = backend_name()
+        put_serve_config(SIG, "float32", {"max_batch": 4}, 1.0,
+                         cache=cache, backend=be, mesh="d1m2")
+        exact = nearest_mesh_serve_config(SIG, "float32", "d1m2",
+                                          cache=cache, backend=be)
+        assert exact["mesh_distance"] == 0.0
+        assert exact["donor_mesh"] == "d1m2"
+        # miss at d1m8: the d1m2 winner transfers as an annotated donor
+        donor = nearest_mesh_serve_config(SIG, "float32", "d1m8",
+                                          cache=cache, backend=be)
+        assert donor["config"] == {"max_batch": 4}
+        assert donor["donor_mesh"] == "d1m2"
+        assert donor["mesh_distance"] == 2.0
+        assert nearest_mesh_serve_config(
+            {"S": 99, "H": 1, "KV": 1, "D": 1}, "float32", "d1m8",
+            cache=cache, backend=be) is None
+
+
+# ---------------------------------------------------------------------------
+# surrogate communication/replica terms
+# ---------------------------------------------------------------------------
+BASE_KNOBS = dict(max_batch=8, prefill_chunk=512, kv_cache_pages=1024,
+                  schedule="fifo", page_policy="on_demand",
+                  share_prefix=1, draft_len=2)
+
+
+def _score(n_dev, mode, *, n_requests=64, **params_kw):
+    from repro.serve.space import CotuneParams, coupled_serve_metrics
+
+    p = CotuneParams(n_requests=n_requests, **params_kw)
+    kcfg = p.kernel_space().default_config()
+    cfg = dict(BASE_KNOBS)
+    if n_dev is not None:
+        cfg.update(mesh_devices=n_dev, tp_vs_replicas=mode)
+    return coupled_serve_metrics(cfg, kcfg, p)
+
+
+class TestSurrogateMeshTerms:
+    def test_single_device_reduces_exactly(self):
+        legacy = _score(None, "tp")
+        one = _score(1, "tp")
+        assert legacy.value == pytest.approx(one.value, rel=1e-12)
+        assert one.metrics["comm_s"] == 0.0
+
+    def test_comm_floor_charges_tp_only(self):
+        tp = _score(8, "tp")
+        rep = _score(8, "replicas")
+        assert tp.metrics["comm_s"] > 0.0
+        assert rep.metrics["comm_s"] == 0.0
+        # the per-hop all-reduce bill grows with the ring factor
+        assert _score(8, "tp").metrics["comm_s"] \
+            > _score(2, "tp").metrics["comm_s"]
+
+    def test_replicas_win_under_queue_pressure(self):
+        """Heavy queue: replicas multiply resident capacity (the engine
+        measurably cuts decode dispatches — see the subprocess matrix);
+        TP only shrinks per-step time and pays the all-reduce floor."""
+        rep = _score(8, "replicas", n_requests=64)
+        tp = _score(8, "tp", n_requests=64)
+        assert rep.value > tp.value
+
+    def test_tp_wins_when_queue_is_light(self):
+        """Few requests: extra replica capacity idles (the engine's
+        dispatch count is already minimal), while TP still divides the
+        weight stream and attention."""
+        rep = _score(8, "replicas", n_requests=4)
+        tp = _score(8, "tp", n_requests=4)
+        assert tp.value > rep.value
+
+    def test_non_dividing_heads_lose_the_attention_win(self):
+        from dataclasses import replace
+
+        from repro.serve.space import CotuneParams, coupled_serve_metrics
+        even = _score(8, "tp", n_requests=4)
+        odd_p = replace(CotuneParams(n_requests=4), heads=12)
+        cfg = dict(BASE_KNOBS, mesh_devices=8, tp_vs_replicas="tp")
+        odd = coupled_serve_metrics(cfg, odd_p.kernel_space()
+                                    .default_config(), odd_p)
+        # 12 % 8 != 0: attention replicates — TP keeps only the
+        # weight-stream division, so the step gets strictly slower
+        assert odd.metrics["step_s"] > even.metrics["step_s"]
+
+    def test_space_widens_only_on_request(self):
+        from repro.serve.space import serve_knob_space
+
+        legacy = serve_knob_space()
+        assert "mesh_devices" not in legacy.names
+        wide = serve_knob_space(max_devices=8)
+        assert set(wide.names) >= set(legacy.names) \
+            | {"mesh_devices", "tp_vs_replicas"}
+        assert tuple(wide["mesh_devices"].choices) == (1, 2, 4, 8)
+
+    def test_apply_knobs_maps_mode_to_mesh(self):
+        from repro.serve.engine import ServeConfig
+        from repro.serve.space import apply_serve_knobs
+
+        base = ServeConfig(runtime="continuous", kv_layout="paged")
+        cfg = dict(BASE_KNOBS, mesh_devices=8, tp_vs_replicas="tp")
+        assert apply_serve_knobs(cfg, base=base).mesh_shape == (1, 8)
+        cfg["tp_vs_replicas"] = "replicas"
+        assert apply_serve_knobs(cfg, base=base).mesh_shape == (8, 1)
+        # an explicit 1 CLEARS an inherited mesh; an absent knob keeps it
+        sharded = ServeConfig(runtime="continuous", kv_layout="paged",
+                              mesh_shape=(2, 2))
+        assert apply_serve_knobs(dict(BASE_KNOBS, mesh_devices=1),
+                                 base=sharded).mesh_shape is None
+        assert apply_serve_knobs(dict(BASE_KNOBS),
+                                 base=sharded).mesh_shape == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# the engine itself, on 8 fake devices (subprocess: XLA_FLAGS must
+# precede any jax import)
+# ---------------------------------------------------------------------------
+_MATRIX = textwrap.dedent(r"""
+    import json, os, sys
+    import jax, numpy as np
+    from repro.configs import ModelConfig
+    from repro.models import Model
+    from repro.serve import ServeConfig, ServeEngine
+
+    assert len(jax.devices()) == 8, jax.devices()
+    cfg = ModelConfig(
+        name="shard-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512, head_dim=8,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 512, size=n).tolist()
+               for n in rng.integers(2, 20, size=12)]
+    gens = [int(g) for g in rng.integers(2, 10, size=12)]
+
+    def run(mesh=None, layout="paged", sched="fifo", temp=0.0):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=2, runtime="continuous",
+            kv_layout=layout, schedule=sched, prefill_chunk=4,
+            temperature=temp, seed=0, mesh_shape=mesh))
+        res = eng.generate(prompts, gens)
+        if eng.last_alloc is not None:
+            assert eng.last_alloc.groups_in_use == 0, (mesh, layout, "leak")
+            eng.last_alloc.check_balanced()
+        return res
+
+    out = {"steps": {}}
+    base = run()
+    out["base_steps"] = base.steps
+    arms = {
+        "tp2_paged":    dict(mesh=(1, 2)),
+        "tp8_paged":    dict(mesh=(1, 8)),
+        "rep2_paged":   dict(mesh=(2, 1)),
+        "rep8_paged":   dict(mesh=(8, 1)),
+        "grid22_sjf":   dict(mesh=(2, 2), sched="sjf"),
+        "tp2_dense_il": dict(mesh=(1, 2), layout="dense",
+                             sched="interleave"),
+        "grid22_dense": dict(mesh=(2, 2), layout="dense"),
+    }
+    for name, kw in arms.items():
+        res = run(**kw)
+        assert res.tokens == base.tokens, f"{name}: tokens diverged"
+        out["steps"][name] = res.steps
+    sampled = run(temp=0.8)
+    assert run(mesh=(1, 2), temp=0.8).tokens == sampled.tokens, \
+        "sampled tokens diverged under TP"
+
+    # recompute preemption on a starved sharded pool: tokens must match
+    # the unsharded fully-reserved oracle bit-for-bit
+    p2 = [rng.integers(1, 512, size=n).tolist()
+          for n in rng.integers(3, 9, size=8)]
+    g2 = [int(g) for g in rng.integers(10, 17, size=8)]
+    def run2(mesh, policy, pages):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=3, runtime="continuous",
+            kv_layout="paged", kv_cache_pages=pages, page_policy=policy,
+            prefill_chunk=4, seed=0, mesh_shape=mesh))
+        res = eng.generate(p2, g2)
+        assert eng.last_alloc.groups_in_use == 0, "preempt arm leak"
+        eng.last_alloc.check_balanced()
+        return res
+    oracle = run2(None, "reserve", None)
+    pre = run2((1, 2), "on_demand", 4)
+    assert pre.tokens == oracle.tokens, "preemption diverged under TP"
+    out["preemptions"] = pre.preemptions
+    json.dump(out, sys.stdout)
+""")
+
+_TRACEKEY = textwrap.dedent(r"""
+    import json, sys
+    import jax, numpy as np
+    from repro.configs import ModelConfig
+    from repro.models import Model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = ModelConfig(
+        name="shard-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512, head_dim=8,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 512, size=n).tolist()
+               for n in rng.integers(2, 20, size=12)]
+    gens = [int(g) for g in rng.integers(2, 10, size=12)]
+
+    def run(mesh):
+        eng = ServeEngine(model, params, ServeConfig(
+            max_seq=32, batch_slots=4, runtime="continuous",
+            kv_layout="paged", kv_cache_pages=24, prefill_chunk=4,
+            seed=0, mesh_shape=mesh))
+        return eng.generate(prompts, gens)
+
+    # a (2,1) and a (2,2) mesh both widen slots x2, so every jitted
+    # step's avals coincide; the shared Model's bound methods hash
+    # equal, so without per-engine trace keying the second engine
+    # inherits jaxprs whose constraints pin the FIRST engine's devices
+    base = run(None)
+    toks = {m: run(m).tokens for m in ((2, 1), (2, 2), (2, 1))}
+    assert all(t == base.tokens for t in toks.values()), "tokens diverged"
+    json.dump({"ok": True}, sys.stdout)
+""")
+
+_RETUNE = textwrap.dedent(r"""
+    import json, sys
+    import jax, numpy as np
+    from repro import autotune
+    from repro.configs import ModelConfig
+    from repro.models import Model
+    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve.workload import fingerprint_sig
+
+    cfg = ModelConfig(
+        name="shard-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512, head_dim=8,
+        param_dtype="float32", compute_dtype="float32",
+        vocab_pad_multiple=64, rope_theta=10_000.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    MESH = dict(mesh_shape=(1, 2))
+    BASE = dict(max_seq=48, batch_slots=8, kv_layout="paged", seed=0,
+                prefill_chunk=8, slot_cap=3)
+    RETUNE = dict(retune=True, retune_budget=8, retune_threshold=0.3,
+                  retune_window=10, retune_cooldown=200,
+                  retune_check_every=2, retune_min_requests=6)
+
+    rng = np.random.default_rng(0)
+    pa = [rng.integers(1, 500, size=20).tolist() for _ in range(6)]
+    eng = ServeEngine(model, params, ServeConfig(
+        **BASE, **MESH, retune=True, retune_threshold=10.0,
+        retune_min_requests=6, retune_window=10))
+    eng.generate(pa, [12] * 6)
+    sig_a = fingerprint_sig(eng.last_retuner.baseline)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 500, size=20).tolist() for _ in range(3)]
+    shared = rng.integers(1, 500, size=32).tolist()
+    prompts += [shared + rng.integers(1, 500, size=3).tolist()
+                for _ in range(12)]
+    gens = [12] * 3 + [6] * 12
+
+    autotune.reset_default_cache()
+    eng = ServeEngine(model, params, ServeConfig(
+        **BASE, **MESH, tuned_signature=sig_a, **RETUNE))
+    res = eng.generate(prompts, gens)
+    eng.last_alloc.check_balanced()
+    # oracles: same mesh without retuning, and no mesh at all
+    ref_mesh = ServeEngine(model, params, ServeConfig(
+        **BASE, **MESH)).generate(prompts, gens)
+    ref_1dev = ServeEngine(model, params, ServeConfig(
+        **BASE)).generate(prompts, gens)
+    assert res.tokens == ref_mesh.tokens == ref_1dev.tokens, \
+        "mid-run retune on an active mesh changed tokens"
+    keys = [k for k in autotune.default_cache()._load()
+            if "serve_engine" in k]
+    json.dump({"retunes": len(res.retunes),
+               "applied": bool(res.retunes and res.retunes[0]["applied"]),
+               "serve_keys": keys}, sys.stdout)
+""")
+
+
+def _run_sub(script, tmp_path, n_devices=8):
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src"),
+               REPRO_AUTOTUNE_CACHE=str(tmp_path / "cache.json"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                         f"={n_devices}")
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, cwd=str(REPO),
+                          env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout)
+
+
+class TestShardedParitySubprocess:
+    def test_parity_matrix_subprocess(self, tmp_path):
+        out = _run_sub(_MATRIX, tmp_path)
+        steps, base = out["steps"], out["base_steps"]
+        # TP dispatch invariant: one batched decode dispatch per step,
+        # so widening the model axis never changes the dispatch count
+        assert steps["tp2_paged"] == steps["tp8_paged"] == base
+        assert steps["tp2_dense_il"] >= 1
+        # replicas widen slot capacity: dispatch count strictly drops,
+        # monotonically in the data-axis width — the direction the
+        # surrogate's replica terms are pinned to
+        # (TestSurrogateMeshTerms.test_replicas_win_under_queue_pressure)
+        assert steps["rep2_paged"] < base
+        assert steps["rep8_paged"] <= steps["rep2_paged"]
+        assert steps["grid22_sjf"] < base  # data=2 widens here too
+        assert out["preemptions"] > 0, "starved pool never preempted"
+
+    def test_trace_cache_keyed_per_mesh_subprocess(self, tmp_path):
+        """Two engines over one shared Model whose meshes produce
+        identical avals ((2,1) and (2,2) both widen slots x2) must not
+        exchange jaxprs: without per-engine trace keying the second
+        dispatch dies on 'incompatible devices' because its inherited
+        sharding constraints pin the first engine's device set."""
+        assert _run_sub(_TRACEKEY, tmp_path) == {"ok": True}
+
+    def test_sharded_retune_subprocess(self, tmp_path):
+        """PR 8's online retuner composing with an active mesh: the
+        drift fires, the knob swap stays token-invariant, and the
+        winner persists under THIS topology's mesh key."""
+        out = _run_sub(_RETUNE, tmp_path)
+        assert out["retunes"] == 1
+        assert out["applied"]
+        assert out["serve_keys"], "retune winner never persisted"
+        assert all(k.split("|")[-1] == "d1m2" for k in out["serve_keys"])

@@ -74,6 +74,73 @@ class TestSpecForShape:
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+class TestServePresets:
+    """Property tests for the serve_tp / serve_replicas presets the
+    sharded engine activates (PR 9): what each layout actually pins."""
+
+    SHAPES = [
+        ((8, 64, 16), ("batch", "heads", "head_dim")),
+        ((8, 128, 4, 16), ("batch", "seq", "kv_heads", "head_dim")),
+        ((64, 256), ("embed", "ff")),
+        ((64, 512), ("embed", "vocab")),
+    ]
+
+    def test_presets_registered(self):
+        assert "serve_tp" in RULE_PRESETS
+        assert "serve_replicas" in RULE_PRESETS
+
+    def test_tp_splits_model_axes_only(self):
+        mesh = FakeMesh(data=1, model=4)
+        rules = RULE_PRESETS["serve_tp"]
+        for shape, axes in self.SHAPES:
+            spec = spec_for_shape(shape, axes, rules, mesh)
+            # size-1 data axis drops: batch never shards on pure TP
+            assert "data" not in [s for e in spec for s in
+                                  ([e] if isinstance(e, str) else e or [])]
+        assert spec_for_shape((8, 64, 16),
+                              ("batch", "heads", "head_dim"),
+                              rules, mesh) == P(None, "model")
+        assert spec_for_shape((64, 256), ("embed", "ff"),
+                              rules, mesh) == P(None, "model")
+
+    def test_replicas_shard_batch_only(self):
+        mesh = FakeMesh(data=4, model=1)
+        rules = RULE_PRESETS["serve_replicas"]
+        for shape, axes in self.SHAPES:
+            spec = spec_for_shape(shape, axes, rules, mesh)
+            flat = [s for e in spec for s in
+                    ([e] if isinstance(e, str) else e or [])]
+            assert "model" not in flat
+            assert ("data" in flat) == ("batch" in axes)
+
+    def test_tp_degenerates_to_replicas_on_data_mesh(self):
+        """serve_tp on a (K, 1) mesh IS serve_replicas: the size-1 model
+        axis drops from every rule, leaving only batch -> data.  This is
+        why the engine can default to serve_tp for both layouts."""
+        mesh = FakeMesh(data=4, model=1)
+        for shape, axes in self.SHAPES:
+            assert spec_for_shape(shape, axes,
+                                  RULE_PRESETS["serve_tp"], mesh) \
+                == spec_for_shape(shape, axes,
+                                  RULE_PRESETS["serve_replicas"], mesh)
+
+    def test_non_dividing_dim_replicates(self):
+        mesh = FakeMesh(data=1, model=8)
+        # 12 heads % 8 != 0 -> the dim replicates rather than erroring
+        spec = spec_for_shape((4, 12, 16), ("batch", "heads", "head_dim"),
+                              RULE_PRESETS["serve_tp"], mesh)
+        assert spec == P()
+
+    def test_pool_axes_shard_kv_heads_only(self):
+        """The paged pool's declared layout: page-group axis whole (the
+        scalar-prefetched page table indexes it), kv_heads split."""
+        from repro.kernels.paged_attention import POOL_AXES
+        mesh = FakeMesh(data=1, model=2)
+        spec = spec_for_shape((8, 64, 4, 16), POOL_AXES,
+                              RULE_PRESETS["serve_tp"], mesh)
+        assert spec == P(None, None, "model")
+
+
 class TestHloCostAnalyzer:
     def test_scan_trip_count(self):
         from repro.utils.hlo_cost import analyze_hlo
