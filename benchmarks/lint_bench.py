@@ -1,0 +1,145 @@
+"""Lint wall-time benchmark: the CI gate's cost, itemized per pass.
+
+The PR 10 dataflow passes (project build, call graph, taint fixpoint,
+lock dominance) run over the whole of ``src/repro`` on every CI run, so
+their wall-time is a perf artifact like any kernel: this module times
+each phase separately, counts findings per rule family over the planted
+fixtures (the baseline tree is clean by construction — the gate enforces
+it), and writes ``BENCH_lint.json`` at the repo root for cross-PR
+comparison.  ``--check`` exits non-zero if the full lint of ``src/repro``
+exceeds a generous wall-time budget or the baseline is not clean.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+from repro.analysis import dataflow as df
+from repro.analysis import lint as L
+
+from .common import Row
+
+REPO = Path(__file__).resolve().parent.parent
+JSON_PATH = os.path.join(str(REPO), "BENCH_lint.json")
+SRC = REPO / "src" / "repro"
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+# the CI gate should never dominate the suite: full tree, all passes
+DEFAULT_BUDGET_S = 60.0
+
+# PR 10 families reported separately from the per-file (PR 7) rules
+_DATAFLOW_RULES = ("determinism-taint", "jit-trace-capture",
+                   "jit-host-effect", "cache-lock-discipline")
+
+
+def _src_files() -> List[str]:
+    return [str(p) for p in sorted(SRC.rglob("*.py"))
+            if "__pycache__" not in p.parts]
+
+
+def bench() -> Dict[str, Any]:
+    files = _src_files()
+
+    t0 = time.perf_counter()
+    proj = df.build_project(files)
+    t_build = time.perf_counter() - t0
+
+    res = df.Resolver(proj)
+    t0 = time.perf_counter()
+    graph = res.call_graph()
+    t_graph = time.perf_counter() - t0
+    n_edges = sum(len(v) for v in graph.values())
+    n_resolved = sum(1 for v in graph.values() if v)
+
+    t0 = time.perf_counter()
+    baseline, n_files = L.lint_paths([str(SRC)])
+    t_full = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fixture_findings, _ = L.lint_paths([str(FIXTURES)])
+    t_fixtures = time.perf_counter() - t0
+    per_rule: Dict[str, int] = {}
+    for f in fixture_findings:
+        per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+
+    out = {
+        "files": n_files,
+        "functions": len(proj.sorted_functions()),
+        "call_graph": {"nodes": len(graph), "edges": n_edges,
+                       "nodes_with_resolved_edges": n_resolved},
+        "wall_s": {
+            "project_build": round(t_build, 3),
+            "call_graph": round(t_graph, 3),
+            "full_lint_src": round(t_full, 3),
+            "fixture_lint": round(t_fixtures, 3),
+        },
+        "baseline_findings": len(baseline),
+        "fixture_findings_per_rule": dict(sorted(per_rule.items())),
+        "dataflow_fixture_findings": sum(
+            per_rule.get(r, 0) for r in _DATAFLOW_RULES),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    return out
+
+
+def rows_from(result: Dict[str, Any]) -> List[Row]:
+    w = result["wall_s"]
+    g = result["call_graph"]
+    return [
+        ("lint_full_src", w["full_lint_src"] * 1e6,
+         f"{result['files']} files, {result['baseline_findings']} findings"),
+        ("lint_call_graph", w["call_graph"] * 1e6,
+         f"{g['nodes']} fns, {g['edges']} resolved edges"),
+        ("lint_project_build", w["project_build"] * 1e6,
+         f"{result['functions']} functions indexed"),
+        ("lint_fixture_recall", w["fixture_lint"] * 1e6,
+         f"{result['dataflow_fixture_findings']} dataflow findings "
+         "planted+caught"),
+    ]
+
+
+def run() -> List[Row]:
+    """benchmarks.run entry point."""
+    return rows_from(bench())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if the full lint exceeds "
+                         f"{DEFAULT_BUDGET_S:.0f}s or src/repro is not "
+                         "finding-free")
+    ap.add_argument("--budget-s", type=float, default=DEFAULT_BUDGET_S)
+    args = ap.parse_args(argv)
+    result = bench()
+    for name, us, derived in rows_from(result):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {JSON_PATH}")
+    if args.check:
+        wall = result["wall_s"]["full_lint_src"]
+        if wall > args.budget_s:
+            print(f"CHECK FAILED: full lint took {wall:.1f}s "
+                  f"(> {args.budget_s:.0f}s budget)", file=sys.stderr)
+            return 1
+        if result["baseline_findings"]:
+            print("CHECK FAILED: src/repro baseline is not clean",
+                  file=sys.stderr)
+            return 1
+        if result["dataflow_fixture_findings"] < 15:
+            print("CHECK FAILED: dataflow fixtures fired fewer findings "
+                  "than planted", file=sys.stderr)
+            return 1
+        print(f"check OK: full lint {wall:.1f}s, baseline clean, "
+              f"{result['dataflow_fixture_findings']} planted dataflow "
+              "findings caught")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

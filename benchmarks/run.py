@@ -13,6 +13,7 @@
   kernel_bench     kernels     Pallas kernels vs jnp oracles
   cotune_bench     §2.1/§5.5   joint vs independent co-deployment tuning
   serve_bench      serving     continuous-batching + paged KV vs wave loop
+  lint_bench       CI gate     dataflow-lint wall-time + planted recall
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only mysql_11x``
@@ -36,6 +37,7 @@ MODULES = [
     "kernel_bench",
     "cotune_bench",
     "serve_bench",
+    "lint_bench",
 ]
 
 

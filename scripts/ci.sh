@@ -17,9 +17,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-k "not subprocess and not DryRun and not TuneCLI and not collectives_counted")
 fi
 
-# Post-PR9 baseline: CI fails if the collected count ever drops below it
+# Post-PR10 baseline: CI fails if the collected count ever drops below it
 # (a silently skipped/broken test file must not read as green).
-MIN_COLLECTED=666
+MIN_COLLECTED=684
 echo "=== check: collected test count >= ${MIN_COLLECTED} ==="
 COLLECT_OUT=$(python -m pytest -q --collect-only 2>&1 | tail -5 || true)
 COLLECTED=$(tail -1 <<<"$COLLECT_OUT" | grep -oE '^[0-9]+' || true)
@@ -36,13 +36,42 @@ python -m pytest "${PYTEST_ARGS[@]}"
 echo "=== determinism matrix: every optimizer × dispatch mode × seed ==="
 python -m pytest -q tests/test_determinism_matrix.py
 
-echo "=== lint gate: jit/Pallas/allocator static analysis (zero findings) ==="
+echo "=== lint gate: jit/Pallas/allocator + interprocedural dataflow ==="
 # Machine-readable AST lint over the whole package (repro.analysis.lint):
 # jit retrace hazards, pallas_call arity contracts, allocator unwind
-# discipline.  Exits non-zero on ANY finding; the committed baseline is
-# zero, so a new finding is a regression, not noise.
+# discipline, plus the PR 10 dataflow families — determinism-taint,
+# jit-trace-capture/host-effect, cache lock-discipline — run over the
+# module-level call graph.  Exits non-zero on ANY finding; the committed
+# baseline is zero, so a new finding is a regression, not noise.
 python -m repro.analysis.lint --check src/repro
 echo "lint gate OK (zero findings)"
+
+echo "=== smoke: dataflow lint recall (planted fixtures must fire) ==="
+# Zero findings on src/repro must mean "analyzed and clean", not
+# "analysis silently off": each PR 10 rule family must fire on its
+# planted fixture (7 taint + 3 capture + 2 host-effect + 3 lock = 15)
+# and the pragma fixture must stay silent.  lint_bench re-times the full
+# gate and writes BENCH_lint.json (wall-time per pass + planted recall).
+timeout 120 python - <<'EOF'
+from pathlib import Path
+
+from repro.analysis import lint as L
+
+FIX = Path("tests/fixtures/lint")
+want = {
+    "bad_taint.py": {"determinism-taint": 7},
+    "bad_trace_capture.py": {"jit-trace-capture": 3, "jit-host-effect": 2},
+    "bad_cache_lock.py": {"cache-lock-discipline": 3},
+}
+for name, expect in want.items():
+    got = {}
+    for f in L.lint_file(FIX / name):
+        got[f.rule] = got.get(f.rule, 0) + 1
+    assert got == expect, f"{name}: planted {expect}, lint saw {got}"
+assert L.lint_file(FIX / "pragma_ok.py") == [], "pragmas stopped working"
+print("dataflow recall smoke OK (15 planted findings caught, pragmas ok)")
+EOF
+timeout 120 python -m benchmarks.lint_bench --check
 
 echo "=== smoke: static feasibility pruning (zero-budget infeasible) ==="
 # A kernel tune over a shape whose biggest tiles blow VMEM: infeasible

@@ -11,7 +11,10 @@ Two halves, both *static* in the ACTS sense — they spend zero test budget:
   consumes these models to prune candidates *without charging budget*.
 * ``repro.analysis.lint`` — a stdlib-``ast`` lint over the repo's own
   runtime invariants: jit retrace hazards, ``pallas_call`` contract
-  arity, allocator acquire/release balance.  ``python -m
+  arity, allocator acquire/release balance, plus interprocedural
+  dataflow rules (PR 10) built on ``repro.analysis.dataflow``'s call
+  graph + taint engine: determinism-taint into tuning decisions, jit
+  trace-capture/host-effect, and cache lock-discipline.  ``python -m
   repro.analysis.lint --check src/repro`` is the CI gate.
 """
 from .feasibility import (

@@ -1,0 +1,1323 @@
+"""Interprocedural dataflow layer under the repo lint (pure stdlib ``ast``).
+
+Two pieces, both *resolve-or-skip* (PR 7's contract: an opaque callee is
+skipped, never guessed — precision over recall, so the zero-findings
+baseline on ``src/repro`` stays meaningful):
+
+``Project`` / ``Resolver``
+    A module-level call graph over an arbitrary fileset.  Modules are
+    named by their package chain (``__init__.py`` walk); calls resolve
+    through imports, local aliases, ``functools.partial``, conditional
+    aliases (``IfExp`` whose branches agree), class construction
+    (``C(...)`` → ``C.__init__``) and methods via receiver-type
+    inference from parameter annotations, ``self`` attribute
+    constructor-sites and return annotations.
+
+``TaintAnalysis``
+    A forward taint engine on that graph: labeled sources propagate
+    through assignments, arithmetic, containers, returns and call
+    arguments to labeled sinks.  Per-function summaries
+    (param→return, return-sources, param→sink) are iterated to a
+    fixpoint, so a source can reach a sink through any resolved chain
+    of helpers.  Constructing a *metric boundary* type (``PerfMetric``,
+    ``TuningReport``, …) launders taint by design: a timer flowing into
+    a perf record is the accepted pattern; taint must reach a decision.
+
+Everything here is deterministic by construction — modules, functions
+and findings are iterated in sorted order — because the lint must
+satisfy the invariant it checks.
+
+The concrete rule families (determinism-taint, jit-trace-capture,
+cache-lock-discipline) live in ``repro.analysis.lint``; this module
+knows nothing about jax, schedulers or caches beyond what callers
+register.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import (Any, Dict, FrozenSet, Iterable, List, Optional, Sequence,
+                    Set, Tuple)
+
+__all__ = [
+    "Project", "ModuleInfo", "ClassInfo", "FunctionInfo", "Resolver",
+    "CallTarget", "TaintSource", "SinkSpec", "TaintFinding", "TaintAnalysis",
+    "build_project",
+]
+
+# resolution recursion fuel: deep enough for every real chain in the
+# repo (alias → partial → alias → def), shallow enough that adversarial
+# self-referential modules terminate instantly.
+_MAX_DEPTH = 8
+# fixpoint passes over all function summaries; call chains in this repo
+# are < 5 frames deep, 12 leaves generous headroom.
+_MAX_ITERS = 12
+
+
+# --------------------------------------------------------------------------
+# project index
+# --------------------------------------------------------------------------
+
+@dataclass
+class FunctionInfo:
+    """One ``def`` anywhere in the project (top-level, method or nested)."""
+
+    name: str
+    qname: str                      # "pkg.mod:Class.meth" / "pkg.mod:outer.<locals>.inner"
+    node: Any                       # ast.FunctionDef | ast.AsyncFunctionDef
+    module: "ModuleInfo"
+    cls: Optional["ClassInfo"] = None
+    parent: Optional["FunctionInfo"] = None  # lexically enclosing def
+    # lazily built caches (Resolver owns their lifecycle)
+    _local_env: Optional[Dict[str, Any]] = field(default=None, repr=False)
+
+    def params(self) -> List[str]:
+        """Positional + keyword-only parameter names, ``self``/``cls``
+        included when present (index 0 for methods)."""
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        return names
+
+    def annotation_for(self, pname: str) -> Optional[ast.AST]:
+        a = self.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg == pname:
+                return p.annotation
+        return None
+
+    @property
+    def is_method(self) -> bool:
+        return self.cls is not None and self.parent is None
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    qname: str
+    node: ast.ClassDef
+    module: "ModuleInfo"
+    methods: Dict[str, FunctionInfo] = field(default_factory=dict)
+    bases: List[str] = field(default_factory=list)      # dotted base names
+    # self.<attr> -> annotation or value expr (from __init__ / class body)
+    attr_types: Dict[str, ast.AST] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleInfo:
+    name: str                       # dotted module name ("repro.autotune.api")
+    path: str
+    tree: ast.Module
+    functions: Dict[str, FunctionInfo] = field(default_factory=dict)
+    classes: Dict[str, ClassInfo] = field(default_factory=dict)
+    assigns: Dict[str, ast.AST] = field(default_factory=dict)
+    # alias -> (module_name, symbol | None).  symbol None = the module object.
+    imports: Dict[str, Tuple[str, Optional[str]]] = field(default_factory=dict)
+    all_functions: List[FunctionInfo] = field(default_factory=list)
+
+    @property
+    def package(self) -> str:
+        """The package this module's relative imports resolve against."""
+        if self.path.endswith("__init__.py"):
+            return self.name
+        return self.name.rpartition(".")[0]
+
+
+def _module_name(path: str) -> str:
+    """Dotted module name from the ``__init__.py`` package chain.
+
+    A file outside any package (no ``__init__.py`` beside it) is a
+    standalone module named after its stem — this is how single-file
+    fixture lints still get a working (intra-module) call graph.
+    """
+    import os
+
+    path = os.path.abspath(path)
+    parts = [os.path.splitext(os.path.basename(path))[0]]
+    d = os.path.dirname(path)
+    while os.path.isfile(os.path.join(d, "__init__.py")):
+        parts.append(os.path.basename(d))
+        nd = os.path.dirname(d)
+        if nd == d:
+            break
+        d = nd
+    parts.reverse()
+    if parts[-1] == "__init__":
+        parts.pop()
+    return ".".join(parts) if parts else "__main__"
+
+
+class _Indexer(ast.NodeVisitor):
+    """Single pass that records defs, classes, imports and assigns."""
+
+    def __init__(self, mod: ModuleInfo) -> None:
+        self.mod = mod
+        self.cls_stack: List[ClassInfo] = []
+        self.fn_stack: List[FunctionInfo] = []
+
+    # -- scoping helpers ---------------------------------------------------
+    def _qname(self, name: str) -> str:
+        bits: List[str] = []
+        for f in self.fn_stack:
+            bits.append(f.name + ".<locals>")
+        if self.cls_stack and not self.fn_stack:
+            bits.append(self.cls_stack[-1].name)
+        bits.append(name)
+        return f"{self.mod.name}:{'.'.join(bits)}"
+
+    # -- defs --------------------------------------------------------------
+    def _handle_def(self, node: Any) -> None:
+        cls = self.cls_stack[-1] if (self.cls_stack and not self.fn_stack) else None
+        fi = FunctionInfo(name=node.name, qname=self._qname(node.name),
+                          node=node, module=self.mod, cls=cls,
+                          parent=self.fn_stack[-1] if self.fn_stack else None)
+        self.mod.all_functions.append(fi)
+        if cls is not None:
+            cls.methods[node.name] = fi
+        elif not self.fn_stack and not self.cls_stack:
+            self.mod.functions[node.name] = fi
+        self.fn_stack.append(fi)
+        for child in node.body:
+            self.visit(child)
+        self.fn_stack.pop()
+
+    visit_FunctionDef = _handle_def
+    visit_AsyncFunctionDef = _handle_def
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        if self.fn_stack or self.cls_stack:
+            # nested classes: indexed shallowly enough to resolve-or-skip
+            for child in node.body:
+                self.visit(child)
+            return
+        ci = ClassInfo(name=node.name, qname=self._qname(node.name),
+                       node=node, module=self.mod,
+                       bases=[d for d in map(_dotted, node.bases) if d])
+        self.mod.classes[node.name] = ci
+        self.cls_stack.append(ci)
+        for child in node.body:
+            if isinstance(child, ast.AnnAssign) and isinstance(child.target, ast.Name):
+                ci.attr_types.setdefault(child.target.id,
+                                         child.annotation or child.value)
+            self.visit(child)
+        self.cls_stack.pop()
+        # mine __init__ for `self.x = EXPR` constructor-sites
+        init = ci.methods.get("__init__")
+        if init is not None:
+            for stmt in ast.walk(init.node):
+                tgt = None
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    tgt, val = stmt.targets[0], stmt.value
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    tgt, val = stmt.target, (stmt.annotation or stmt.value)
+                else:
+                    continue
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    ci.attr_types.setdefault(tgt.attr, val)
+
+    # -- imports -----------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        if self.fn_stack or self.cls_stack:
+            return
+        for alias in node.names:
+            if alias.asname:
+                self.mod.imports[alias.asname] = (alias.name, None)
+            else:
+                root = alias.name.split(".", 1)[0]
+                self.mod.imports[root] = (root, None)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if self.fn_stack or self.cls_stack:
+            return
+        if node.level:
+            base = self.mod.package
+            for _ in range(node.level - 1):
+                base = base.rpartition(".")[0]
+            target = f"{base}.{node.module}" if node.module else base
+        else:
+            target = node.module or ""
+        if not target:
+            return
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            self.mod.imports[alias.asname or alias.name] = (target, alias.name)
+
+    # -- module assigns ----------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if not self.fn_stack and not self.cls_stack:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.mod.assigns[tgt.id] = node.value
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if (not self.fn_stack and not self.cls_stack
+                and isinstance(node.target, ast.Name) and node.value is not None):
+            self.mod.assigns[node.target.id] = node.value
+
+
+@dataclass
+class Project:
+    """An indexed fileset: dotted-name → module, plus lookup helpers."""
+
+    modules: Dict[str, ModuleInfo] = field(default_factory=dict)
+    by_path: Dict[str, ModuleInfo] = field(default_factory=dict)
+
+    def sorted_modules(self) -> List[ModuleInfo]:
+        return [self.modules[k] for k in sorted(self.modules)]
+
+    def sorted_functions(self) -> List[FunctionInfo]:
+        out: List[FunctionInfo] = []
+        for mod in self.sorted_modules():
+            out.extend(sorted(mod.all_functions, key=lambda f: f.qname))
+        return out
+
+    # -- symbol lookup -----------------------------------------------------
+    def module_symbol(self, mod: ModuleInfo, name: str,
+                      depth: int = _MAX_DEPTH) -> Optional[Tuple[str, Any]]:
+        """Resolve a module-scope name to ("func"|"class"|"module"|"assign", obj).
+
+        Follows re-export chains (``from .api import x`` inside an
+        ``__init__``) up to the depth budget.  None = opaque.
+        """
+        if depth <= 0:
+            return None
+        if name in mod.functions:
+            return ("func", mod.functions[name])
+        if name in mod.classes:
+            return ("class", mod.classes[name])
+        if name in mod.imports:
+            target, symbol = mod.imports[name]
+            if symbol is None:
+                sub = self.modules.get(target)
+                return ("module", sub) if sub is not None else None
+            submod = self.modules.get(f"{target}.{symbol}")
+            if submod is not None:
+                return ("module", submod)
+            tmod = self.modules.get(target)
+            if tmod is None:
+                return None
+            return self.module_symbol(tmod, symbol, depth - 1)
+        if name in mod.assigns:
+            return ("assign", mod.assigns[name])
+        return None
+
+    def resolve_class_named(self, mod: ModuleInfo, dotted: str,
+                            depth: int = _MAX_DEPTH) -> Optional[ClassInfo]:
+        """Resolve a (possibly dotted) class name as seen from ``mod``."""
+        if depth <= 0 or not dotted:
+            return None
+        head, _, rest = dotted.partition(".")
+        got = self.module_symbol(mod, head, depth)
+        while got is not None and rest:
+            kind, obj = got
+            if kind != "module":
+                return None
+            head, _, rest = rest.partition(".")
+            got = self.module_symbol(obj, head, depth - 1)
+        if got is None:
+            return None
+        kind, obj = got
+        return obj if kind == "class" else None
+
+    def class_method(self, ci: ClassInfo, name: str,
+                     depth: int = _MAX_DEPTH) -> Optional[FunctionInfo]:
+        """Method lookup through project-resolvable bases (MRO-ish)."""
+        if depth <= 0:
+            return None
+        if name in ci.methods:
+            return ci.methods[name]
+        for base in ci.bases:
+            bci = self.resolve_class_named(ci.module, base, depth - 1)
+            if bci is not None and bci is not ci:
+                m = self.class_method(bci, name, depth - 1)
+                if m is not None:
+                    return m
+        return None
+
+
+def build_project(files: Sequence[str]) -> Project:
+    """Parse + index a fileset.  Unparseable files are skipped (the
+    per-file lint reports those as ``syntax-error`` already)."""
+    proj = Project()
+    for path in sorted(str(p) for p in files):
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                tree = ast.parse(fh.read())
+        except (OSError, SyntaxError, ValueError):
+            continue
+        mod = ModuleInfo(name=_module_name(path), path=path, tree=tree)
+        _Indexer(mod).visit(tree)
+        # duplicate dotted names (two loose files both named "fixture")
+        # keep the first, sorted order makes the winner deterministic
+        proj.modules.setdefault(mod.name, mod)
+        proj.by_path[path] = mod
+    return proj
+
+
+# --------------------------------------------------------------------------
+# shared AST helpers (duplicated shape-wise with lint.py on purpose:
+# dataflow must stay importable standalone)
+# --------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _last(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _unwrap_annotation(node: Optional[ast.AST]) -> Optional[ast.AST]:
+    """Strip Optional[...]/Union[..., None]/string quoting to the payload."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            return _unwrap_annotation(ast.parse(node.value, mode="eval").body)
+        except SyntaxError:
+            return None
+    if isinstance(node, ast.Subscript):
+        head = _last(node.value)
+        if head in ("Optional", "Union"):
+            inner = node.slice
+            elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+            payload = [e for e in elts
+                       if not (isinstance(e, ast.Constant) and e.value is None)]
+            if len(payload) == 1:
+                return _unwrap_annotation(payload[0])
+            return None
+    return node
+
+
+# --------------------------------------------------------------------------
+# resolver
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CallTarget:
+    """A resolved callee: the def plus how many leading positional
+    params / which keywords are pre-bound (self-binding, partial)."""
+
+    fn: FunctionInfo
+    bound_pos: int = 0
+    bound_kw: FrozenSet[str] = frozenset()
+
+
+class Resolver:
+    """Resolve-or-skip name/receiver resolution over a :class:`Project`."""
+
+    def __init__(self, project: Project) -> None:
+        self.project = project
+
+    # -- per-function local environments ----------------------------------
+    def local_env(self, fi: FunctionInfo) -> Dict[str, Any]:
+        """name -> value-expr | FunctionInfo (nested def) for simple
+        module-of-truth assignments inside ``fi`` (nested def bodies are
+        opaque to the enclosing scope)."""
+        if fi._local_env is not None:
+            return fi._local_env
+        env: Dict[str, Any] = {}
+
+        def scan(stmts: Iterable[ast.stmt]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for cand in fi.module.all_functions:
+                        if cand.node is stmt:
+                            env[stmt.name] = cand
+                            break
+                    continue
+                if isinstance(stmt, ast.ClassDef):
+                    continue
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name):
+                    name = stmt.targets[0].id
+                    # reassignment = ambiguous -> opaque (resolve-or-skip)
+                    env[name] = stmt.value if name not in env else None
+                elif isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name) \
+                        and stmt.value is not None:
+                    env[stmt.target.id] = stmt.value
+                scan([s for s in ast.iter_child_nodes(stmt)
+                      if isinstance(s, ast.stmt)])
+
+        scan(fi.node.body)
+        fi._local_env = env
+        return env
+
+    # -- callable resolution ----------------------------------------------
+    def resolve_call(self, call: ast.Call,
+                     ctx: Optional[FunctionInfo],
+                     mod: Optional[ModuleInfo] = None,
+                     depth: int = _MAX_DEPTH) -> Optional[CallTarget]:
+        mod = mod or (ctx.module if ctx is not None else None)
+        if mod is None:
+            return None
+        return self.resolve_callable(call.func, ctx, mod, depth)
+
+    def resolve_callable(self, expr: ast.AST, ctx: Optional[FunctionInfo],
+                         mod: ModuleInfo,
+                         depth: int = _MAX_DEPTH) -> Optional[CallTarget]:
+        if depth <= 0:
+            return None
+        if isinstance(expr, ast.Name):
+            return self._resolve_name(expr.id, ctx, mod, depth)
+        if isinstance(expr, ast.Attribute):
+            return self._resolve_attribute(expr, ctx, mod, depth)
+        if isinstance(expr, ast.Call):
+            # functools.partial(f, ...) used as a callable expression
+            return self._resolve_partial(expr, ctx, mod, depth)
+        if isinstance(expr, ast.IfExp):
+            a = self.resolve_callable(expr.body, ctx, mod, depth - 1)
+            b = self.resolve_callable(expr.orelse, ctx, mod, depth - 1)
+            if a is not None and b is not None and a == b:
+                return a
+            return None
+        return None
+
+    def _resolve_name(self, name: str, ctx: Optional[FunctionInfo],
+                      mod: ModuleInfo, depth: int) -> Optional[CallTarget]:
+        frame = ctx
+        while frame is not None:
+            if name in frame.params():
+                return None  # opaque: a parameter shadows everything
+            env = self.local_env(frame)
+            if name in env:
+                val = env[name]
+                if isinstance(val, FunctionInfo):
+                    return CallTarget(val)
+                if val is None:
+                    return None
+                return self._resolve_value(val, frame, mod, depth - 1)
+            frame = frame.parent
+        got = self.project.module_symbol(mod, name, depth)
+        if got is None:
+            return None
+        kind, obj = got
+        if kind == "func":
+            return CallTarget(obj)
+        if kind == "class":
+            init = self.project.class_method(obj, "__init__", depth - 1)
+            if init is not None:
+                return CallTarget(init, bound_pos=1)
+            return None
+        if kind == "assign":
+            return self._resolve_value(obj, None, mod, depth - 1)
+        return None
+
+    def _resolve_attribute(self, expr: ast.Attribute,
+                           ctx: Optional[FunctionInfo], mod: ModuleInfo,
+                           depth: int) -> Optional[CallTarget]:
+        base = expr.value
+        # module attribute: autotune.ensure_tuned(...)
+        bmod = self.resolve_module(base, ctx, mod, depth - 1)
+        if bmod is not None:
+            got = self.project.module_symbol(bmod, expr.attr, depth - 1)
+            if got is None:
+                return None
+            kind, obj = got
+            if kind == "func":
+                return CallTarget(obj)
+            if kind == "class":
+                init = self.project.class_method(obj, "__init__", depth - 1)
+                return CallTarget(init, bound_pos=1) if init else None
+            return None
+        # class-attribute access: SlotScheduler.select_victim(...)
+        dotted_base = _dotted(base)
+        if dotted_base is not None and not self._is_shadowed(
+                dotted_base.split(".")[0], ctx):
+            ci = self.project.resolve_class_named(mod, dotted_base,
+                                                  depth - 1)
+            if ci is not None:
+                meth = self.project.class_method(ci, expr.attr, depth - 1)
+                if meth is not None:
+                    decos = {_last(d) for d in meth.node.decorator_list}
+                    # classmethods bind cls; static/instance methods
+                    # accessed through the class bind nothing
+                    bound = 1 if "classmethod" in decos else 0
+                    return CallTarget(meth, bound_pos=bound)
+        # method on an inferred receiver type: self-binding consumes
+        # the leading positional param
+        ci = self.infer_type(base, ctx, mod, depth - 1)
+        if ci is not None:
+            meth = self.project.class_method(ci, expr.attr, depth - 1)
+            if meth is not None:
+                is_static = any(_last(d) == "staticmethod"
+                                for d in meth.node.decorator_list)
+                return CallTarget(meth, bound_pos=0 if is_static else 1)
+        return None
+
+    def _is_shadowed(self, name: str, ctx: Optional[FunctionInfo]) -> bool:
+        frame = ctx
+        while frame is not None:
+            if name in frame.params() or name in self.local_env(frame):
+                return True
+            frame = frame.parent
+        return False
+
+    def resolve_module(self, expr: ast.AST, ctx: Optional[FunctionInfo],
+                       mod: ModuleInfo, depth: int) -> Optional[ModuleInfo]:
+        if depth <= 0:
+            return None
+        if isinstance(expr, ast.Name):
+            frame = ctx
+            while frame is not None:
+                if expr.id in frame.params() or expr.id in self.local_env(frame):
+                    return None
+                frame = frame.parent
+            got = self.project.module_symbol(mod, expr.id, depth)
+            if got is not None and got[0] == "module":
+                return got[1]
+            return None
+        if isinstance(expr, ast.Attribute):
+            parent = self.resolve_module(expr.value, ctx, mod, depth - 1)
+            if parent is None:
+                return None
+            got = self.project.module_symbol(parent, expr.attr, depth - 1)
+            if got is not None and got[0] == "module":
+                return got[1]
+            return None
+        return None
+
+    def _resolve_value(self, val: ast.AST, ctx: Optional[FunctionInfo],
+                       mod: ModuleInfo, depth: int) -> Optional[CallTarget]:
+        if depth <= 0 or val is None:
+            return None
+        if isinstance(val, (ast.Name, ast.Attribute, ast.IfExp)):
+            return self.resolve_callable(val, ctx, mod, depth)
+        if isinstance(val, ast.Call):
+            return self._resolve_partial(val, ctx, mod, depth)
+        return None
+
+    def _resolve_partial(self, call: ast.Call, ctx: Optional[FunctionInfo],
+                         mod: ModuleInfo, depth: int) -> Optional[CallTarget]:
+        if _last(call.func) != "partial" or not call.args:
+            return None
+        inner = self.resolve_callable(call.args[0], ctx, mod, depth - 1)
+        if inner is None:
+            return None
+        return CallTarget(inner.fn,
+                          bound_pos=inner.bound_pos + len(call.args) - 1,
+                          bound_kw=inner.bound_kw
+                          | frozenset(k.arg for k in call.keywords if k.arg))
+
+    # -- receiver type inference ------------------------------------------
+    def infer_type(self, expr: ast.AST, ctx: Optional[FunctionInfo],
+                   mod: ModuleInfo, depth: int = _MAX_DEPTH
+                   ) -> Optional[ClassInfo]:
+        if depth <= 0:
+            return None
+        if isinstance(expr, ast.Name):
+            if expr.id in ("self", "cls") and ctx is not None:
+                frame = ctx
+                while frame is not None and frame.cls is None:
+                    frame = frame.parent
+                return frame.cls if frame is not None else None
+            frame = ctx
+            while frame is not None:
+                ann = frame.annotation_for(expr.id)
+                if ann is not None:
+                    return self._class_from_annotation(ann, frame.module, depth)
+                if expr.id in frame.params():
+                    return None
+                env = self.local_env(frame)
+                if expr.id in env:
+                    val = env[expr.id]
+                    if val is None or isinstance(val, FunctionInfo):
+                        return None
+                    return self._infer_value_type(val, frame, mod, depth - 1)
+                frame = frame.parent
+            got = self.project.module_symbol(mod, expr.id, depth)
+            if got is not None and got[0] == "assign":
+                return self._infer_value_type(got[1], None, mod, depth - 1)
+            return None
+        if isinstance(expr, ast.Attribute):
+            if isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+                    and ctx is not None:
+                frame = ctx
+                while frame is not None and frame.cls is None:
+                    frame = frame.parent
+                if frame is not None and frame.cls is not None:
+                    hint = frame.cls.attr_types.get(expr.attr)
+                    if hint is not None:
+                        ci = self._class_from_annotation(hint, frame.cls.module,
+                                                         depth)
+                        if ci is not None:
+                            return ci
+                        return self._infer_value_type(hint, frame, mod,
+                                                      depth - 1)
+            return None
+        if isinstance(expr, ast.Call):
+            return self._infer_value_type(expr, ctx, mod, depth)
+        if isinstance(expr, ast.IfExp):
+            a = self.infer_type(expr.body, ctx, mod, depth - 1)
+            b = self.infer_type(expr.orelse, ctx, mod, depth - 1)
+            if a is not None and a is b:
+                return a
+            # the repo's `x = default() if x is None else x` pattern:
+            # one branch is the annotated param itself
+            return a or b if (a is None) != (b is None) else None
+        return None
+
+    def _infer_value_type(self, val: ast.AST, ctx: Optional[FunctionInfo],
+                          mod: ModuleInfo, depth: int) -> Optional[ClassInfo]:
+        if depth <= 0:
+            return None
+        if isinstance(val, ast.Call):
+            # class construction — works for dataclasses too, where no
+            # explicit __init__ def exists to resolve
+            if isinstance(val.func, (ast.Name, ast.Attribute)):
+                dotted = _dotted(val.func)
+                if dotted and not self._is_shadowed(dotted.split(".")[0],
+                                                    ctx):
+                    ci = self.project.resolve_class_named(mod, dotted,
+                                                          depth - 1)
+                    if ci is not None:
+                        return ci
+            tgt = self.resolve_callable(val.func, ctx, mod, depth - 1)
+            if tgt is not None:
+                if tgt.fn.name == "__init__" and tgt.fn.cls is not None:
+                    return tgt.fn.cls
+                ret = _unwrap_annotation(tgt.fn.node.returns)
+                if ret is not None:
+                    return self._class_from_annotation(ret, tgt.fn.module,
+                                                       depth - 1)
+            return None
+        if isinstance(val, (ast.Name, ast.Attribute, ast.IfExp)):
+            return self.infer_type(val, ctx, mod, depth - 1)
+        return None
+
+    def _class_from_annotation(self, ann: ast.AST, mod: ModuleInfo,
+                               depth: int) -> Optional[ClassInfo]:
+        ann = _unwrap_annotation(ann)
+        if ann is None:
+            return None
+        dotted = _dotted(ann)
+        if dotted is None:
+            return None
+        return self.project.resolve_class_named(mod, dotted, depth)
+
+    # -- call graph --------------------------------------------------------
+    def call_sites(self, fi: FunctionInfo) -> List[Tuple[ast.Call, Optional[CallTarget]]]:
+        """Every call lexically in ``fi`` (nested def bodies excluded),
+        with its resolution (or None)."""
+        out: List[Tuple[ast.Call, Optional[CallTarget]]] = []
+        for call in _own_nodes(fi.node, ast.Call):
+            out.append((call, self.resolve_call(call, fi)))
+        return out
+
+    def call_graph(self) -> Dict[str, List[str]]:
+        """qname -> sorted unique callee qnames, resolved edges only."""
+        graph: Dict[str, List[str]] = {}
+        for fi in self.project.sorted_functions():
+            edges = {t.fn.qname for _, t in self.call_sites(fi) if t is not None}
+            graph[fi.qname] = sorted(edges)
+        return graph
+
+
+def _own_nodes(fn_node: Any, kind: Any) -> List[Any]:
+    """ast.walk restricted to ``fn_node``'s own body (nested defs opaque)."""
+    out: List[Any] = []
+    stack: List[ast.AST] = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(node, kind):
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    out.sort(key=lambda n: (getattr(n, "lineno", 0), getattr(n, "col_offset", 0)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# taint engine
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TaintSource:
+    kind: str           # "wall-clock" | "global-rng" | "os-entropy" | "set-order"
+    desc: str           # human-readable, e.g. "time.time()"
+    path: str
+    line: int
+
+
+@dataclass(frozen=True)
+class SinkSpec:
+    """A labeled sink: calls whose listed parameters must stay clean.
+
+    ``name``
+        last attribute/name segment the call must match.
+    ``category``
+        finding taxonomy bucket (scheduler-decision, retune-trigger, ...).
+    ``params``
+        parameter names that are sinks; None = every argument.
+    ``qname_suffix``
+        when set, the call must RESOLVE to a def whose qname ends with
+        this — generic names (``put``, ``key``) only sink on the real
+        target.  When None the bare name is distinctive enough to match
+        unresolved calls too.
+    ``decision``
+        the sink is a control-flow decision: reaching it *under a
+        tainted branch condition* is a finding even with clean args.
+    """
+
+    name: str
+    category: str
+    params: Optional[FrozenSet[str]] = None
+    qname_suffix: Optional[str] = None
+    decision: bool = False
+
+
+@dataclass(frozen=True)
+class TaintFinding:
+    path: str
+    line: int
+    col: int
+    message: str
+
+
+# abstract taint values: ("src", TaintSource) | ("param", index)
+_Taint = Tuple[str, Any]
+
+
+@dataclass
+class _Summary:
+    ret_params: Set[int] = field(default_factory=set)
+    ret_sources: Set[TaintSource] = field(default_factory=set)
+    # param index -> {(category, sink name, via-description)}
+    param_sinks: Dict[int, Set[Tuple[str, str, str]]] = field(default_factory=dict)
+
+    def snapshot(self) -> Tuple:
+        return (frozenset(self.ret_params), frozenset(self.ret_sources),
+                frozenset((k, frozenset(v)) for k, v in self.param_sinks.items()))
+
+
+# builtins that are order-insensitive reductions: consuming a set through
+# them does NOT leak iteration order
+_ORDER_SANITIZERS = frozenset({"sorted", "len", "sum", "min", "max", "any",
+                               "all", "frozenset", "set"})
+# builtins that materialize iteration order: set in, order-leak out
+_ORDER_CARRIERS = frozenset({"list", "tuple", "iter", "enumerate", "next",
+                             "reversed", "join", "map", "filter", "zip"})
+_SET_CTORS = frozenset({"set", "frozenset"})
+
+
+class TaintAnalysis:
+    """Forward taint with per-function summaries to a fixpoint.
+
+    ``classify_source(call, target) -> Optional[TaintSource]`` labels
+    source calls; ``sinks`` maps a last-segment name to its SinkSpecs;
+    ``boundaries`` is the set of metric-record type names whose
+    construction launders taint.
+    """
+
+    def __init__(self, project: Project, resolver: Resolver,
+                 classify_source: Any, sinks: Dict[str, List[SinkSpec]],
+                 boundaries: FrozenSet[str]) -> None:
+        self.project = project
+        self.resolver = resolver
+        self.classify_source = classify_source
+        self.sinks = sinks
+        self.boundaries = boundaries
+        self.summaries: Dict[str, _Summary] = {}
+        self.findings: List[TaintFinding] = []
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> List[TaintFinding]:
+        funcs = self.project.sorted_functions()
+        for fi in funcs:
+            self.summaries[fi.qname] = _Summary()
+        for _ in range(_MAX_ITERS):
+            changed = False
+            for fi in funcs:
+                before = self.summaries[fi.qname].snapshot()
+                _FunctionPass(self, fi, report=False).run()
+                if self.summaries[fi.qname].snapshot() != before:
+                    changed = True
+            if not changed:
+                break
+        # reporting pass with stable summaries
+        seen: Set[Tuple] = set()
+        for fi in funcs:
+            fpass = _FunctionPass(self, fi, report=True)
+            fpass.run()
+            for f in fpass.findings:
+                key = (f.path, f.line, f.col, f.message)
+                if key not in seen:
+                    seen.add(key)
+                    self.findings.append(f)
+        self.findings.sort(key=lambda f: (f.path, f.line, f.col, f.message))
+        return self.findings
+
+    # param index for a callee, self excluded for bound calls
+    @staticmethod
+    def effective_params(target: CallTarget) -> List[str]:
+        return target.fn.params()[target.bound_pos:]
+
+
+class _FunctionPass:
+    """One flow-sensitive forward pass over a function body."""
+
+    def __init__(self, analysis: TaintAnalysis, fi: FunctionInfo,
+                 report: bool) -> None:
+        self.a = analysis
+        self.fi = fi
+        self.report = report
+        self.summary = analysis.summaries[fi.qname]
+        self.env: Dict[str, Set[_Taint]] = {}
+        self.set_typed: Set[str] = set()
+        self.cond_stack: List[Set[_Taint]] = []
+        self.findings: List[TaintFinding] = []
+        params = fi.params()
+        skip_self = 1 if (fi.is_method and params and params[0] in ("self", "cls")) else 0
+        self.param_index = {p: i for i, p in enumerate(params[skip_self:])}
+        self.self_name = params[0] if skip_self else None
+
+    def run(self) -> None:
+        self.visit_block(self.fi.node.body)
+
+    # -- statements --------------------------------------------------------
+    def visit_block(self, stmts: Iterable[ast.stmt]) -> None:
+        for stmt in stmts:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self.eval(stmt.value)
+            is_set = self._is_set_expr(stmt.value)
+            for tgt in stmt.targets:
+                self.assign(tgt, t, is_set)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self.assign(stmt.target, self.eval(stmt.value),
+                            self._is_set_expr(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.eval(stmt.value) | self.eval(stmt.target)
+            self.assign(stmt.target, t, False)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                for kind, payload in self.eval(stmt.value):
+                    if kind == "src":
+                        self.summary.ret_sources.add(payload)
+                    else:
+                        self.summary.ret_params.add(payload)
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value)
+        elif isinstance(stmt, (ast.If,)):
+            t = self.eval(stmt.test)
+            self.cond_stack.append(t)
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+            self.cond_stack.pop()
+        elif isinstance(stmt, ast.While):
+            t = self.eval(stmt.test)
+            self.cond_stack.append(t)
+            for _ in range(2):  # two passes: propagate through the back edge
+                self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+            self.cond_stack.pop()
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            it = self.eval(stmt.iter)
+            if self._is_set_expr(stmt.iter):
+                it = it | {("src", TaintSource(
+                    "set-order", "set iteration order", self.fi.module.path,
+                    stmt.iter.lineno))}
+            for _ in range(2):
+                self.assign(stmt.target, it, False)
+                self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                t = self.eval(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign(item.optional_vars, t, False)
+            self.visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body)
+            for h in stmt.handlers:
+                self.visit_block(h.body)
+            self.visit_block(stmt.orelse)
+            self.visit_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.Assert,)):
+            self.eval(stmt.test)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.eval(stmt.exc)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                self.eval(tgt)
+        # Pass/Break/Continue/Global/Nonlocal/Import: no taint flow
+
+    def assign(self, tgt: ast.AST, taints: Set[_Taint], is_set: bool) -> None:
+        if isinstance(tgt, ast.Name):
+            self.env[tgt.id] = set(taints)
+            if is_set:
+                self.set_typed.add(tgt.id)
+            else:
+                self.set_typed.discard(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self.assign(e, taints, False)
+        elif isinstance(tgt, ast.Starred):
+            self.assign(tgt.value, taints, False)
+        elif isinstance(tgt, (ast.Attribute, ast.Subscript)):
+            root = tgt
+            while isinstance(root, (ast.Attribute, ast.Subscript)):
+                root = root.value
+            if isinstance(root, ast.Name) and taints:
+                # field-insensitive: storing taint into obj.x taints obj —
+                # except `self`, whose cross-method state the per-function
+                # summaries deliberately do not model
+                if root.id != self.self_name:
+                    self.env[root.id] = self.env.get(root.id, set()) | taints
+
+    # -- expressions -------------------------------------------------------
+    def eval(self, e: Optional[ast.AST]) -> Set[_Taint]:
+        if e is None:
+            return set()
+        if isinstance(e, ast.Name):
+            if e.id in self.env:
+                return set(self.env[e.id])
+            if e.id in self.param_index:
+                return {("param", self.param_index[e.id])}
+            return self._module_level_taint(e.id)
+        if isinstance(e, ast.Constant):
+            return set()
+        if isinstance(e, ast.Call):
+            return self.eval_call(e)
+        if isinstance(e, ast.Attribute):
+            return self.eval(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.eval(e.value) | self.eval(e.slice)
+        if isinstance(e, ast.BinOp):
+            return self.eval(e.left) | self.eval(e.right)
+        if isinstance(e, ast.BoolOp):
+            out: Set[_Taint] = set()
+            for v in e.values:
+                out |= self.eval(v)
+            return out
+        if isinstance(e, ast.UnaryOp):
+            return self.eval(e.operand)
+        if isinstance(e, ast.Compare):
+            out = self.eval(e.left)
+            for c in e.comparators:
+                out |= self.eval(c)
+            return out
+        if isinstance(e, ast.IfExp):
+            return self.eval(e.body) | self.eval(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            out = set()
+            for v in e.elts:
+                out |= self.eval(v)
+            return out
+        if isinstance(e, ast.Dict):
+            out = set()
+            for k in e.keys:
+                out |= self.eval(k)
+            for v in e.values:
+                out |= self.eval(v)
+            return out
+        if isinstance(e, ast.JoinedStr):
+            out = set()
+            for v in e.values:
+                out |= self.eval(v)
+            return out
+        if isinstance(e, ast.FormattedValue):
+            return self.eval(e.value)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            out = set()
+            for gen in e.generators:
+                out |= self.eval(gen.iter)
+                if self._is_set_expr(gen.iter):
+                    out.add(("src", TaintSource(
+                        "set-order", "set iteration order",
+                        self.fi.module.path, gen.iter.lineno)))
+            if isinstance(e, ast.DictComp):
+                out |= self.eval(e.key) | self.eval(e.value)
+            else:
+                out |= self.eval(e.elt)
+            return out
+        if isinstance(e, ast.Starred):
+            return self.eval(e.value)
+        if isinstance(e, ast.Await):
+            return self.eval(e.value)
+        if isinstance(e, ast.Lambda):
+            return set()
+        if isinstance(e, ast.Slice):
+            return self.eval(e.lower) | self.eval(e.upper) | self.eval(e.step)
+        if isinstance(e, ast.NamedExpr):
+            t = self.eval(e.value)
+            self.assign(e.target, t, self._is_set_expr(e.value))
+            return t
+        return set()
+
+    def _module_level_taint(self, name: str) -> Set[_Taint]:
+        """A free name bound at module scope to a source expression
+        (``T0 = time.time()`` read inside a function)."""
+        val = self.fi.module.assigns.get(name)
+        if isinstance(val, ast.Call):
+            tgt = self.a.resolver.resolve_call(val, None, self.fi.module)
+            src = self.a.classify_source(val, tgt, self.fi.module.path)
+            if src is not None:
+                return {("src", src)}
+        return set()
+
+    # -- calls -------------------------------------------------------------
+    def eval_call(self, call: ast.Call) -> Set[_Taint]:
+        fname = _last(call.func)
+        arg_taints = [self.eval(a) for a in call.args]
+        kw_taints = {k.arg: self.eval(k.value) for k in call.keywords}
+        all_args: Set[_Taint] = set()
+        for t in arg_taints:
+            all_args |= t
+        for t in kw_taints.values():
+            all_args |= t
+
+        target = self.a.resolver.resolve_call(call, self.fi)
+
+        # 1. source?
+        src = self.a.classify_source(call, target, self.fi.module.path)
+        if src is not None:
+            return all_args | {("src", src)}
+
+        # 2. metric boundary: constructing a perf record absorbs taint
+        if fname in self.a.boundaries or (
+                target is not None and target.fn.cls is not None
+                and target.fn.name == "__init__"
+                and target.fn.cls.name in self.a.boundaries):
+            return set()
+
+        # 3. set-order mechanics
+        if fname in _ORDER_SANITIZERS:
+            return {t for t in all_args
+                    if not (t[0] == "src" and t[1].kind == "set-order")}
+        if fname == "pop" and isinstance(call.func, ast.Attribute) \
+                and self._is_set_expr(call.func.value):
+            return all_args | {("src", TaintSource(
+                "set-order", "set.pop() (arbitrary element)",
+                self.fi.module.path, call.lineno))}
+        if fname in _ORDER_CARRIERS and call.args \
+                and self._is_set_expr(call.args[0]):
+            return all_args | {("src", TaintSource(
+                "set-order", "set iteration order",
+                self.fi.module.path, call.args[0].lineno))}
+
+        # 4. sink check
+        self._check_sinks(call, fname, target, arg_taints, kw_taints)
+
+        # 5. propagate through the callee summary (or pass-through)
+        recv_taint: Set[_Taint] = set()
+        if isinstance(call.func, ast.Attribute):
+            recv_taint = self.eval(call.func.value)
+        if target is not None:
+            summ = self.a.summaries.get(target.fn.qname)
+            if summ is not None:
+                out: Set[_Taint] = set()
+                out |= {("src", s) for s in summ.ret_sources}
+                mapping = self._map_args(call, target, arg_taints, kw_taints)
+                if mapping is not None:
+                    for idx in summ.ret_params:
+                        out |= mapping.get(idx, set())
+                else:
+                    if summ.ret_params:
+                        out |= all_args | recv_taint
+                return out
+        # opaque callee: conservative pass-through of argument +
+        # receiver taint (str(t), math.floor(t), t.total_seconds(), ...)
+        return all_args | recv_taint
+
+    def _map_args(self, call: ast.Call, target: CallTarget,
+                  arg_taints: List[Set[_Taint]],
+                  kw_taints: Dict[Optional[str], Set[_Taint]]
+                  ) -> Optional[Dict[int, Set[_Taint]]]:
+        """Call-site arg taints keyed by callee param index (self-relative).
+        None when *args/**kwargs make the mapping ambiguous."""
+        if any(isinstance(a, ast.Starred) for a in call.args) \
+                or any(k.arg is None for k in call.keywords):
+            return None
+        callee = target.fn
+        params = callee.params()
+        skip = 1 if (callee.is_method and params
+                     and params[0] in ("self", "cls")
+                     and target.bound_pos >= 1) else 0
+        eff = params[skip:]
+        # positional slots consumed by partial-style pre-binding
+        pre = target.bound_pos - skip
+        if pre < 0 or pre > len(eff):
+            return None
+        out: Dict[int, Set[_Taint]] = {}
+        for i, t in enumerate(arg_taints):
+            slot = pre + i
+            if slot >= len(eff):
+                return None  # swallowed by *args — ambiguous
+            out[slot] = t
+        name_to_idx = {p: i for i, p in enumerate(eff)}
+        for kname, t in kw_taints.items():
+            if kname is None:
+                return None
+            if kname in name_to_idx:
+                out[name_to_idx[kname]] = t
+            # unknown kw swallowed by **kw: drop (no param to bind)
+        return out
+
+    def _check_sinks(self, call: ast.Call, fname: Optional[str],
+                     target: Optional[CallTarget],
+                     arg_taints: List[Set[_Taint]],
+                     kw_taints: Dict[Optional[str], Set[_Taint]]) -> None:
+        if fname is None:
+            return
+        specs = self.a.sinks.get(fname)
+        direct_specs: List[SinkSpec] = []
+        if specs:
+            for spec in specs:
+                if spec.qname_suffix is not None:
+                    if target is None or \
+                            not target.fn.qname.endswith(spec.qname_suffix):
+                        continue
+                direct_specs.append(spec)
+        if not direct_specs:
+            # summary-carried sinks: tainted arg into a helper whose
+            # param eventually reaches a sink
+            self._check_summary_sinks(call, target, arg_taints, kw_taints)
+            return
+        for spec in direct_specs:
+            self._apply_spec(call, spec, target, arg_taints, kw_taints)
+        self._check_summary_sinks(call, target, arg_taints, kw_taints)
+
+    def _apply_spec(self, call: ast.Call, spec: SinkSpec,
+                    target: Optional[CallTarget],
+                    arg_taints: List[Set[_Taint]],
+                    kw_taints: Dict[Optional[str], Set[_Taint]]) -> None:
+        # which argument expressions are sink-relevant?
+        checked: List[Tuple[str, Set[_Taint]]] = []
+        if spec.params is None:
+            for i, t in enumerate(arg_taints):
+                checked.append((f"arg{i}", t))
+            for k, t in kw_taints.items():
+                checked.append((k or "**", t))
+        else:
+            if target is not None:
+                mapping = self._map_args(call, target, arg_taints, kw_taints)
+                eff = TaintAnalysis.effective_params(target)
+                if mapping is not None:
+                    for idx, t in mapping.items():
+                        if idx < len(eff) and eff[idx] in spec.params:
+                            checked.append((eff[idx], t))
+            else:
+                # unresolved + param-filtered: positional mapping unknown,
+                # keywords still name their params
+                for k, t in kw_taints.items():
+                    if k in spec.params:
+                        checked.append((k, t))
+        for pname, taints in checked:
+            for kind, payload in taints:
+                if kind == "src":
+                    self._emit(call, spec, payload, pname)
+                else:  # param taint -> callee summary, caller re-checks
+                    self.summary.param_sinks.setdefault(payload, set()).add(
+                        (spec.category, spec.name,
+                         f"argument {pname!r} of {spec.name}()"))
+        # control-dependence: a *decision* sink fired under a tainted branch
+        if spec.decision:
+            for cond in self.cond_stack:
+                for kind, payload in cond:
+                    if kind == "src":
+                        self._emit(call, spec, payload, None, controls=True)
+                    else:
+                        self.summary.param_sinks.setdefault(payload, set()).add(
+                            (spec.category, spec.name,
+                             f"branch condition guarding {spec.name}()"))
+
+    def _check_summary_sinks(self, call: ast.Call,
+                             target: Optional[CallTarget],
+                             arg_taints: List[Set[_Taint]],
+                             kw_taints: Dict[Optional[str], Set[_Taint]]) -> None:
+        if target is None:
+            return
+        summ = self.a.summaries.get(target.fn.qname)
+        if summ is None or not summ.param_sinks:
+            return
+        mapping = self._map_args(call, target, arg_taints, kw_taints)
+        if mapping is None:
+            return
+        eff = TaintAnalysis.effective_params(target)
+        for idx, taints in mapping.items():
+            entries = summ.param_sinks.get(idx)
+            if not entries:
+                continue
+            for kind, payload in taints:
+                for category, sink_name, via in sorted(entries):
+                    if kind == "src":
+                        pname = eff[idx] if idx < len(eff) else f"arg{idx}"
+                        self._emit_via(call, category, sink_name, payload,
+                                       pname, target.fn.qname, via)
+                    else:
+                        self.summary.param_sinks.setdefault(payload, set()).add(
+                            (category, sink_name,
+                             f"via {target.fn.qname.split(':')[-1]}(): {via}"))
+
+    # -- finding emission --------------------------------------------------
+    def _emit(self, call: ast.Call, spec: SinkSpec, src: TaintSource,
+              pname: Optional[str], controls: bool = False) -> None:
+        if not self.report:
+            return
+        if controls:
+            msg = (f"nondeterministic value ({src.desc}, line {src.line}) "
+                   f"controls the branch reaching {spec.category} sink "
+                   f"{spec.name}()")
+        else:
+            msg = (f"nondeterministic value ({src.desc}, line {src.line}) "
+                   f"reaches {spec.category} sink {spec.name}() via "
+                   f"parameter {pname!r}")
+        self.findings.append(TaintFinding(self.fi.module.path, call.lineno,
+                                          call.col_offset, msg))
+
+    def _emit_via(self, call: ast.Call, category: str, sink_name: str,
+                  src: TaintSource, pname: str, callee_qname: str,
+                  via: str) -> None:
+        if not self.report:
+            return
+        callee = callee_qname.split(":")[-1]
+        msg = (f"nondeterministic value ({src.desc}, line {src.line}) "
+               f"reaches {category} sink {sink_name}() interprocedurally: "
+               f"{callee}({pname}=...) -> {via}")
+        self.findings.append(TaintFinding(self.fi.module.path, call.lineno,
+                                          call.col_offset, msg))
+
+    # -- set-typedness -----------------------------------------------------
+    def _is_set_expr(self, e: Optional[ast.AST]) -> bool:
+        if isinstance(e, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(e, ast.Name):
+            return e.id in self.set_typed
+        if isinstance(e, ast.Call):
+            f = _last(e.func)
+            if f in _SET_CTORS:
+                return True
+            if f in ("union", "intersection", "difference",
+                     "symmetric_difference", "copy") \
+                    and isinstance(e.func, ast.Attribute) \
+                    and self._is_set_expr(e.func.value):
+                return True
+        if isinstance(e, ast.BinOp) and isinstance(e.op, (ast.BitOr, ast.BitAnd,
+                                                          ast.Sub)):
+            return self._is_set_expr(e.left) and self._is_set_expr(e.right)
+        return False

@@ -56,6 +56,33 @@ active; sharding mistakes surface as silent replication, not errors):
   dimension silently replicates on every mesh — the typo class
   ``spec_for_shape``'s drop-unknown semantics can never raise on.
 
+Interprocedural dataflow rules (built on ``repro.analysis.dataflow``'s
+call graph + taint engine; PR 10):
+
+* ``determinism-taint``     — a nondeterministic value (wall clock,
+  global RNG, ``os.urandom``, set iteration order) reaches a *decision*
+  sink: scheduler admission/victim choices, retune triggers, optimizer
+  candidate generation, sampling keys, cache-key construction.  Timers
+  that only accumulate into metric records (``PerfMetric``,
+  ``TuningReport``, ``GenerationResult``, …) are the accepted pattern
+  and stay clean — the taint must reach a decision, interprocedurally.
+* ``jit-trace-capture``     — a jitted (or ``pallas_call``-wrapped)
+  function closes over mutable module state that the module actually
+  mutates, or over an ambient ``*Config(...)`` object; or a *bound
+  method of a shared object* is jitted in a file that builds meshes
+  (the PR 9 footgun: bound methods of one shared model hash equal, so
+  the jit cache silently reuses jaxprs traced under another engine's
+  mesh — wrap in a per-instance closure, as ``_jit_mesh_keyed`` does).
+* ``jit-host-effect``       — host-side effects under trace: bare
+  ``print`` (use ``jax.debug.print``), ``open``/stdout writes,
+  ``global`` rebinding, or mutation of a closed-over container — all
+  run once at trace time, then never again.
+* ``cache-lock-discipline`` — a cache-state mutation or cache-file
+  write not dominated by the sidecar-``flock`` acquire
+  (``_file_lock``), checked interprocedurally: an unlocked helper is
+  clean only when *every* resolved call site holds the lock
+  (``put``/``put_serve_config``/``put_train_config`` → ``_save``).
+
 Every check is *resolve-or-skip*: when a piece (grid length, spec list,
 kernel def, static names) is not statically resolvable, the site is
 skipped rather than guessed at — findings are high-confidence by
@@ -65,11 +92,13 @@ pragma::
     alloc.reserve(rid, n)  # lint: ignore[alloc-try-no-release]
     risky_call()           # lint: ignore          (all rules)
 
-Usage (machine-readable JSON on stdout)::
+Usage (machine-readable JSON on stdout; byte-identical across runs —
+findings and keys are sorted)::
 
     python -m repro.analysis.lint src/repro            # report
     python -m repro.analysis.lint --check src/repro    # CI gate: exit 1
                                                        # on any finding
+    python -m repro.analysis.lint --format github src  # CI annotations
 """
 from __future__ import annotations
 
@@ -81,6 +110,11 @@ import sys
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+try:  # package-relative (python -m repro.analysis.lint)
+    from . import dataflow as _df
+except ImportError:  # pragma: no cover - direct script invocation
+    import dataflow as _df  # type: ignore[no-redef]
 
 __all__ = ["Finding", "RULES", "lint_file", "lint_paths", "main"]
 
@@ -115,6 +149,21 @@ RULES: Dict[str, Tuple[str, str]] = {
     "constrain-unknown-axis": (
         "error", "logical axis name that no sharding rules preset maps "
                  "(the dimension would silently replicate)"),
+    "determinism-taint": (
+        "error", "nondeterministic value (wall clock / global RNG / "
+                 "set order) reaches a scheduling, retune, sampling or "
+                 "cache-key decision"),
+    "jit-trace-capture": (
+        "error", "jitted function captures mutable module state, an "
+                 "ambient config object, or is a bound method of a "
+                 "shared object under an ambient mesh"),
+    "jit-host-effect": (
+        "error", "host-side effect (print/IO/global or closure "
+                 "mutation) inside a traced function runs only at "
+                 "trace time"),
+    "cache-lock-discipline": (
+        "error", "cache mutation or cache-file write reachable without "
+                 "holding the _file_lock sidecar flock"),
 }
 
 try:  # single source of truth when the package is importable
@@ -137,6 +186,147 @@ _RELEASE = frozenset({"release", "release_all"})
 # constructors whose module-level result a jitted function must not
 # close over (jit-mesh-closure)
 _MESH_CTORS = frozenset({"Mesh", "NamedSharding", "make_mesh"})
+
+# ---------------------------------------------------------------------------
+# determinism-taint configuration (sources / sinks / boundaries)
+# ---------------------------------------------------------------------------
+# wall-clock reads, dotted (module call) and bare (from-import) forms
+_CLOCK_DOTTED = frozenset({
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "time.monotonic_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow"})
+_CLOCK_BARE = frozenset({"perf_counter", "monotonic", "time_ns",
+                         "perf_counter_ns", "monotonic_ns"})
+# stdlib `random` module-level functions (the shared global generator)
+_PY_RANDOM_FNS = frozenset({
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "betavariate",
+    "expovariate", "triangular", "lognormvariate", "vonmisesvariate",
+    "paretovariate", "weibullvariate", "getrandbits", "randbytes"})
+# np.random legacy module-level functions (the shared global RandomState)
+_NP_RANDOM_FNS = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "bytes", "exponential",
+    "gamma", "geometric", "gumbel", "laplace", "logistic", "lognormal",
+    "poisson"})
+
+# metric-record types whose construction absorbs taint: a timer flowing
+# into a perf record is the repo's accepted pattern (engine.py holds
+# ~20 such sites); taint must reach a *decision* to be a finding
+_TAINT_BOUNDARIES = frozenset({
+    "PerfMetric", "Trial", "TuningResult", "TuningReport",
+    "GenerationResult", "RequestStats", "StepStats"})
+
+
+def _classify_taint_source(call: ast.Call, target, path: str):
+    """Label a call that injects nondeterminism (None = clean)."""
+    dotted = _dotted(call.func) or ""
+    name = _last(call.func)
+    if dotted in _CLOCK_DOTTED or (isinstance(call.func, ast.Name)
+                                   and name in _CLOCK_BARE):
+        return _df.TaintSource("wall-clock", f"{dotted or name}()",
+                               path, call.lineno)
+    if dotted == "os.urandom" or dotted in ("uuid.uuid1", "uuid.uuid4"):
+        return _df.TaintSource("os-entropy", f"{dotted}()", path,
+                               call.lineno)
+    parts = dotted.split(".")
+    if len(parts) == 2 and parts[0] == "random" \
+            and parts[1] in _PY_RANDOM_FNS:
+        return _df.TaintSource("global-rng", f"{dotted}() (global "
+                               "generator)", path, call.lineno)
+    if len(parts) >= 3 and parts[-2] == "random" \
+            and parts[-1] in _NP_RANDOM_FNS:
+        return _df.TaintSource("global-rng", f"{dotted}() (global "
+                               "RandomState)", path, call.lineno)
+    if name == "default_rng" and not call.args and not call.keywords:
+        return _df.TaintSource("global-rng", "default_rng() without a "
+                               "seed", path, call.lineno)
+    return None
+
+
+def _taint_sinks() -> Dict[str, List["_df.SinkSpec"]]:
+    """The sink registry, grouped by last-segment call name.
+
+    Distinctive names match bare (unresolved) calls too; generic names
+    (``put``, ``get``, ``key``, ``submit``, ``pop``) sink only when the
+    call RESOLVES to the real target (qname suffix) — resolve-or-skip.
+    ``decision=True`` sinks additionally fire when reached under a
+    branch whose condition is tainted.
+    """
+    S = _df.SinkSpec
+    specs = [
+        # scheduler admission / victim decisions
+        S("admission_order", "scheduler-decision", decision=True),
+        S("pop_first_fit", "scheduler-decision", decision=True),
+        S("select_victim", "scheduler-decision", decision=True),
+        S("submit", "scheduler-decision",
+          qname_suffix=":SlotScheduler.submit", decision=True),
+        S("resubmit", "scheduler-decision",
+          qname_suffix=":SlotScheduler.resubmit", decision=True),
+        S("pop", "scheduler-decision",
+          qname_suffix=":SlotScheduler.pop", decision=True),
+        S("set_policy", "scheduler-decision",
+          qname_suffix=":SlotScheduler.set_policy", decision=True),
+        S("set_page_policy", "scheduler-decision",
+          qname_suffix=":SlotScheduler.set_page_policy", decision=True),
+        # retune triggers (PR 8 made these step-counted on purpose)
+        S("maybe_retune", "retune-trigger", decision=True),
+        S("should_retune", "retune-trigger", decision=True),
+        # optimizer candidate generation
+        S("lhs", "candidate-generation"),
+        S("lhs_unit", "candidate-generation"),
+        S("random_config", "candidate-generation"),
+        S("Tuner", "candidate-generation",
+          params=frozenset({"seed", "budget"})),
+        # sampling keys
+        S("PRNGKey", "sampling-key"),
+        S("fold_in", "sampling-key"),
+        S("default_rng", "sampling-key"),
+        # cache-key construction
+        S("shape_sig", "cache-key"),
+        S("mesh_sig", "cache-key"),
+        S("fingerprint_sig", "cache-key"),
+        S("key", "cache-key", qname_suffix=":AutotuneCache.key"),
+        S("put", "cache-key",
+          params=frozenset({"kernel", "sig", "dtype", "backend",
+                            "workload", "mesh"}),
+          qname_suffix=":AutotuneCache.put"),
+        S("get", "cache-key",
+          params=frozenset({"kernel", "sig", "dtype", "backend",
+                            "workload", "mesh"}),
+          qname_suffix=":AutotuneCache.get"),
+        S("get_config", "cache-key",
+          params=frozenset({"kernel", "sig", "dtype", "backend",
+                            "workload", "mesh"}),
+          qname_suffix=":AutotuneCache.get_config"),
+        S("put_serve_config", "cache-key",
+          params=frozenset({"sig_dims", "dtype", "backend", "workload",
+                            "mesh"})),
+        S("put_train_config", "cache-key",
+          params=frozenset({"sig_dims", "dtype", "backend"})),
+    ]
+    out: Dict[str, List[_df.SinkSpec]] = {}
+    for s in specs:
+        out.setdefault(s.name, []).append(s)
+    return out
+
+
+_SINKS = _taint_sinks()
+
+# module-level container constructors that make a captured name
+# "mutable module state" for jit-trace-capture
+_MUTABLE_CTORS = frozenset({"list", "dict", "set", "defaultdict",
+                            "OrderedDict", "Counter", "deque"})
+# container-mutating method names (trace-capture mutation evidence and
+# jit-host-effect closure mutation)
+_MUTATOR_METHODS = frozenset({"append", "add", "update", "extend",
+                              "insert", "setdefault", "pop", "popitem",
+                              "remove", "discard", "clear", "write",
+                              "writelines", "appendleft"})
+# cache-file write + mapping-mutator surface for cache-lock-discipline
+_CACHE_MUTATORS = frozenset({"update", "setdefault", "pop", "popitem",
+                             "clear", "__setitem__"})
 
 _DTYPE_BYTES = {
     "float64": 8, "int64": 8, "uint64": 8,
@@ -278,6 +468,19 @@ def _bound_names(fn: ast.FunctionDef) -> set:
     return bound
 
 
+def _fn_own_walk(fn: ast.FunctionDef):
+    """Walk a function's own body, not nested def/class bodies (those
+    are separate trace scopes — resolve-or-skip, never guess)."""
+    stack: List[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
 def _axis_literals(node: ast.AST) -> List[Tuple[str, ast.AST]]:
     """(name, node) for every string literal in an axes argument,
     descending into tuple/list entries; non-literal elements are
@@ -324,12 +527,30 @@ class _FileLinter:
         # only ever *skips* a check, and kernel names are file-unique.
         self.defs: Dict[str, ast.FunctionDef] = {}
         self.assigns: Dict[str, ast.AST] = {}
+        # names bound by imports (module objects / imported symbols):
+        # a receiver rooted at one of these is not a shared instance
+        self.import_names: set = set()
+        # module-level simple assigns only (trace-capture looks at
+        # genuine module state, not last-wins function locals)
+        self.module_assigns: Dict[str, ast.AST] = {}
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                self.module_assigns[stmt.targets[0].id] = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name) \
+                    and stmt.value is not None:
+                self.module_assigns[stmt.target.id] = stmt.value
         for node in ast.walk(tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 self.defs[node.name] = node
             elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
                     and isinstance(node.targets[0], ast.Name):
                 self.assigns[node.targets[0].id] = node.value
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                self.import_names.update(
+                    (alias.asname or alias.name).split(".")[0]
+                    for alias in node.names)
 
     # -- plumbing ----------------------------------------------------------
     def report(self, rule: str, node: ast.AST, message: str) -> None:
@@ -348,6 +569,8 @@ class _FileLinter:
         self._check_alloc_discipline()
         self._check_mesh_closure()
         self._check_constrain_axes()
+        self._check_trace_capture()
+        self._check_host_effects()
         self.findings.sort(key=lambda f: (f.line, f.col, f.rule))
         return self.findings
 
@@ -688,6 +911,192 @@ class _FileLinter:
                             "every preset would drop it and the "
                             "dimension silently replicates")
 
+    # -- trace-capture / host-effect rules (PR 10) ------------------------
+    def _traced_fns(self):
+        """Every function whose body runs under trace: resolved jit
+        targets plus resolved pallas kernels.  Deduplicated, in source
+        order for deterministic reporting."""
+        seen: Dict[int, ast.FunctionDef] = {}
+        for fn, _statics, _site in self._jit_sites():
+            seen.setdefault(id(fn), fn)
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and _last(node.func) == "pallas_call" and node.args:
+                resolved = self._resolve_kernel(node.args[0])
+                if resolved is not None:
+                    seen.setdefault(id(resolved[0]), resolved[0])
+        return sorted(seen.values(), key=lambda f: (f.lineno, f.name))
+
+    def _mutation_sites(self, name: str) -> List[ast.AST]:
+        """Statements anywhere in the file that mutate ``name`` in
+        place (mutator-method call, subscript store/del, augmented
+        subscript assign) — the evidence that a captured module
+        container is live state, not a constant table."""
+        out: List[ast.AST] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATOR_METHODS \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == name:
+                out.append(node)
+            elif isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+                targets = node.targets if isinstance(node, (ast.Assign,
+                                                            ast.Delete)) \
+                    else [node.target]
+                for tgt in targets:
+                    if isinstance(tgt, ast.Subscript) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == name:
+                        out.append(node)
+        return out
+
+    def _is_plain_jax_jit(self, func: ast.AST) -> bool:
+        """The callee is jax.jit itself — not a local alias that
+        resolves elsewhere (resolve-or-skip: ``jit = jax.jit if ... else
+        self._jit_mesh_keyed`` is skipped, never guessed)."""
+        dotted = _dotted(func)
+        if dotted == "jax.jit":
+            return True
+        if isinstance(func, ast.Name) and func.id == "jit":
+            # bare `jit`: only when nothing in the file rebinds it
+            # (a from-import leaves no assignment)
+            return func.id not in self.assigns and func.id not in self.defs
+        return False
+
+    def _file_has_mesh_context(self) -> bool:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and _last(node.func) in (_MESH_CTORS | {"axis_rules"}):
+                return True
+        return False
+
+    def _check_trace_capture(self) -> None:
+        # (a) captured mutable module state / ambient config objects
+        for fn in self._traced_fns():
+            bound = _bound_names(fn)
+            flagged: set = set()
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id not in bound
+                        and node.id not in flagged):
+                    continue
+                val = self.module_assigns.get(node.id)
+                if val is None:
+                    continue
+                mutable = isinstance(val, (ast.List, ast.Dict, ast.Set,
+                                           ast.ListComp, ast.DictComp,
+                                           ast.SetComp)) \
+                    or (isinstance(val, ast.Call)
+                        and _last(val.func) in _MUTABLE_CTORS)
+                if mutable and self._mutation_sites(node.id):
+                    flagged.add(node.id)
+                    self.report(
+                        "jit-trace-capture", node,
+                        f"jitted {fn.name}() closes over {node.id!r}, "
+                        "mutable module state that this module mutates "
+                        "elsewhere; the traced value is frozen at "
+                        "trace time — pass it as an argument")
+                elif isinstance(val, ast.Call) \
+                        and (_last(val.func) or "").endswith("Config"):
+                    flagged.add(node.id)
+                    self.report(
+                        "jit-trace-capture", node,
+                        f"jitted {fn.name}() closes over {node.id!r}, "
+                        f"an ambient {_last(val.func)}(...) built at "
+                        "module scope; config changes never retrace — "
+                        "pass the fields you need as arguments")
+        # (b) the PR 9 footgun: jitting a bound method of a shared
+        # object in a file that builds meshes.  Bound methods of one
+        # object hash equal, so two engines over different meshes share
+        # one jaxpr cache entry — the first mesh wins silently.
+        if not self._file_has_mesh_context():
+            return
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._is_plain_jax_jit(node.func)
+                    and node.args
+                    and isinstance(node.args[0], ast.Attribute)):
+                continue
+            recv = node.args[0].value
+            # `self._meth` is per-instance (the accepted pattern);
+            # `self.model._meth` / `model._meth` binds a *shared* object
+            if isinstance(recv, ast.Name) and recv.id in ("self", "cls"):
+                continue
+            segs = _segments(recv)
+            if segs and segs[-1] in self.import_names:
+                continue  # module function, not a bound method
+            self.report(
+                "jit-trace-capture", node,
+                f"jax.jit({_dotted(node.args[0]) or 'bound method'}) "
+                "jits a bound method of a shared object while this "
+                "module builds meshes: bound methods hash equal across "
+                "instances, so jaxprs traced under one mesh are "
+                "silently reused under another — wrap in a fresh "
+                "per-instance closure (see engine._jit_mesh_keyed)")
+
+    def _check_host_effects(self) -> None:
+        for fn in self._traced_fns():
+            bound = _bound_names(fn)
+            for node in _fn_own_walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = node.func
+                    if isinstance(callee, ast.Name) \
+                            and callee.id == "print":
+                        self.report(
+                            "jit-host-effect", node,
+                            f"print() inside traced {fn.name}() runs "
+                            "once at trace time, then never again — "
+                            "use jax.debug.print / pl.debug_print")
+                    elif isinstance(callee, ast.Name) \
+                            and callee.id == "open":
+                        self.report(
+                            "jit-host-effect", node,
+                            f"open() inside traced {fn.name}() is a "
+                            "host IO effect executed only at trace "
+                            "time")
+                    elif _dotted(callee) in ("sys.stdout.write",
+                                             "sys.stderr.write"):
+                        self.report(
+                            "jit-host-effect", node,
+                            f"stdout/stderr write inside traced "
+                            f"{fn.name}() happens only at trace time")
+                    elif isinstance(callee, ast.Attribute) \
+                            and callee.attr in _MUTATOR_METHODS \
+                            and isinstance(callee.value, ast.Name) \
+                            and callee.value.id not in bound:
+                        self.report(
+                            "jit-host-effect", node,
+                            f"traced {fn.name}() mutates closed-over "
+                            f"{callee.value.id!r} "
+                            f"(.{callee.attr}(...)): the mutation "
+                            "happens once at trace time, not per call")
+                elif isinstance(node, ast.Global):
+                    stored = {n.id for n in ast.walk(fn)
+                              if isinstance(n, ast.Name)
+                              and isinstance(n.ctx, (ast.Store, ast.Del))}
+                    for gname in node.names:
+                        if gname in stored:
+                            self.report(
+                                "jit-host-effect", node,
+                                f"traced {fn.name}() rebinds global "
+                                f"{gname!r}: the rebind executes at "
+                                "trace time only")
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = node.targets \
+                        if isinstance(node, ast.Assign) else [node.target]
+                    for tgt in targets:
+                        if isinstance(tgt, ast.Subscript) \
+                                and isinstance(tgt.value, ast.Name) \
+                                and tgt.value.id not in bound:
+                            self.report(
+                                "jit-host-effect", node,
+                                f"traced {fn.name}() stores into "
+                                f"closed-over {tgt.value.id!r}[...]: a "
+                                "host-side container mutation frozen "
+                                "at trace time")
+
     # -- allocator rule ----------------------------------------------------
     @staticmethod
     def _is_alloc_receiver(func: ast.Attribute) -> bool:
@@ -771,18 +1180,235 @@ class _FileLinter:
 
 
 # ---------------------------------------------------------------------------
+# project-level passes (determinism-taint, cache-lock-discipline)
+# ---------------------------------------------------------------------------
+def _project_findings(paths: Sequence[str]) -> List[Tuple[str, str, int,
+                                                          int, str]]:
+    """Raw (rule, path, line, col, message) tuples from the
+    interprocedural passes over one fileset.  Pragma filtering is the
+    caller's job (it owns the per-file pragma maps)."""
+    proj = _df.build_project(paths)
+    res = _df.Resolver(proj)
+    out: List[Tuple[str, str, int, int, str]] = []
+    taint = _df.TaintAnalysis(proj, res, _classify_taint_source, _SINKS,
+                              _TAINT_BOUNDARIES)
+    for tf in taint.run():
+        out.append(("determinism-taint", tf.path, tf.line, tf.col,
+                    tf.message))
+    out.extend(_lock_findings(proj, res))
+    return out
+
+
+def _expr_mentions_path(expr: ast.AST, derived: set) -> bool:
+    """Does ``expr`` reference ``self.path`` or a name derived from it?"""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and n.attr == "path" \
+                and isinstance(n.value, ast.Name) and n.value.id == "self":
+            return True
+        if isinstance(n, ast.Name) and n.id in derived:
+            return True
+    return False
+
+
+def _path_derived_names(fn: ast.AST) -> set:
+    """Local names assigned from expressions involving ``self.path``
+    (transitively, two rounds cover every real chain)."""
+    derived: set = set()
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and _expr_mentions_path(node.value, derived):
+                derived.add(node.targets[0].id)
+    return derived
+
+
+def _scan_lock_method(ci: "_df.ClassInfo", fi: "_df.FunctionInfo"):
+    """(writes, calls) for one method of a lock-owning class.
+
+    writes: (node, description, lexically_locked)
+    calls:  (same-class callee name, lexically_locked, node)
+    """
+    derived = _path_derived_names(fi.node)
+    writes: List[Tuple[ast.AST, str, bool]] = []
+    calls: List[Tuple[str, bool, ast.AST]] = []
+
+    def is_lock_with(stmt: ast.AST) -> bool:
+        return isinstance(stmt, (ast.With, ast.AsyncWith)) and any(
+            isinstance(it.context_expr, ast.Call)
+            and isinstance(it.context_expr.func, ast.Attribute)
+            and it.context_expr.func.attr == "_file_lock"
+            for it in stmt.items)
+
+    def classify_expr(node: ast.AST, locked: bool) -> None:
+        if not isinstance(node, ast.Call):
+            return
+        fname = _last(node.func)
+        dotted = _dotted(node.func)
+        if isinstance(node.func, ast.Name) and fname == "open" \
+                and node.args:
+            mode = "r"
+            if len(node.args) > 1 and isinstance(node.args[1], ast.Constant):
+                mode = str(node.args[1].value)
+            for kw in node.keywords:
+                if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+                    mode = str(kw.value.value)
+            if any(c in mode for c in "wax+") \
+                    and _expr_mentions_path(node.args[0], derived):
+                writes.append((node, "cache-file open for writing",
+                               locked))
+        elif dotted in ("os.replace", "os.rename") and any(
+                _expr_mentions_path(a, derived) for a in node.args):
+            writes.append((node, f"{dotted}() onto the cache file",
+                           locked))
+        elif fname == "write_text" \
+                and isinstance(node.func, ast.Attribute) \
+                and _expr_mentions_path(node.func.value, derived):
+            writes.append((node, "cache-file write_text()", locked))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _CACHE_MUTATORS \
+                and isinstance(node.func.value, ast.Attribute) \
+                and isinstance(node.func.value.value, ast.Name) \
+                and node.func.value.value.id == "self":
+            writes.append((node, f"self.{node.func.value.attr}"
+                           f".{node.func.attr}(...) state mutation",
+                           locked))
+        elif isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "self" \
+                and node.func.attr in ci.methods:
+            calls.append((node.func.attr, locked, node))
+
+    def visit(stmts: Sequence[ast.AST], locked: bool) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if is_lock_with(stmt):
+                for it in stmt.items:
+                    classify_expr(it.context_expr, locked)
+                visit(stmt.body, True)
+                continue
+            # statement-level mutation targets: self.<attr>[...] = / del
+            targets: List[ast.AST] = []
+            if isinstance(stmt, ast.Assign):
+                targets = list(stmt.targets)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            elif isinstance(stmt, ast.Delete):
+                targets = list(stmt.targets)
+            for tgt in targets:
+                if isinstance(tgt, ast.Subscript) \
+                        and isinstance(tgt.value, ast.Attribute) \
+                        and isinstance(tgt.value.value, ast.Name) \
+                        and tgt.value.value.id == "self":
+                    writes.append((stmt, f"self.{tgt.value.attr}[...] "
+                                   "store", locked))
+            for node in _FileLinter._own_expr_nodes(stmt):
+                classify_expr(node, locked)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub:
+                    visit(sub, locked)
+            for h in getattr(stmt, "handlers", []) or []:
+                visit(h.body, locked)
+
+    visit(fi.node.body, False)
+    return writes, calls
+
+
+def _lock_findings(proj: "_df.Project", res: "_df.Resolver"
+                   ) -> List[Tuple[str, str, int, int, str]]:
+    """cache-lock-discipline: every cache write must be dominated by
+    the sidecar flock, directly or through exclusively-locked callers."""
+    out: List[Tuple[str, str, int, int, str]] = []
+    for mod in proj.sorted_modules():
+        for cname in sorted(mod.classes):
+            ci = mod.classes[cname]
+            if "_file_lock" not in ci.methods:
+                continue
+            info = {m: _scan_lock_method(ci, ci.methods[m])
+                    for m in sorted(ci.methods)}
+            callers: Dict[str, List[Tuple[str, bool]]] = {
+                m: [] for m in info}
+            for m, (_w, calls) in info.items():
+                for callee, locked, _site in calls:
+                    if callee in callers:
+                        callers[callee].append((m, locked))
+            # greatest fixpoint: m is "externally locked" iff it has at
+            # least one resolved call site and every one holds the lock
+            # (lexically, or because the caller is externally locked)
+            eff = {m: bool(callers[m]) for m in info}
+            changed = True
+            while changed:
+                changed = False
+                for m in info:
+                    if eff[m] and not all(
+                            locked or eff.get(c, False)
+                            for c, locked in callers[m]):
+                        eff[m] = False
+                        changed = True
+            for m in sorted(info):
+                if m == "_file_lock":
+                    continue  # the lock implementation itself
+                writes, _calls = info[m]
+                for node, desc, locked in writes:
+                    if locked or eff[m]:
+                        continue
+                    bad = sorted({c for c, lk in callers[m]
+                                  if not (lk or eff.get(c, False))})
+                    via = (f"reachable unlocked via "
+                           f"{', '.join(c + '()' for c in bad)}"
+                           if bad else f"{m}() is an unlocked entry "
+                           "point")
+                    out.append((
+                        "cache-lock-discipline", ci.module.path,
+                        node.lineno, getattr(node, "col_offset", 0),
+                        f"{desc} in {ci.name}.{m}() outside `with "
+                        f"self._file_lock():` — {via}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # file discovery + CLI
 # ---------------------------------------------------------------------------
+def _lint_fileset(files: Sequence[Path]) -> List[Finding]:
+    """Per-file rules + interprocedural passes over one fileset, with
+    pragma filtering applied uniformly."""
+    findings: List[Finding] = []
+    pragma_maps: Dict[str, Dict[int, Optional[FrozenSet[str]]]] = {}
+    parsed_paths: List[str] = []
+    for f in files:
+        path = str(f)
+        source = Path(f).read_text(encoding="utf-8")
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as exc:
+            findings.append(Finding(
+                rule="syntax-error", severity="error", path=path,
+                line=exc.lineno or 1, col=exc.offset or 0,
+                message=f"file does not parse: {exc.msg}"))
+            continue
+        pragma_maps[path] = _pragmas(source)
+        parsed_paths.append(path)
+        findings.extend(_FileLinter(path, tree, source).run())
+    if parsed_paths:
+        for rule, path, line, col, msg in _project_findings(parsed_paths):
+            suppressed = pragma_maps.get(path, {}).get(line, frozenset())
+            if suppressed is None or rule in suppressed:
+                continue
+            findings.append(Finding(rule=rule, severity=RULES[rule][0],
+                                    path=path, line=line, col=col,
+                                    message=msg))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule,
+                                 f.message))
+    return findings
+
+
 def lint_file(path: Path) -> List[Finding]:
-    source = path.read_text(encoding="utf-8")
-    try:
-        tree = ast.parse(source, filename=str(path))
-    except SyntaxError as exc:
-        return [Finding(rule="syntax-error", severity="error",
-                        path=str(path), line=exc.lineno or 1,
-                        col=exc.offset or 0,
-                        message=f"file does not parse: {exc.msg}")]
-    return _FileLinter(str(path), tree, source).run()
+    """Lint one file: per-file rules plus the interprocedural passes
+    run over the single-module project (intra-file chains resolve)."""
+    return _lint_fileset([Path(path)])
 
 
 def _discover(paths: Sequence[str]) -> List[Path]:
@@ -800,11 +1426,7 @@ def _discover(paths: Sequence[str]) -> List[Path]:
 
 def lint_paths(paths: Sequence[str]) -> Tuple[List[Finding], int]:
     files = _discover(paths)
-    findings: List[Finding] = []
-    for f in files:
-        findings.extend(lint_file(f))
-    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
-    return findings, len(files)
+    return _lint_fileset(files), len(files)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -819,6 +1441,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "survives pragmas")
     ap.add_argument("--compact", action="store_true",
                     help="single-line JSON (default pretty-prints)")
+    ap.add_argument("--format", choices=("json", "github"),
+                    default="json",
+                    help="output format: machine-readable JSON "
+                         "(default) or GitHub workflow-command "
+                         "annotations (exit codes unchanged)")
     args = ap.parse_args(argv)
 
     paths = args.paths
@@ -829,16 +1456,30 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     findings, n_files = lint_paths(paths)
     n_err = sum(1 for f in findings if f.severity == "error")
     n_warn = len(findings) - n_err
-    doc = {
-        "version": 1,
-        "files_checked": n_files,
-        "n_errors": n_err,
-        "n_warnings": n_warn,
-        "findings": [f.to_dict() for f in findings],
-    }
-    json.dump(doc, sys.stdout,
-              indent=None if args.compact else 2)
-    sys.stdout.write("\n")
+    if args.format == "github":
+        # workflow commands: one annotation per finding, a notice with
+        # the totals; still deterministic, still exit 1 under --check
+        for f in findings:
+            kind = "error" if f.severity == "error" else "warning"
+            msg = (f.message.replace("%", "%25")
+                   .replace("\r", "%0D").replace("\n", "%0A"))
+            sys.stdout.write(
+                f"::{kind} file={f.path},line={f.line},col={f.col},"
+                f"title={f.rule}::{msg}\n")
+        sys.stdout.write(
+            f"::notice title=lint::checked {n_files} files: "
+            f"{n_err} errors, {n_warn} warnings\n")
+    else:
+        doc = {
+            "version": 1,
+            "files_checked": n_files,
+            "n_errors": n_err,
+            "n_warnings": n_warn,
+            "findings": [f.to_dict() for f in findings],
+        }
+        json.dump(doc, sys.stdout,
+                  indent=None if args.compact else 2, sort_keys=True)
+        sys.stdout.write("\n")
     if args.check and findings:
         return 1
     return 0

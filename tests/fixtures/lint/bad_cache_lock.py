@@ -1,0 +1,67 @@
+"""Planted cache lock-discipline hazards (parsed, never executed).
+
+``LeakyCache`` mirrors ``repro.autotune.cache.AutotuneCache``'s shape
+but drops the flock dominance: its write path is reachable through
+``put()`` without the sidecar lock — the cross-process race PR 10's
+interprocedural dominance check exists to catch.
+"""
+import contextlib
+import json
+import os
+
+
+class LeakyCache:
+    def __init__(self, path):
+        self.path = path
+        self._data = {}
+
+    @contextlib.contextmanager
+    def _file_lock(self):
+        yield  # the real one flocks a sidecar; shape is what matters
+
+    def _write(self):
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:          # BAD: reachable unlocked
+            json.dump(self._data, fh)
+        os.replace(tmp, self.path)          # BAD: reachable unlocked
+
+    def put(self, key, value):
+        self._data[key] = value             # BAD: mutation, no lock
+        self._write()
+
+    def put_locked(self, key, value):
+        with self._file_lock():
+            self._data[key] = value         # OK: under the flock
+            tmp = f"{self.path}.tmp2"
+            with open(tmp, "w") as fh:      # OK: under the flock
+                json.dump(self._data, fh)
+            os.replace(tmp, self.path)      # OK: under the flock
+
+    def get(self, key):
+        return self._data.get(key)          # OK: read path
+
+    def _load(self, raw):
+        self._data = dict(raw)              # OK: rebind, not mutation
+
+
+class DisciplinedCache:
+    """Every write path is lock-dominated — zero findings expected."""
+
+    def __init__(self, path):
+        self.path = path
+        self._data = {}
+
+    @contextlib.contextmanager
+    def _file_lock(self):
+        yield
+
+    def _save(self, delta):
+        with self._file_lock():
+            self._data.update(delta)
+            tmp = f"{self.path}.tmp"
+            with open(tmp, "w") as fh:
+                json.dump(self._data, fh)
+            os.replace(tmp, self.path)
+
+    def put(self, key, value):
+        self._save({key: value})

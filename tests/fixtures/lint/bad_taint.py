@@ -1,0 +1,97 @@
+"""Planted determinism-taint hazards (never executed, only parsed).
+
+Each BAD block leaks a nondeterministic value into a decision sink;
+each OK block is the matching accepted pattern and must stay clean —
+this file doubles as the precision spec for the taint engine.
+"""
+import time
+import os
+
+import numpy as np
+
+
+class PerfMetric:  # stand-in for repro.core metric records
+    def __init__(self, value=0.0, wall_s=0.0):
+        self.value = value
+        self.wall_s = wall_s
+
+
+# --- BAD: wall clock perturbs a victim decision ------------------------
+def tainted_victim(scheduler, running):
+    jitter = time.time()
+    ranked = [(r, jitter) for r in running]
+    return scheduler.select_victim(ranked)
+
+
+# --- BAD: wall clock seeds a sampling key ------------------------------
+def tainted_key(jax_random):
+    seed = int(time.time() * 1e6)
+    return jax_random.PRNGKey(seed)
+
+
+# --- BAD: interprocedural — timer -> helper -> helper -> candidate gen -
+def _jitter():
+    return time.perf_counter()
+
+
+def _derive(x):
+    return int(x * 1e3)
+
+
+def bad_candidates(space):
+    rng = np.random.default_rng(_derive(_jitter()))
+    return lhs(space, 8, rng)
+
+
+def lhs(space, m, rng):
+    return [space for _ in range(m)]
+
+
+# --- BAD: wall clock controls a retune trigger (decision branch) -------
+def tainted_retune(retuner, window, t0, steps):
+    if time.perf_counter() - t0 > 30.0:
+        return retuner.maybe_retune(window, steps)
+    return None
+
+
+# --- BAD: set iteration order reaches a cache-key signature ------------
+def set_order_sig(pages):
+    live = {p for p in pages}
+    first = list(live)
+    return mesh_sig(first[0])
+
+
+def mesh_sig(mesh):
+    return str(mesh)
+
+
+# --- BAD: os entropy into the global-rng sink --------------------------
+def entropy_seed():
+    return np.random.default_rng(int.from_bytes(os.urandom(4), "little"))
+
+
+# --- OK: timers accumulating into a metric record (engine.py pattern) --
+def timed_metrics(run_once):
+    t0 = time.time()
+    run_once()
+    best = time.perf_counter() - t0
+    return PerfMetric(value=best, wall_s=time.time() - t0)
+
+
+# --- OK: seeded generator feeding candidate generation -----------------
+def seeded_candidates(space):
+    rng = np.random.default_rng(0)
+    return lhs(space, 8, rng)
+
+
+# --- OK: sorted() launders set iteration order -------------------------
+def sorted_sig(pages):
+    live = {p for p in pages}
+    return mesh_sig(sorted(live)[0])
+
+
+# --- OK: a step-counted retune trigger (PR 8's fix shape) --------------
+def step_counted_retune(retuner, window, steps):
+    if steps % 512 == 0:
+        return retuner.maybe_retune(window, steps)
+    return None

@@ -1,0 +1,80 @@
+"""Planted jit trace-capture / host-effect hazards (parsed, not run).
+
+Includes the PR 9 regression shape: a bound method of a shared model
+jitted in a module that builds meshes (the pre-``_jit_mesh_keyed``
+pattern) — bound methods of one object hash equal, so two engines over
+different meshes silently share one jaxpr cache entry.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh
+
+_SCRATCH = {"scale": 1.0}   # mutable module state (mutated below)
+STEP_LOG = []               # mutable module state (mutated under trace)
+VMEM_LIMIT = 16 * 2 ** 20   # immutable module constant: fine to close over
+
+
+def set_scale(v):
+    _SCRATCH["scale"] = float(v)
+
+
+# --- BAD: jitted function reads live mutable module state --------------
+@jax.jit
+def captures_mutable(x):
+    return x * _SCRATCH["scale"]
+
+
+# --- BAD: host effects under trace (print + closure mutation) ----------
+@jax.jit
+def logs_under_trace(x):
+    print("tracing", x.shape)
+    STEP_LOG.append(int(x.shape[0]))
+    return x + 1
+
+
+# --- OK: immutable constant capture + jax.debug.print ------------------
+@jax.jit
+def reads_constant(x):
+    jax.debug.print("shape {s}", s=x.shape)
+    return x * (VMEM_LIMIT // VMEM_LIMIT)
+
+
+class SharedModel:
+    def decode_step(self, tokens):
+        return tokens + 1
+
+
+class LeakyEngine:
+    """The PR 9 bug shape: pre-``_jit_mesh_keyed`` engines."""
+
+    def __init__(self, model, data, tp):
+        self.mesh = make_mesh(data, tp)        # ambient mesh context
+        self.model = model
+        # BAD: bound method of the *shared* model — jaxprs traced under
+        # this engine's mesh are reused by every other engine
+        self._decode = jax.jit(model.decode_step)
+
+    def _greedy(self, logits):
+        return jnp.argmax(logits, axis=-1)
+
+    def attach(self):
+        # OK: bound method of self — per-instance, the accepted pattern
+        self._argmax = jax.jit(self._greedy)
+
+
+class FixedEngine:
+    """The PR 9 fix shape: a fresh per-engine closure keys the cache."""
+
+    def __init__(self, model, data, tp):
+        self.mesh = make_mesh(data, tp)
+        self._decode = self._jit_keyed(model.decode_step)
+
+    def _jit_keyed(self, fn):
+        @functools.wraps(fn)
+        def keyed(*args, **kwargs):   # identity-hashed per engine: OK
+            return fn(*args, **kwargs)
+
+        return jax.jit(keyed)

@@ -32,3 +32,36 @@ def suppressed_mesh_closure(x):
 
 def suppressed_axis(x):
     return constrain(x, "heds")  # noqa: F821  # lint: ignore[constrain-unknown-axis]
+
+
+# --- PR 10 rule families, each suppressed on its finding line ----------
+import time  # noqa: E402
+
+_LIVE_STATE = {"scale": 1.0}
+
+
+def bump_scale():
+    _LIVE_STATE["scale"] = 2.0
+
+
+@jax.jit
+def suppressed_capture(x):
+    print("traced", x)  # lint: ignore[jit-host-effect]
+    return x * _LIVE_STATE["scale"]  # lint: ignore[jit-trace-capture]
+
+
+def suppressed_taint(scheduler, rows):
+    jitter = time.time()
+    return scheduler.select_victim([(r, jitter) for r in rows])  # lint: ignore[determinism-taint]
+
+
+class SuppressedCache:
+    def __init__(self, path):
+        self.path = path
+        self._data = {}
+
+    def _file_lock(self):
+        raise NotImplementedError
+
+    def put(self, key, value):
+        self._data[key] = value  # lint: ignore[cache-lock-discipline]

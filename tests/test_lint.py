@@ -16,6 +16,7 @@ Three layers of pinning:
 """
 import ast
 import json
+import re
 import subprocess
 import sys
 from pathlib import Path
@@ -143,3 +144,91 @@ def test_syntax_error_is_reported(tmp_path):
     bad.write_text("def oops(:\n", encoding="utf-8")
     findings = L.lint_file(bad)
     assert [f.rule for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# PR 10: interprocedural dataflow rule families
+# ---------------------------------------------------------------------------
+def test_fixture_taint_findings():
+    """Every planted leak fires determinism-taint at its line, and the
+    OK blocks (timer→metric, seeded rng, sorted() laundering, the PR 8
+    step-counted retune) stay silent."""
+    findings = L.lint_file(FIXTURES / "bad_taint.py")
+    assert {f.rule for f in findings} == {"determinism-taint"}
+    assert sorted(f.line for f in findings) == [23, 29, 42, 43, 53, 61, 70]
+    # the OK section starts at the timed_metrics block — nothing after it
+    assert max(f.line for f in findings) < 73
+
+
+def test_fixture_taint_messages_name_source_and_sink():
+    by_line = {f.line: f.message for f in
+               L.lint_file(FIXTURES / "bad_taint.py")}
+    assert "select_victim" in by_line[23]
+    assert "time.time" in by_line[23]
+    assert "PRNGKey" in by_line[29]
+    # the interprocedural chain names the intermediate helpers
+    assert "default_rng" in by_line[42] or "_derive" in by_line[42]
+    assert "set" in by_line[61].lower()  # set-iteration-order source
+
+
+def test_fixture_trace_capture_findings():
+    findings = L.lint_file(FIXTURES / "bad_trace_capture.py")
+    got = sorted((f.line, f.rule) for f in findings)
+    assert got == [(27, "jit-trace-capture"),
+                   (33, "jit-host-effect"),
+                   (34, "jit-host-effect"),
+                   (34, "jit-trace-capture"),
+                   (58, "jit-trace-capture")]
+    # line 58 is the PR 9 regression shape: a bound method of a shared
+    # model jitted under an ambient mesh — the message must point at it
+    pr9 = next(f for f in findings if f.line == 58)
+    assert "bound method" in pr9.message
+    assert "decode_step" in pr9.message
+
+
+def test_fixture_cache_lock_findings():
+    findings = L.lint_file(FIXTURES / "bad_cache_lock.py")
+    assert {f.rule for f in findings} == {"cache-lock-discipline"}
+    assert sorted(f.line for f in findings) == [24, 26, 29]
+    # the interprocedural part: _write's findings name the unlocked
+    # entry point that reaches them
+    assert all("put()" in f.message for f in findings)
+
+
+def test_output_is_byte_identical_across_runs():
+    """Determinism contract: two independent lints of the same tree
+    produce byte-identical JSON (sorted findings, sorted keys)."""
+    def run_once():
+        findings, n = L.lint_paths([str(FIXTURES)])
+        return json.dumps(
+            {"files_checked": n,
+             "findings": [f.to_dict() for f in findings]},
+            sort_keys=True)
+
+    assert run_once() == run_once()
+
+
+def test_cli_github_format(tmp_path):
+    env_src = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--check",
+         "--format", "github", str(FIXTURES)],
+        capture_output=True, text=True, cwd=str(REPO),
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1  # exit codes unchanged by the format
+    lines = proc.stdout.strip().splitlines()
+    ann = [ln for ln in lines if ln.startswith("::error")
+           or ln.startswith("::warning")]
+    assert ann, proc.stdout
+    for ln in ann:
+        assert re.match(
+            r"^::(error|warning) file=[^,]+,line=\d+,col=\d+,"
+            r"title=[a-z-]+::", ln), ln
+    assert lines[-1].startswith("::notice title=lint::checked ")
+    # byte-identical across runs, like the JSON format
+    again = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--check",
+         "--format", "github", str(FIXTURES)],
+        capture_output=True, text=True, cwd=str(REPO),
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin"})
+    assert again.stdout == proc.stdout
